@@ -1,0 +1,25 @@
+"""Shared benchmark utilities."""
+
+import time
+
+import jax
+import numpy as np
+
+
+def wall(fn, *args, repeat=1, **kwargs):
+    """Wall-time a jitted call (after one warmup), seconds."""
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        ts.append(time.perf_counter() - t0)
+    return min(ts), out
+
+
+def emit(rows):
+    """Print the harness CSV: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")

@@ -1,0 +1,49 @@
+"""Fig. 3 analog: histogram of the planning-step size relative to the
+Newton step, mu/mu* - 1.
+
+Paper's finding: the distribution is strongly asymmetric — most planning
+steps slightly overshoot the Newton step, a few overshoot by orders of
+magnitude, almost none shrink or reverse."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qp as qp_mod
+from repro.core.solver import SolverConfig, solve
+from repro.svm.data import make_dataset
+
+CASES = [("xor", 600, 100.0, 0.5), ("chessboard", 600, 10_000.0, 0.5),
+         ("ring", 600, 10.0, 1.0)]
+
+BUCKETS = [(-np.inf, -1.0, "reversed"), (-1.0, -0.1, "shrunk"),
+           (-0.1, 0.1, "near-newton"), (0.1, 1.0, "overshoot<2x"),
+           (1.0, 10.0, "overshoot<11x"), (10.0, np.inf, "overshoot>11x")]
+
+
+def run():
+    rows = []
+    for name, n, C, gamma in CASES:
+        X, y, _, _ = make_dataset(name, n, seed=0)
+        kern = qp_mod.make_rbf(jnp.asarray(X), gamma)
+        cfg = SolverConfig(algorithm="pasmo", eps=1e-3, max_iter=400_000,
+                           record_trace=True, trace_cap=65536)
+        r = solve(kern, jnp.asarray(y), C, cfg)
+        k = int(min(int(r.n_trace), cfg.trace_cap))
+        ratios = np.asarray(r.trace)[:k] - 1.0
+        counts = {}
+        for lo, hi, label in BUCKETS:
+            counts[label] = int(np.sum((ratios > lo) & (ratios <= hi)))
+        frac_over = (counts["overshoot<2x"] + counts["overshoot<11x"]
+                     + counts["overshoot>11x"]) / max(k, 1)
+        frac_shrunk = (counts["reversed"] + counts["shrunk"]) / max(k, 1)
+        detail = ";".join(f"{l}={c}" for l, c in counts.items())
+        rows.append((f"fig3/{name}-{n}", 0.0,
+                     f"planning_steps={k};frac_overshoot={frac_over:.3f};"
+                     f"frac_shrunk={frac_shrunk:.3f};{detail}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,45 @@
+"""Fig. 4 analog: multiple planning-ahead with the N most recent working
+sets.  Paper's finding: N in {2, 3} is comparable to (slightly better
+than) standard PA-SMO; large N slows the solver down."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qp as qp_mod
+from repro.core.solver import SolverConfig, solve
+from repro.svm.data import make_dataset
+
+NS = [1, 2, 3, 5, 10]
+CASES = [("xor", 600, 100.0, 0.5), ("chessboard", 600, 10_000.0, 0.5)]
+
+
+def run():
+    rows = []
+    for name, n, C, gamma in CASES:
+        X, y, _, _ = make_dataset(name, n, seed=0)
+        kern = qp_mod.make_rbf(jnp.asarray(X), gamma)
+        yj = jnp.asarray(y)
+        base_time = None
+        for N in NS:
+            cfg = SolverConfig(algorithm="pasmo", plan_candidates=N,
+                               eps=1e-3, max_iter=400_000)
+            r = solve(kern, yj, C, cfg)
+            jax.block_until_ready(r.alpha)
+            t0 = time.perf_counter()
+            r = solve(kern, yj, C, cfg)
+            jax.block_until_ready(r.alpha)
+            dt = time.perf_counter() - t0
+            if N == 1:
+                base_time = dt
+            rows.append((f"fig4/{name}-{n}/N={N}", dt * 1e6,
+                         f"iters={int(r.iterations)};"
+                         f"rel_time={dt / base_time:.3f};"
+                         f"planning={int(r.n_planning)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,64 @@
+"""Kernel-layer benchmarks: Gram build and fused pass A/B throughput on
+the jnp path (CPU), plus the modeled TPU roofline time for each op."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+HBM_BW = 819e9
+PEAK = 197e12
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    for l, d in [(4096, 64), (16384, 64), (16384, 256)]:
+        X = jnp.asarray(rng.normal(size=(l, d)), jnp.float32)
+        sqn = jnp.sum(X * X, axis=-1)
+        G = jnp.asarray(rng.normal(size=(l,)), jnp.float32)
+        alpha = jnp.zeros((l,), jnp.float32)
+        y = jnp.asarray(np.sign(rng.normal(size=l)), jnp.float32)
+        L = jnp.minimum(0.0, y * 10.0)
+        U = jnp.maximum(0.0, y * 10.0)
+        gamma = jnp.float32(0.5)
+
+        fn = jax.jit(lambda: ops.rbf_row_wss(
+            X, sqn, G, alpha, L, U, X[3], alpha[3], L[3], U[3], G[3],
+            jnp.asarray(3, jnp.int32), jnp.asarray(False), gamma,
+            impl="jnp"))
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(10):
+            jax.block_until_ready(fn())
+        us = (time.perf_counter() - t0) / 10 * 1e6
+        # modeled TPU time: pass A reads X + 5 vectors, writes k_i
+        bytes_a = l * d * 4 + 6 * l * 4
+        flops_a = 2 * l * d
+        t_model = max(bytes_a / HBM_BW, flops_a / PEAK) * 1e6
+        rows.append((f"kernels/pass_a/l={l},d={d}", us,
+                     f"tpu_model_us={t_model:.2f};"
+                     f"bytes={bytes_a};flops={flops_a}"))
+
+    for n, d in [(1024, 64), (2048, 256)]:
+        X = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        fn = jax.jit(lambda: ops.gram(X, X, 0.5, impl="jnp"))
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(fn())
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        flops = 2 * n * n * d
+        t_model = max(flops / PEAK, (n * n * 4 + 2 * n * d * 4) / HBM_BW) \
+            * 1e6
+        rows.append((f"kernels/gram/n={n},d={d}", us,
+                     f"tpu_model_us={t_model:.2f};flops={flops}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

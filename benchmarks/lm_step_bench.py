@@ -1,0 +1,60 @@
+"""LM substrate micro-bench on CPU: smoke-scale train and decode step
+latencies for each architecture family (sanity that the full stack runs,
+not a TPU perf claim)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.configs.base import ServeConfig, TrainConfig
+from repro.models import registry
+from repro.train.serve_step import make_serve_step
+from repro.train.train_step import init_state, make_train_step
+
+ARCHS = ["qwen2-0.5b", "mixtral-8x7b", "mamba2-370m", "recurrentgemma-2b",
+         "whisper-tiny", "internvl2-1b"]
+
+TC = TrainConfig(param_dtype="float32", compute_dtype="float32",
+                 accum_dtype="float32", remat="none")
+
+
+def run():
+    rows = []
+    for arch in ARCHS:
+        cfg = get_smoke(arch)
+        state = init_state(jax.random.PRNGKey(0), cfg, TC)
+        step = jax.jit(make_train_step(cfg, TC))
+        batch = registry.demo_batch(cfg, batch=2, seq=32)
+        state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(3):
+            state, m = step(state, batch)
+            jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        rows.append((f"lm/train_step/{arch}", us,
+                     f"loss={float(m['loss']):.3f}"))
+
+        sc = ServeConfig(seq_len=64, batch=2, param_dtype="float32",
+                         compute_dtype="float32", kv_dtype="float32")
+        serve = jax.jit(make_serve_step(cfg, sc))
+        cache = registry.init_cache(cfg, 2, 64, jnp.float32)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        logits, cache = serve(state.params, cache, tok,
+                              jnp.asarray(0, jnp.int32))
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        for t in range(5):
+            logits, cache = serve(state.params, cache, tok,
+                                  jnp.asarray(t + 1, jnp.int32))
+            jax.block_until_ready(logits)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        rows.append((f"lm/decode_step/{arch}", us, "ok"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,48 @@
+"""Emit the roofline table from the dry-run artifacts (one row per
+(arch x shape x mesh) cell).  Run the dry-run first:
+
+    python -m repro.launch.dryrun --mesh single --arch all --shape all
+    python -m repro.launch.dryrun --mesh multi  --arch all --shape all
+"""
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def run():
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        r = json.load(open(f))
+        tag = f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
+        if r.get("skipped"):
+            rows.append((tag, 0.0, f"skipped:{r['skip_reason']}"))
+            continue
+        if not r.get("ok"):
+            rows.append((tag, 0.0, f"FAILED:{r.get('error', '?')[:80]}"))
+            continue
+        if "roofline" not in r:
+            # solver dry-run artifacts carry per-iteration terms instead
+            if "per_iteration" in r:
+                p = r["per_iteration"]
+                rows.append((tag, p["compute_us"],
+                             f"memory_us={p['memory_us']:.3f};"
+                             f"collective_us={p['collective_us']:.3f}"))
+            continue
+        ro = r["roofline"]
+        rows.append((tag, ro["compute_s"] * 1e6,
+                     f"dominant={ro['dominant']};"
+                     f"memory_s={ro['memory_s']:.3e};"
+                     f"collective_s={ro['collective_s']:.3e};"
+                     f"useful_ratio={ro['useful_flops_ratio']:.3f};"
+                     f"frac={ro['roofline_fraction']:.3f}"))
+    if not rows:
+        rows.append(("roofline/none", 0.0, "no artifacts - run the dry-run"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,56 @@
+"""Benchmark runner: one module per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV (stdout).  Select subsets with
+``python -m benchmarks.run --only table2,fig3``.
+"""
+
+import argparse
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # f64 QP solves (paper setting)
+
+from benchmarks.common import emit  # noqa: E402
+
+REGISTRY = [
+    ("table2", "benchmarks.table2_pasmo"),
+    ("fig3", "benchmarks.fig3_stepsizes"),
+    ("fig4", "benchmarks.fig4_multi"),
+    ("ablation", "benchmarks.ablation_wss"),
+    ("solver_micro", "benchmarks.solver_micro"),
+    ("kernels", "benchmarks.kernels_bench"),
+    ("lm_step", "benchmarks.lm_step_bench"),
+    ("roofline", "benchmarks.roofline_table"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: "
+                         + ",".join(k for k, _ in REGISTRY))
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+    failures = 0
+    for key, module in REGISTRY:
+        if only is not None and key not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {key} ({module}) ---", flush=True)
+        try:
+            mod = importlib.import_module(module)
+            emit(mod.run())
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{key}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+        print(f"# {key} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

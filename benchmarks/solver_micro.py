@@ -1,0 +1,82 @@
+"""Solver micro-benchmarks: per-iteration cost of the standard (oracle)
+solver vs the fused two-pass solver, and the batched (vmap) throughput
+mode.  CPU numbers use the jnp kernel path; the Pallas path targets TPU
+(validated in interpret mode by tests)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qp as qp_mod
+from repro.core.solver import SolverConfig, solve, solve_batched
+from repro.core.solver_fused import solve_fused
+from repro.svm.data import xor_gaussians
+
+SIZES = [1024, 4096, 16384]
+
+
+def run():
+    rows = []
+    for n in SIZES:
+        X, y = xor_gaussians(n, seed=0)
+        gamma, C = 0.5, 100.0
+        Xj, yj = jnp.asarray(X), jnp.asarray(y)
+        cfg = SolverConfig(algorithm="pasmo", eps=1e-3, max_iter=30_000)
+
+        kern = qp_mod.make_rbf(Xj, gamma)
+        r = solve(kern, yj, C, cfg)
+        jax.block_until_ready(r.alpha)
+        t0 = time.perf_counter()
+        r = solve(kern, yj, C, cfg)
+        jax.block_until_ready(r.alpha)
+        dt_std = time.perf_counter() - t0
+        us_std = dt_std / max(int(r.iterations), 1) * 1e6
+
+        rf = solve_fused(Xj, yj, C, gamma, cfg, impl="jnp")
+        jax.block_until_ready(rf.alpha)
+        t0 = time.perf_counter()
+        rf = solve_fused(Xj, yj, C, gamma, cfg, impl="jnp")
+        jax.block_until_ready(rf.alpha)
+        dt_fused = time.perf_counter() - t0
+        us_fused = dt_fused / max(int(rf.iterations), 1) * 1e6
+
+        rows.append((f"solver_micro/standard/l={n}", us_std,
+                     f"iters={int(r.iterations)}"))
+        rows.append((f"solver_micro/fused/l={n}", us_fused,
+                     f"iters={int(rf.iterations)};"
+                     f"speedup={us_std / us_fused:.2f}x"))
+
+    # batched throughput: 8 QPs in one vmapped while_loop
+    n, B = 512, 8
+    Ks, ys = [], []
+    for s in range(B):
+        X, y = xor_gaussians(n, seed=s)
+        sq = np.sum(X * X, 1)
+        Ks.append(np.exp(-0.5 * (sq[:, None] + sq[None, :] - 2 * X @ X.T)))
+        ys.append(y)
+    Ks = jnp.asarray(np.stack(Ks))
+    ys = jnp.asarray(np.stack(ys))
+    cfg = SolverConfig(algorithm="pasmo", eps=1e-3, max_iter=30_000)
+    r = solve_batched(Ks, ys, 100.0, cfg)
+    jax.block_until_ready(r.alpha)
+    t0 = time.perf_counter()
+    r = solve_batched(Ks, ys, 100.0, cfg)
+    jax.block_until_ready(r.alpha)
+    dt_b = time.perf_counter() - t0
+    # sequential baseline
+    t0 = time.perf_counter()
+    for s in range(B):
+        rs = solve(qp_mod.PrecomputedKernel(Ks[s]), ys[s], 100.0, cfg)
+        jax.block_until_ready(rs.alpha)
+    dt_seq = time.perf_counter() - t0
+    rows.append((f"solver_micro/batched/B={B}xl={n}", dt_b * 1e6,
+                 f"seq_time_us={dt_seq * 1e6:.0f};"
+                 f"batch_speedup={dt_seq / dt_b:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

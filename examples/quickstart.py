@@ -1,0 +1,36 @@
+"""Quickstart: train an RBF-SVM with PA-SMO and compare against SMO.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.core.solver import SolverConfig   # noqa: E402
+from repro.svm import make_dataset, predict, train_svm  # noqa: E402
+
+
+def main():
+    X, y, C, gamma = make_dataset("chessboard", 800, seed=0)
+    C = 1000.0  # tame the paper's extreme 1e6 for a quick demo
+    Xtr, ytr, Xte, yte = X[:600], y[:600], X[600:], y[600:]
+
+    for alg in ("smo", "pasmo"):
+        cfg = SolverConfig(algorithm=alg, eps=1e-3, max_iter=500_000)
+        model, res = train_svm(Xtr, ytr, C, gamma, cfg)
+        acc = float(jnp.mean(predict(model, jnp.asarray(Xte)) == yte))
+        print(f"{alg:6s}: iterations={int(res.iterations):7d}  "
+              f"objective={float(res.objective):.4f}  "
+              f"planning_steps={int(res.n_planning):6d}  "
+              f"test_acc={acc:.3f}")
+
+    print("\nPA-SMO reaches the same optimum in fewer iterations — the "
+          "paper's Table 2 effect.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""SVM readout heads on LM features, trained with batched PA-SMO — the
+paper's solver as a first-class feature of the LM stack.
+
+    PYTHONPATH=src python examples/svm_probe_on_lm.py
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.configs import get_smoke                      # noqa: E402
+from repro.core.solver import SolverConfig               # noqa: E402
+from repro.models import registry                        # noqa: E402
+from repro.svm.probes import (extract_features, predict_probe,  # noqa: E402
+                              train_probe)
+
+
+def main():
+    cfg = get_smoke("qwen2-0.5b")
+    params = registry.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(0)
+
+    # three synthetic "domains" distinguished by token-id band
+    n_per, S, k = 24, 32, 3
+    bands = [(0, cfg.vocab // 3), (cfg.vocab // 3, 2 * cfg.vocab // 3),
+             (2 * cfg.vocab // 3, cfg.vocab)]
+    tokens = np.concatenate([
+        rng.integers(lo, hi, size=(n_per, S)) for lo, hi in bands
+    ]).astype(np.int32)
+    labels = np.repeat(np.arange(k), n_per)
+    perm = rng.permutation(len(labels))
+    tokens, labels = tokens[perm], labels[perm]
+    n_tr = 54
+
+    feats = extract_features(params, cfg, {"tokens": jnp.asarray(tokens)})
+    probe = train_probe(feats[:n_tr], jnp.asarray(labels[:n_tr]), k,
+                        C=10.0,
+                        cfg=SolverConfig(algorithm="pasmo", eps=1e-3))
+    pred = np.asarray(predict_probe(probe, feats[n_tr:]))
+    acc = (pred == labels[n_tr:]).mean()
+    print(f"features: {feats.shape}, classes: {k}")
+    print(f"solver iterations per head: "
+          f"{np.asarray(probe.iterations).tolist()}")
+    print(f"held-out accuracy: {acc:.3f}")
+    print("\nThe k one-vs-rest QPs were solved as ONE vmapped PA-SMO "
+          "while_loop (batched solver).")
+
+
+if __name__ == "__main__":
+    main()

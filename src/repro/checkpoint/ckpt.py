@@ -1,0 +1,176 @@
+"""Checkpointing: msgpack + zstd pytree snapshots with elastic restore.
+
+Layout: ``<dir>/step_<N>/state.msgpack.zst`` + ``manifest.json``.  Leaves
+are stored as raw little-endian buffers keyed by their pytree path, so the
+restore side can re-shard into ANY mesh: ``restore_checkpoint`` takes an
+optional (mesh, shardings) and ``jax.device_put``s each leaf under its
+target NamedSharding — elastic scale-up/down is a restore-time
+re-partition, no resharding tool needed (DESIGN.md §7).
+
+``AsyncCheckpointer`` snapshots to host memory synchronously (cheap) and
+writes in a daemon thread so the step loop never blocks on I/O; ``wait()``
+drains pending writes (called before exit and in tests).
+
+A commit marker (``COMMIT``) is written last — torn checkpoints from a
+mid-write failure are ignored by ``latest_step``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "name"):
+            out.append(str(p.name))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "key"):
+            out.append(str(p.key))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _pack_tree(tree) -> bytes:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    blob = {}
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)
+        blob[_path_str(path)] = {
+            "dtype": arr.dtype.str,
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    return msgpack.packb(blob, use_bin_type=True)
+
+
+def _unpack_blob(raw: bytes):
+    blob = msgpack.unpackb(raw, raw=False)
+    return {k: np.frombuffer(v["data"], dtype=np.dtype(v["dtype"]))
+            .reshape(v["shape"]) for k, v in blob.items()}
+
+
+def save_checkpoint(directory: str, step: int, state: Any,
+                    metadata: Optional[dict] = None) -> str:
+    """Synchronous save.  Returns the checkpoint path."""
+    ckpt_dir = os.path.join(directory, f"step_{step:010d}")
+    tmp_dir = ckpt_dir + ".tmp"
+    os.makedirs(tmp_dir, exist_ok=True)
+    packed = _pack_tree(state)
+    comp = zstandard.ZstdCompressor(level=3).compress(packed)
+    with open(os.path.join(tmp_dir, "state.msgpack.zst"), "wb") as f:
+        f.write(comp)
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump({"step": step, "metadata": metadata or {},
+                   "format": "msgpack+zstd/v1"}, f)
+    with open(os.path.join(tmp_dir, "COMMIT"), "w") as f:
+        f.write("ok")
+    if os.path.exists(ckpt_dir):
+        shutil.rmtree(ckpt_dir)
+    os.replace(tmp_dir, ckpt_dir)
+    return ckpt_dir
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "COMMIT")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like: Any,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    NamedShardings for elastic re-partition onto the current mesh."""
+    ckpt_dir = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(ckpt_dir, "state.msgpack.zst"), "rb") as f:
+        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    arrays = _unpack_blob(raw)
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_flatten(shardings)[0]
+
+    out = []
+    for idx, (path, leaf) in enumerate(paths):
+        key = _path_str(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        want = jnp.asarray(leaf).dtype if not hasattr(leaf, "dtype") \
+            else leaf.dtype
+        arr = arr.astype(want)
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[idx]))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class AsyncCheckpointer:
+    """Non-blocking checkpointer: host snapshot now, disk write later."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue()
+        self._errors: list = []
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_state, metadata = item
+            try:
+                save_checkpoint(self.directory, step, host_state, metadata)
+                self._gc()
+            except Exception as e:  # pragma: no cover
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    def save(self, step: int, state: Any, metadata: Optional[dict] = None):
+        # device -> host snapshot is synchronous; I/O is not
+        host_state = jax.tree.map(np.asarray, state)
+        self._q.put((int(step), host_state, metadata))
+
+    def wait(self):
+        self._q.join()
+        if self._errors:
+            raise self._errors[0]
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._thread.join()

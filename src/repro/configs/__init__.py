@@ -1,0 +1,36 @@
+"""Architecture config registry: ``get_config(arch)`` / ``get_smoke(arch)``.
+
+Arch ids follow the assignment table; ``pasmo_svm`` is the paper's own
+experiment configuration (solver + dataset grid, see repro.svm).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (ModelConfig, ServeConfig, ShapeConfig,
+                                SHAPES, TrainConfig, get_shape)
+
+_MODULES: Dict[str, str] = {
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "qwen2.5-3b": "repro.configs.qwen2_5_3b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "internvl2-1b": "repro.configs.internvl2_1b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[arch]).smoke()

@@ -1,0 +1,190 @@
+"""Dual SVM quadratic program: problem container and exact math.
+
+The paper (Glasmachers, "The Planning-ahead SMO Algorithm") works with the
+*signed* dual formulation
+
+    max  f(a) = y^T a - 1/2 a^T K a
+    s.t. sum(a) = 0,   L_i <= a_i <= U_i,
+         L_i = min(0, y_i C),  U_i = max(0, y_i C)
+
+where ``K`` is the plain (label-free) kernel Gram matrix and the gradient is
+``grad f(a) = y - K a``.  All step / gain algebra in :mod:`repro.core.step`
+and the working-set selection in :mod:`repro.core.wss` operate on this form.
+
+Everything in this module is pure ``jnp`` (jit/vmap friendly) and is also the
+oracle used by the property tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# LIBSVM's guard for vanishing curvature (footnote 1 in the paper).
+TAU = 1e-12
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Bounds:
+    """Box bounds of the signed dual problem."""
+
+    lower: jax.Array  # (l,)  L_i = min(0, y_i C)
+    upper: jax.Array  # (l,)  U_i = max(0, y_i C)
+
+
+def make_bounds(y: jax.Array, C) -> Bounds:
+    """Per-coordinate box bounds ``[min(0, y_i C), max(0, y_i C)]``."""
+    yC = y * C
+    zero = jnp.zeros_like(yC)
+    return Bounds(lower=jnp.minimum(zero, yC), upper=jnp.maximum(zero, yC))
+
+
+def dual_objective(alpha: jax.Array, y: jax.Array, K: jax.Array) -> jax.Array:
+    """``f(a) = y^T a - 1/2 a^T K a`` (eq. 1)."""
+    return jnp.dot(y, alpha) - 0.5 * jnp.dot(alpha, K @ alpha)
+
+
+def gradient(alpha: jax.Array, y: jax.Array, K: jax.Array) -> jax.Array:
+    """``grad f(a) = y - K a``."""
+    return y - K @ alpha
+
+
+def up_mask(alpha: jax.Array, bounds: Bounds, tol: float = 0.0) -> jax.Array:
+    """Indicator of ``I_up(a) = {i | a_i < U_i}``."""
+    return alpha < bounds.upper - tol
+
+
+def down_mask(alpha: jax.Array, bounds: Bounds, tol: float = 0.0) -> jax.Array:
+    """Indicator of ``I_down(a) = {i | a_i > L_i}``."""
+    return alpha > bounds.lower + tol
+
+
+def kkt_gap(G: jax.Array, alpha: jax.Array, bounds: Bounds,
+            active: Optional[jax.Array] = None) -> jax.Array:
+    """KKT violation gap ``psi(a)`` used in the stopping rule (Alg. 1 step 4).
+
+    ``psi(a) = max{G_i | i in I_up} - min{G_j | j in I_down}``.
+    ``active`` optionally restricts the reductions (soft shrinking).
+    """
+    up = up_mask(alpha, bounds)
+    dn = down_mask(alpha, bounds)
+    if active is not None:
+        up = up & active
+        dn = dn & active
+    neg_inf = jnp.array(-jnp.inf, G.dtype)
+    pos_inf = jnp.array(jnp.inf, G.dtype)
+    g_up = jnp.max(jnp.where(up, G, neg_inf))
+    g_dn = jnp.min(jnp.where(dn, G, pos_inf))
+    return g_up - g_dn
+
+
+def is_feasible(alpha: jax.Array, bounds: Bounds, atol: float = 1e-9) -> jax.Array:
+    """Feasibility predicate for property tests."""
+    box = jnp.all((alpha >= bounds.lower - atol) & (alpha <= bounds.upper + atol))
+    eq = jnp.abs(jnp.sum(alpha)) <= atol * (1 + jnp.sum(jnp.abs(alpha)))
+    return box & eq
+
+
+# ---------------------------------------------------------------------------
+# Kernel oracles
+# ---------------------------------------------------------------------------
+#
+# The SMO loop never needs the full Gram matrix; it needs rows, the diagonal
+# and tiny principal minors.  The oracle abstraction lets the same solver run
+# from (a) a precomputed K (tests / small problems), or (b) on-the-fly rows
+# computed from the data matrix X (production path, backed by the Pallas
+# kernels in ``repro.kernels``).
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PrecomputedKernel:
+    """Oracle over a dense precomputed Gram matrix."""
+
+    K: jax.Array  # (l, l) symmetric PSD
+
+    @property
+    def n(self) -> int:
+        return self.K.shape[0]
+
+    def row(self, i: jax.Array) -> jax.Array:
+        return jnp.take(self.K, i, axis=0)
+
+    def diag(self) -> jax.Array:
+        return jnp.diagonal(self.K)
+
+    def entry(self, i: jax.Array, j: jax.Array) -> jax.Array:
+        return self.K[i, j]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RBFKernel:
+    """Gaussian kernel oracle ``k(x, z) = exp(-gamma ||x - z||^2)``.
+
+    Rows are recomputed on demand (TPU adaptation of the LIBSVM kernel
+    cache — see DESIGN.md §3).  ``sq_norms`` is precomputed once.
+    """
+
+    X: jax.Array          # (l, d)
+    gamma: jax.Array      # scalar
+    sq_norms: jax.Array   # (l,)
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[0]
+
+    def row(self, i: jax.Array) -> jax.Array:
+        xi = jnp.take(self.X, i, axis=0)
+        ni = jnp.take(self.sq_norms, i)
+        d2 = ni + self.sq_norms - 2.0 * (self.X @ xi)
+        return jnp.exp(-self.gamma * jnp.maximum(d2, 0.0))
+
+    def diag(self) -> jax.Array:
+        return jnp.ones_like(self.sq_norms)
+
+    def entry(self, i: jax.Array, j: jax.Array) -> jax.Array:
+        # same expansion as row() so both paths are numerically consistent
+        xi = jnp.take(self.X, i, axis=0)
+        xj = jnp.take(self.X, j, axis=0)
+        d2 = (jnp.take(self.sq_norms, i) + jnp.take(self.sq_norms, j)
+              - 2.0 * jnp.dot(xj, xi))
+        return jnp.exp(-self.gamma * jnp.maximum(d2, 0.0))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LinearKernel:
+    """Linear kernel oracle ``k(x, z) = x . z``."""
+
+    X: jax.Array  # (l, d)
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[0]
+
+    def row(self, i: jax.Array) -> jax.Array:
+        return self.X @ jnp.take(self.X, i, axis=0)
+
+    def diag(self) -> jax.Array:
+        return jnp.sum(self.X * self.X, axis=-1)
+
+    def entry(self, i: jax.Array, j: jax.Array) -> jax.Array:
+        return jnp.dot(jnp.take(self.X, i, axis=0), jnp.take(self.X, j, axis=0))
+
+
+def make_rbf(X: jax.Array, gamma) -> RBFKernel:
+    X = jnp.asarray(X)
+    return RBFKernel(X=X, gamma=jnp.asarray(gamma, X.dtype),
+                     sq_norms=jnp.sum(X * X, axis=-1))
+
+
+def materialize(kernel) -> jax.Array:
+    """Dense Gram matrix from any oracle (tests / tiny problems only)."""
+    idx = jnp.arange(kernel.n)
+    return jax.vmap(kernel.row)(idx)

@@ -1,0 +1,359 @@
+"""Pure-numpy reference implementation of SMO and PA-SMO.
+
+This is the trusted oracle: a direct, sequential transcription of the
+paper's Algorithm 1 (SMO with WSS2) and Algorithm 5 (the complete PA-SMO),
+in float64, with LIBSVM-compatible guards.  The JAX solver in
+:mod:`repro.core.solver` is tested for trajectory equality against this
+module on small problems, and the paper-validation benchmarks
+(EXPERIMENTS.md §Paper-validation) compare SMO vs PA-SMO iteration counts
+with this pair of implementations as well as with the JAX pair.
+
+No jax imports here on purpose.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+TAU = 1e-12
+
+
+@dataclasses.dataclass
+class RefResult:
+    alpha: np.ndarray
+    iterations: int
+    objective: float
+    kkt_gap: float
+    converged: bool
+    n_planning: int = 0
+    n_free: int = 0
+    n_clipped: int = 0
+    n_plan_reverted: int = 0
+    ratios: Optional[List[float]] = None  # mu/mu* of each planning step
+    # (i, j, mu, planned) trace
+    steps: Optional[List[Tuple[int, int, float, bool]]] = None
+
+
+def _objective(alpha, y, K):
+    return float(y @ alpha - 0.5 * alpha @ (K @ alpha))
+
+
+def _bounds(y, C):
+    yC = y * C
+    return np.minimum(0.0, yC), np.maximum(0.0, yC)
+
+
+def _argmax(values, mask, tie: str):
+    """Masked argmax with 'first' (numpy/JAX) or 'last' (LIBSVM) tie-break."""
+    v = np.where(mask, values, -np.inf)
+    if tie == "last":
+        idx = len(v) - 1 - int(np.argmax(v[::-1]))
+    else:
+        idx = int(np.argmax(v))
+    return idx, v[idx]
+
+
+def _step_bounds(ai, aj, Li, Ui, Lj, Uj):
+    return max(Li - ai, aj - Uj), min(Ui - ai, aj - Lj)
+
+
+def _select_wss2(G, K, diag, up, dn, tie, exact=False, alpha=None, L=None, U=None):
+    """Second-order selection; exact=True uses the clipped gain g (Alg. 3)."""
+    i, g_i = _argmax(G, up, tie)
+    l = g_i - G
+    q = np.maximum(K[i, i] - 2.0 * K[i] + diag, TAU)
+    if exact:
+        lo = np.maximum(L[i] - alpha[i], alpha - U)
+        hi = np.minimum(U[i] - alpha[i], alpha - L)
+        mu = np.clip(l / q, lo, hi)
+        gains = l * mu - 0.5 * q * mu * mu
+    else:
+        gains = 0.5 * l * l / q
+    cand = dn & (l > 0)
+    cand[i] = False
+    j, gain = _argmax(gains, cand, tie)
+    return i, j, gain
+
+
+def _cand_gain(B, G, K, up, dn, exact=False, alpha=None, L=None, U=None):
+    """Gain of an explicit candidate working set; -inf if not admissible."""
+    i, j = B
+    l = G[i] - G[j]
+    if not (up[i] and dn[j] and l > 0 and i != j):
+        return -np.inf
+    q = max(K[i, i] - 2.0 * K[i, j] + K[j, j], TAU)
+    if exact:
+        lo, hi = _step_bounds(alpha[i], alpha[j], L[i], U[i], L[j], U[j])
+        mu = min(max(l / q, lo), hi)
+        return l * mu - 0.5 * q * mu * mu
+    return 0.5 * l * l / q
+
+
+def solve_smo(K, y, C, eps=1e-3, max_iter=10_000_000, tie="last",
+              overshoot: float = 1.0, record_steps=False) -> RefResult:
+    """Algorithm 1 with WSS2 (eq. 3) — the LIBSVM 2.84 baseline.
+
+    ``overshoot`` != 1 gives the §7.3 heuristic (clip(overshoot * mu*)).
+    """
+    K = np.asarray(K, np.float64)
+    y = np.asarray(y, np.float64)
+    n = len(y)
+    L, U = _bounds(y, C)
+    alpha = np.zeros(n)
+    G = y.copy()
+    diag = np.diagonal(K).copy()
+    n_free = n_clipped = 0
+    steps: List[Tuple[int, int, float, bool]] = []
+    t = 0
+    while t < max_iter:
+        up = alpha < U
+        dn = alpha > L
+        g_up = np.max(np.where(up, G, -np.inf))
+        g_dn = np.min(np.where(dn, G, np.inf))
+        if g_up - g_dn <= eps:
+            return RefResult(alpha, t, _objective(alpha, y, K), g_up - g_dn,
+                             True, 0, n_free, n_clipped, 0,
+                             steps=steps if record_steps else None)
+        i, j, _ = _select_wss2(G, K, diag, up, dn, tie)
+        l = G[i] - G[j]
+        q = max(K[i, i] - 2.0 * K[i, j] + K[j, j], TAU)
+        lo, hi = _step_bounds(alpha[i], alpha[j], L[i], U[i], L[j], U[j])
+        mu_star = overshoot * (l / q)
+        mu = min(max(mu_star, lo), hi)
+        if lo < mu_star < hi:
+            n_free += 1
+        else:
+            n_clipped += 1
+        if record_steps:
+            steps.append((i, j, mu, False))
+        alpha[i] += mu
+        alpha[j] -= mu
+        G -= mu * (K[i] - K[j])
+        t += 1
+    up = alpha < U
+    dn = alpha > L
+    gap = (np.max(np.where(up, G, -np.inf)) - np.min(np.where(dn, G, np.inf)))
+    return RefResult(alpha, t, _objective(alpha, y, K), gap, False,
+                     0, n_free, n_clipped, 0,
+                     steps=steps if record_steps else None)
+
+
+def solve_pasmo(K, y, C, eps=1e-3, max_iter=10_000_000, eta=0.9, tie="last",
+                record_ratios=False, record_steps=False) -> RefResult:
+    """Algorithm 5 — the complete PA-SMO algorithm, transcribed faithfully.
+
+    Selection (Alg. 3): after a planning step with ratio inside
+    [1-eta, 1+eta] use the g~ objective, otherwise the exact gain g; in both
+    cases B^(t-2) competes as an extra candidate.  Update (Alg. 4): plan
+    ahead only after a *free* SMO step; fall back to the plain SMO step if
+    the current or the planned step would end at the box boundary.
+    """
+    K = np.asarray(K, np.float64)
+    y = np.asarray(y, np.float64)
+    n = len(y)
+    L, U = _bounds(y, C)
+    alpha = np.zeros(n)
+    G = y.copy()
+    diag = np.diagonal(K).copy()
+
+    p_smo = True          # previous iteration performed a SMO step
+    prev_free = False     # ... and it was free
+    prev_ratio_ok = True  # mu/mu* of the previous planning step in [1-eta, 1+eta]
+    B_prev: Optional[Tuple[int, int]] = None   # B^(t-1)
+    B_prev2: Optional[Tuple[int, int]] = None  # B^(t-2)
+    n_planning = n_free = n_clipped = n_reverted = 0
+    ratios: List[float] = []
+    steps: List[Tuple[int, int, float, bool]] = []
+
+    t = 0
+    while t < max_iter:
+        up = alpha < U
+        dn = alpha > L
+        g_up = np.max(np.where(up, G, -np.inf))
+        g_dn = np.min(np.where(dn, G, np.inf))
+        if g_up - g_dn <= eps:
+            return RefResult(alpha, t, _objective(alpha, y, K), g_up - g_dn,
+                             True, n_planning, n_free, n_clipped, n_reverted,
+                             ratios if record_ratios else None,
+                             steps=steps if record_steps else None)
+
+        # --- working set selection (Alg. 3) ---------------------------------
+        if p_smo:
+            i, j, _ = _select_wss2(G, K, diag, up, dn, tie)
+        else:
+            exact = not prev_ratio_ok
+            i, j, gain = _select_wss2(G, K, diag, up, dn, tie, exact=exact,
+                                      alpha=alpha, L=L, U=U)
+            if B_prev2 is not None:
+                cg = _cand_gain(B_prev2, G, K, up, dn, exact=exact,
+                                alpha=alpha, L=L, U=U)
+                if cg > gain:
+                    i, j = B_prev2
+
+        # --- step computation (Alg. 4) --------------------------------------
+        l = G[i] - G[j]
+        q11 = max(K[i, i] - 2.0 * K[i, j] + K[j, j], TAU)
+        lo, hi = _step_bounds(alpha[i], alpha[j], L[i], U[i], L[j], U[j])
+        mu_star = l / q11
+
+        planned = False
+        mu = None
+        if prev_free and B_prev is not None:
+            pi, pj = B_prev
+            w1 = l
+            w2 = G[pi] - G[pj]
+            q22 = K[pi, pi] - 2.0 * K[pi, pj] + K[pj, pj]
+            q12 = K[i, pi] - K[i, pj] - K[j, pi] + K[j, pj]
+            det = q11 * q22 - q12 * q12
+            if det > TAU and q22 > TAU:
+                mu1 = (q22 * w1 - q12 * w2) / det
+                mu2 = (w2 - q12 * mu1) / q22
+                # feasibility of the planned pair of steps (strict interior)
+                a_pi = alpha[pi] + mu1 * ((pi == i) - (pi == j))
+                a_pj = alpha[pj] + mu1 * ((pj == i) - (pj == j))
+                lo2, hi2 = _step_bounds(a_pi, a_pj, L[pi], U[pi], L[pj], U[pj])
+                if lo < mu1 < hi and lo2 < mu2 < hi2:
+                    planned = True
+                    mu = mu1
+                    ratio = mu1 / mu_star if abs(mu_star) > 0 else np.inf
+                    prev_ratio_ok = (1 - eta) <= ratio <= (1 + eta)
+                    if record_ratios:
+                        ratios.append(ratio)
+                else:
+                    n_reverted += 1
+            else:
+                n_reverted += 1
+
+        if planned:
+            n_planning += 1
+            p_smo = False
+            prev_free = False
+        else:
+            mu = min(max(mu_star, lo), hi)
+            free = lo < mu_star < hi
+            if free:
+                n_free += 1
+            else:
+                n_clipped += 1
+            p_smo = True
+            prev_free = free
+
+        if record_steps:
+            steps.append((i, j, mu, planned))
+        alpha[i] += mu
+        alpha[j] -= mu
+        G -= mu * (K[i] - K[j])
+        B_prev2 = B_prev
+        B_prev = (i, j)
+        t += 1
+
+    up = alpha < U
+    dn = alpha > L
+    gap = (np.max(np.where(up, G, -np.inf)) - np.min(np.where(dn, G, np.inf)))
+    return RefResult(alpha, t, _objective(alpha, y, K), gap, False,
+                     n_planning, n_free, n_clipped, n_reverted,
+                     ratios if record_ratios else None,
+                     steps=steps if record_steps else None)
+
+
+def solve_pasmo_multi(K, y, C, N=3, eps=1e-3, max_iter=10_000_000, eta=0.9,
+                      tie="last") -> RefResult:
+    """§7.4 multiple planning-ahead: plan with the N most recent working sets,
+    take the largest feasible double-step gain; the N sets also compete in
+    working-set selection."""
+    K = np.asarray(K, np.float64)
+    y = np.asarray(y, np.float64)
+    n = len(y)
+    L, U = _bounds(y, C)
+    alpha = np.zeros(n)
+    G = y.copy()
+    diag = np.diagonal(K).copy()
+
+    recent: List[Tuple[int, int]] = []   # most recent first
+    p_smo = True
+    prev_free = False
+    prev_ratio_ok = True
+    n_planning = n_free = n_clipped = n_reverted = 0
+
+    t = 0
+    while t < max_iter:
+        up = alpha < U
+        dn = alpha > L
+        g_up = np.max(np.where(up, G, -np.inf))
+        g_dn = np.min(np.where(dn, G, np.inf))
+        if g_up - g_dn <= eps:
+            return RefResult(alpha, t, _objective(alpha, y, K), g_up - g_dn,
+                             True, n_planning, n_free, n_clipped, n_reverted)
+
+        if p_smo:
+            i, j, _ = _select_wss2(G, K, diag, up, dn, tie)
+        else:
+            exact = not prev_ratio_ok
+            i, j, gain = _select_wss2(G, K, diag, up, dn, tie, exact=exact,
+                                      alpha=alpha, L=L, U=U)
+            for B in recent[1:]:  # sets older than B^(t-1) are WSS candidates
+                cg = _cand_gain(B, G, K, up, dn, exact=exact,
+                                alpha=alpha, L=L, U=U)
+                if cg > gain:
+                    i, j = B
+                    gain = cg
+
+        l = G[i] - G[j]
+        q11 = max(K[i, i] - 2.0 * K[i, j] + K[j, j], TAU)
+        lo, hi = _step_bounds(alpha[i], alpha[j], L[i], U[i], L[j], U[j])
+        mu_star = l / q11
+
+        best_gain, best_mu, best_ratio = -np.inf, None, None
+        if prev_free:
+            for pi, pj in recent[:N]:
+                w2 = G[pi] - G[pj]
+                q22 = K[pi, pi] - 2.0 * K[pi, pj] + K[pj, pj]
+                q12 = K[i, pi] - K[i, pj] - K[j, pi] + K[j, pj]
+                det = q11 * q22 - q12 * q12
+                if det <= TAU or q22 <= TAU:
+                    continue
+                mu1 = (q22 * l - q12 * w2) / det
+                mu2 = (w2 - q12 * mu1) / q22
+                a_pi = alpha[pi] + mu1 * ((pi == i) - (pi == j))
+                a_pj = alpha[pj] + mu1 * ((pj == i) - (pj == j))
+                lo2, hi2 = _step_bounds(a_pi, a_pj, L[pi], U[pi], L[pj], U[pj])
+                if not (lo < mu1 < hi and lo2 < mu2 < hi2):
+                    continue
+                g2 = (-0.5 * det / q22 * mu1 * mu1
+                      + (q22 * l - q12 * w2) / q22 * mu1
+                      + 0.5 * w2 * w2 / q22)
+                if g2 > best_gain:
+                    best_gain, best_mu = g2, mu1
+                    best_ratio = mu1 / mu_star if abs(mu_star) > 0 else np.inf
+
+        if best_mu is not None:
+            mu = best_mu
+            n_planning += 1
+            p_smo = False
+            prev_free = False
+            prev_ratio_ok = (1 - eta) <= best_ratio <= (1 + eta)
+        else:
+            if prev_free:
+                n_reverted += 1
+            mu = min(max(mu_star, lo), hi)
+            free = lo < mu_star < hi
+            n_free += int(free)
+            n_clipped += int(not free)
+            p_smo = True
+            prev_free = free
+
+        alpha[i] += mu
+        alpha[j] -= mu
+        G -= mu * (K[i] - K[j])
+        recent.insert(0, (i, j))
+        del recent[N + 1:]
+        t += 1
+
+    up = alpha < U
+    dn = alpha > L
+    gap = (np.max(np.where(up, G, -np.inf)) - np.min(np.where(dn, G, np.inf)))
+    return RefResult(alpha, t, _objective(alpha, y, K), gap, False,
+                     n_planning, n_free, n_clipped, n_reverted)

@@ -1,0 +1,391 @@
+"""JAX PA-SMO / SMO solver: ``jax.lax.while_loop`` driver, jit/vmap friendly.
+
+Implements, selectable via :class:`SolverConfig.algorithm`:
+
+* ``"smo"``          — Algorithm 1 with WSS2 (eq. 3), the LIBSVM baseline.
+* ``"pasmo"``        — Algorithm 5 (Alg. 3 selection + Alg. 4 update), the
+                       paper's contribution.  ``plan_candidates=N>1`` gives
+                       the §7.4 multiple planning-ahead variant.
+* ``"pasmo_simple"`` — Algorithm 2 (plan after *any* SMO step, standard
+                       WSS2 selection; no convergence guarantee) — ablation.
+* ``"overshoot"``    — §7.3 heuristic (clipped ``1.1 mu*``).
+* ``wss="mvp"``      — first-order selection ablation (§ state of the art).
+
+The solver state is a flat pytree, so the whole solve is one
+``lax.while_loop`` under ``jit`` and batches with ``vmap`` (many QPs at
+once: one-vs-rest heads, C/gamma grids).  Kernel rows come from an oracle
+(:mod:`repro.core.qp`) so the same loop runs from a precomputed Gram matrix
+or from on-the-fly (Pallas-backed) row computation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qp as qp_mod
+from repro.core import step as step_mod
+from repro.core import wss as wss_mod
+from repro.core.qp import TAU, Bounds
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Static solver configuration (hashable; closed over by jit)."""
+
+    algorithm: str = "pasmo"       # smo | pasmo | pasmo_simple | overshoot
+    wss: str = "wss2"              # wss2 | mvp
+    eps: float = 1e-3              # KKT stopping accuracy (paper default)
+    eta: float = 0.9               # Alg. 3 ratio window (paper fixes 0.9)
+    overshoot: float = 1.1         # §7.3 factor (only algorithm="overshoot")
+    max_iter: int = 1_000_000
+    plan_candidates: int = 1       # N of §7.4; 1 = plain PA-SMO
+    record_trace: bool = False     # record mu/mu* of planning steps (Fig. 3)
+    trace_cap: int = 16384
+    shrink_every: int = 0          # 0 = off; else re-evaluate mask every k its
+    record_steps: bool = False     # record (i, j, mu) per iteration (debug /
+    step_cap: int = 4096           # trajectory-parity tests)
+
+    def __post_init__(self):
+        assert self.algorithm in ("smo", "pasmo", "pasmo_simple", "overshoot")
+        assert self.wss in ("wss2", "mvp")
+        assert self.plan_candidates >= 1
+
+
+class SolverState(NamedTuple):
+    alpha: jax.Array          # (l,)
+    G: jax.Array              # (l,) gradient  y - K alpha
+    t: jax.Array              # int32 iteration counter
+    done: jax.Array           # bool
+    gap: jax.Array            # last KKT gap
+    hist_i: jax.Array         # (N+1,) int32 recent working sets, newest first
+    hist_j: jax.Array         # (N+1,)
+    n_hist: jax.Array         # int32 number of valid history entries
+    p_smo: jax.Array          # bool: previous iteration performed a SMO step
+    prev_free: jax.Array      # bool: ... and it was free
+    prev_ratio_ok: jax.Array  # bool: last planning ratio in [1-eta, 1+eta]
+    active: jax.Array         # (l,) bool soft-shrinking mask
+    n_planning: jax.Array     # int32 counters
+    n_free: jax.Array
+    n_clipped: jax.Array
+    n_reverted: jax.Array
+    trace: jax.Array          # (cap,) float ratios (cap=1 when disabled)
+    n_trace: jax.Array        # int32
+    steps_i: jax.Array        # (step_cap,) int32 (cap=1 when disabled)
+    steps_j: jax.Array        # (step_cap,) int32
+    steps_mu: jax.Array       # (step_cap,) float
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    alpha: jax.Array
+    b: jax.Array              # bias term for prediction
+    G: jax.Array
+    iterations: jax.Array
+    objective: jax.Array
+    kkt_gap: jax.Array
+    converged: jax.Array
+    n_planning: jax.Array
+    n_free: jax.Array
+    n_clipped: jax.Array
+    n_reverted: jax.Array
+    trace: jax.Array
+    n_trace: jax.Array
+    steps_i: jax.Array
+    steps_j: jax.Array
+    steps_mu: jax.Array
+
+
+def _shrink_mask(G, alpha, bounds: Bounds):
+    """Conservative adaptive shrinking: drop bound variables that cannot be
+    part of any violating pair under the current gap endpoints.
+
+    A variable at its lower bound only acts as an ``i`` (up) candidate; it is
+    unpromising when ``G_i < min_{I_down} G``.  A variable at its upper bound
+    only acts as a ``j`` (down) candidate; unpromising when
+    ``G_j > max_{I_up} G``.  Interior variables always stay active.  Masked
+    variables still receive exact gradient updates, so reactivation is free
+    (cf. DESIGN.md §3: shrinking is a mask on TPU, not a problem resize).
+    """
+    up = qp_mod.up_mask(alpha, bounds)
+    dn = qp_mod.down_mask(alpha, bounds)
+    g_up = jnp.max(jnp.where(up, G, -jnp.inf))
+    g_dn = jnp.min(jnp.where(dn, G, jnp.inf))
+    at_lower = ~dn   # alpha == L
+    at_upper = ~up   # alpha == U
+    inactive = (at_lower & (G < g_dn)) | (at_upper & (G > g_up))
+    return ~inactive
+
+
+def _make_body(kernel, y, bounds: Bounds, diag, cfg: SolverConfig):
+    n = y.shape[0]
+    N = cfg.plan_candidates
+    dtype = y.dtype
+    eps = jnp.asarray(cfg.eps, dtype)
+    eta = cfg.eta
+    planning_enabled = cfg.algorithm in ("pasmo", "pasmo_simple")
+
+    def body(s: SolverState) -> SolverState:
+        alpha, G = s.alpha, s.G
+        up = qp_mod.up_mask(alpha, bounds) & s.active
+        dn = qp_mod.down_mask(alpha, bounds) & s.active
+
+        # ------------------------------------------------------------------
+        # Working set selection (Alg. 3 for pasmo, plain WSS2/MVP otherwise)
+        # ------------------------------------------------------------------
+        i0, g_i0 = wss_mod.select_i(G, up)
+        row_i0 = kernel.row(i0)
+
+        if cfg.wss == "mvp":
+            sel = wss_mod.select_mvp(G, up, dn)
+            sel = wss_mod.Selection(sel.i, sel.j,
+                                    gain=jnp.asarray(0.0, dtype),
+                                    violation=sel.violation)
+            use_exact = jnp.asarray(False)
+        elif cfg.algorithm == "pasmo":
+            use_exact = (~s.p_smo) & (~s.prev_ratio_ok)
+            sel = jax.lax.cond(
+                use_exact,
+                lambda: wss_mod.select_wss2_exact(G, row_i0, diag, alpha,
+                                                  bounds, up, dn, i0, g_i0),
+                lambda: wss_mod.select_wss2(G, row_i0, diag, up, dn, i0, g_i0))
+        else:
+            use_exact = jnp.asarray(False)
+            sel = wss_mod.select_wss2(G, row_i0, diag, up, dn, i0, g_i0)
+
+        bi, bj, best_gain = sel.i, sel.j, sel.gain
+        if cfg.algorithm == "pasmo":
+            # Extra candidates: the working sets used for planning, i.e.
+            # history entries 1..N (entry 0 is B^(t-1), the planning target).
+            consider = ~s.p_smo
+            for h in range(1, N + 1):
+                ci, cj = s.hist_i[h], s.hist_j[h]
+                valid = s.n_hist > h
+                kcc = kernel.entry(ci, cj)
+                kci, kcj = jnp.take(diag, ci), jnp.take(diag, cj)
+                cg = jax.lax.cond(
+                    use_exact,
+                    lambda ci=ci, cj=cj, kci=kci, kcc=kcc, kcj=kcj:
+                        wss_mod.candidate_exact_gain(ci, cj, G, kci, kcc, kcj,
+                                                     alpha, bounds, up, dn),
+                    lambda ci=ci, cj=cj, kci=kci, kcc=kcc, kcj=kcj:
+                        wss_mod.candidate_newton_gain(ci, cj, G, kci, kcc,
+                                                      kcj, up, dn))
+                take = consider & valid & (cg > best_gain)
+                bi = jnp.where(take, ci, bi)
+                bj = jnp.where(take, cj, bj)
+                best_gain = jnp.where(take, cg, best_gain)
+
+        i, j = bi, bj
+        row_i = jax.lax.cond(i == i0, lambda: row_i0,
+                             lambda: kernel.row(i))
+        row_j = kernel.row(j)
+
+        # ------------------------------------------------------------------
+        # Step computation (Alg. 4 / eq. 2 / §7.3)
+        # ------------------------------------------------------------------
+        l = jnp.take(G, i) - jnp.take(G, j)
+        Kij = jnp.take(row_i, j)
+        q11 = jnp.maximum(jnp.take(diag, i) - 2.0 * Kij + jnp.take(diag, j),
+                          TAU)
+        sb = step_mod.step_bounds(
+            jnp.take(alpha, i), jnp.take(alpha, j),
+            jnp.take(bounds.lower, i), jnp.take(bounds.upper, i),
+            jnp.take(bounds.lower, j), jnp.take(bounds.upper, j))
+        mu_star = l / q11
+
+        if cfg.algorithm == "overshoot":
+            mu_smo, free_smo = step_mod.overshoot_step(l, q11, sb,
+                                                       cfg.overshoot)
+        else:
+            mu_smo, free_smo = step_mod.smo_step(l, q11, sb)
+
+        do_plan = jnp.asarray(False)
+        mu_plan = mu_smo
+        any_feasible = jnp.asarray(False)
+        if planning_enabled:
+            allow = s.prev_free if cfg.algorithm == "pasmo" else s.p_smo
+            best_g2 = jnp.asarray(-jnp.inf, dtype)
+            for h in range(N):
+                pi, pj = s.hist_i[h], s.hist_j[h]
+                valid = s.n_hist > h
+                w2 = jnp.take(G, pi) - jnp.take(G, pj)
+                q22 = (jnp.take(diag, pi) - 2.0 * kernel.entry(pi, pj)
+                       + jnp.take(diag, pj))
+                q12 = (jnp.take(row_i, pi) - jnp.take(row_i, pj)
+                       - jnp.take(row_j, pi) + jnp.take(row_j, pj))
+                terms = step_mod.PlanningTerms(w1=l, w2=w2, Q11=q11,
+                                               Q22=q22, Q12=q12)
+                mu1, okdet = step_mod.planning_step(terms)
+                mu2 = step_mod.planned_second_step(mu1, terms)
+                interior1 = (sb.lo < mu1) & (mu1 < sb.hi)
+                d_pi = ((pi == i).astype(dtype) - (pi == j).astype(dtype))
+                d_pj = ((pj == i).astype(dtype) - (pj == j).astype(dtype))
+                sb2 = step_mod.step_bounds(
+                    jnp.take(alpha, pi) + mu1 * d_pi,
+                    jnp.take(alpha, pj) + mu1 * d_pj,
+                    jnp.take(bounds.lower, pi), jnp.take(bounds.upper, pi),
+                    jnp.take(bounds.lower, pj), jnp.take(bounds.upper, pj))
+                interior2 = (sb2.lo < mu2) & (mu2 < sb2.hi)
+                g2 = step_mod.double_step_gain(mu1, terms)
+                feasible = okdet & interior1 & interior2 & valid
+                better = feasible & (g2 > best_g2)
+                best_g2 = jnp.where(better, g2, best_g2)
+                mu_plan = jnp.where(better, mu1, mu_plan)
+                any_feasible = any_feasible | feasible
+            do_plan = allow & any_feasible
+
+        mu = jnp.where(do_plan, mu_plan, mu_smo)
+        reverted = (s.prev_free if cfg.algorithm == "pasmo" else s.p_smo)
+        reverted = reverted & ~do_plan & jnp.asarray(planning_enabled)
+
+        # ------------------------------------------------------------------
+        # Update (steps 2-3 of Alg. 1)
+        # ------------------------------------------------------------------
+        alpha_new = alpha.at[i].add(mu).at[j].add(-mu)
+        G_new = G - mu * (row_i - row_j)
+
+        # ------------------------------------------------------------------
+        # Bookkeeping, shrinking, stopping
+        # ------------------------------------------------------------------
+        ratio = mu_plan / jnp.where(jnp.abs(mu_star) > 0, mu_star, 1.0)
+        ratio_ok = (ratio >= 1.0 - eta) & (ratio <= 1.0 + eta)
+        hist_i = jnp.roll(s.hist_i, 1).at[0].set(i)
+        hist_j = jnp.roll(s.hist_j, 1).at[0].set(j)
+
+        if cfg.record_trace:
+            slot = jnp.minimum(s.n_trace, cfg.trace_cap - 1)
+            traced = jnp.where(do_plan, ratio, jnp.take(s.trace, slot))
+            trace = s.trace.at[slot].set(traced)
+            n_trace = s.n_trace + do_plan.astype(jnp.int32)
+        else:
+            trace, n_trace = s.trace, s.n_trace
+
+        if cfg.record_steps:
+            slot = jnp.minimum(s.t, cfg.step_cap - 1)
+            steps_i = s.steps_i.at[slot].set(i)
+            steps_j = s.steps_j.at[slot].set(j)
+            steps_mu = s.steps_mu.at[slot].set(mu)
+        else:
+            steps_i, steps_j, steps_mu = s.steps_i, s.steps_j, s.steps_mu
+
+        active = s.active
+        if cfg.shrink_every > 0:
+            refresh = (s.t % cfg.shrink_every) == (cfg.shrink_every - 1)
+            active = jnp.where(refresh, _shrink_mask(G_new, alpha_new, bounds),
+                               active)
+            gap_masked = qp_mod.kkt_gap(G_new, alpha_new, bounds, active)
+            # unshrink when the masked problem looks solved
+            active = jnp.where(gap_masked <= eps, jnp.ones_like(active),
+                               active)
+
+        gap = qp_mod.kkt_gap(G_new, alpha_new, bounds)
+        done = gap <= eps
+
+        return SolverState(
+            alpha=alpha_new, G=G_new, t=s.t + 1, done=done, gap=gap,
+            hist_i=hist_i, hist_j=hist_j,
+            n_hist=jnp.minimum(s.n_hist + 1, N + 1),
+            p_smo=~do_plan,
+            prev_free=(~do_plan) & free_smo,
+            prev_ratio_ok=jnp.where(do_plan, ratio_ok, s.prev_ratio_ok),
+            active=active,
+            n_planning=s.n_planning + do_plan.astype(jnp.int32),
+            n_free=s.n_free + ((~do_plan) & free_smo).astype(jnp.int32),
+            n_clipped=s.n_clipped + ((~do_plan) & ~free_smo).astype(jnp.int32),
+            n_reverted=s.n_reverted + reverted.astype(jnp.int32),
+            trace=trace, n_trace=n_trace,
+            steps_i=steps_i, steps_j=steps_j, steps_mu=steps_mu)
+
+    return body
+
+
+def init_state(kernel, y, bounds: Bounds, cfg: SolverConfig,
+               alpha0: Optional[jax.Array] = None,
+               G0: Optional[jax.Array] = None) -> SolverState:
+    n = y.shape[0]
+    dtype = y.dtype
+    if alpha0 is None:
+        alpha0 = jnp.zeros_like(y)
+        G0 = y  # grad f(0) = y: no kernel evaluations (paper §2)
+    else:
+        assert G0 is not None, "warm start needs a matching gradient"
+    N = cfg.plan_candidates
+    cap = cfg.trace_cap if cfg.record_trace else 1
+    scap = cfg.step_cap if cfg.record_steps else 1
+    gap = qp_mod.kkt_gap(G0, alpha0, bounds)
+    return SolverState(
+        alpha=alpha0, G=G0, t=jnp.asarray(0, jnp.int32),
+        done=gap <= cfg.eps, gap=gap,
+        hist_i=jnp.zeros((N + 1,), jnp.int32),
+        hist_j=jnp.zeros((N + 1,), jnp.int32),
+        n_hist=jnp.asarray(0, jnp.int32),
+        p_smo=jnp.asarray(True), prev_free=jnp.asarray(False),
+        prev_ratio_ok=jnp.asarray(True),
+        active=jnp.ones((n,), bool),
+        n_planning=jnp.asarray(0, jnp.int32),
+        n_free=jnp.asarray(0, jnp.int32),
+        n_clipped=jnp.asarray(0, jnp.int32),
+        n_reverted=jnp.asarray(0, jnp.int32),
+        trace=jnp.zeros((cap,), dtype), n_trace=jnp.asarray(0, jnp.int32),
+        steps_i=jnp.zeros((scap,), jnp.int32),
+        steps_j=jnp.zeros((scap,), jnp.int32),
+        steps_mu=jnp.zeros((scap,), dtype))
+
+
+def _finalize(s: SolverState, y, bounds: Bounds) -> SolveResult:
+    up = qp_mod.up_mask(s.alpha, bounds)
+    dn = qp_mod.down_mask(s.alpha, bounds)
+    g_up = jnp.max(jnp.where(up, s.G, -jnp.inf))
+    g_dn = jnp.min(jnp.where(dn, s.G, jnp.inf))
+    b = 0.5 * (g_up + g_dn)
+    # f(a) = y.a - 1/2 a.K a = 1/2 (y.a + G.a)  since G = y - K a
+    objective = 0.5 * (jnp.dot(y, s.alpha) + jnp.dot(s.G, s.alpha))
+    return SolveResult(
+        alpha=s.alpha, b=b, G=s.G, iterations=s.t, objective=objective,
+        kkt_gap=s.gap, converged=s.done,
+        n_planning=s.n_planning, n_free=s.n_free, n_clipped=s.n_clipped,
+        n_reverted=s.n_reverted, trace=s.trace, n_trace=s.n_trace,
+        steps_i=s.steps_i, steps_j=s.steps_j, steps_mu=s.steps_mu)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def solve(kernel, y: jax.Array, C, cfg: SolverConfig = SolverConfig(),
+          alpha0: Optional[jax.Array] = None,
+          G0: Optional[jax.Array] = None) -> SolveResult:
+    """Solve the dual SVM QP (eq. 1) with the configured algorithm.
+
+    ``kernel`` is any oracle from :mod:`repro.core.qp` (pytree).  Returns a
+    :class:`SolveResult`.  jit-compiled; vmap over a batch of QPs with e.g.
+    ``jax.vmap(lambda K, y: solve(PrecomputedKernel(K), y, C, cfg))``.
+    """
+    y = jnp.asarray(y)
+    bounds = qp_mod.make_bounds(y, jnp.asarray(C, y.dtype))
+    diag = kernel.diag().astype(y.dtype)
+    body = _make_body(kernel, y, bounds, diag, cfg)
+    s0 = init_state(kernel, y, bounds, cfg, alpha0, G0)
+
+    def cond(s: SolverState):
+        return (~s.done) & (s.t < cfg.max_iter)
+
+    s = jax.lax.while_loop(cond, body, s0)
+    return _finalize(s, y, bounds)
+
+
+def solve_batched(Ks: jax.Array, ys: jax.Array, C,
+                  cfg: SolverConfig = SolverConfig()) -> SolveResult:
+    """vmap-batched solve over a stack of precomputed-kernel QPs.
+
+    ``Ks``: (B, l, l); ``ys``: (B, l).  One-vs-rest multiclass and C-grid
+    sweeps are batched QPs with a shared or stacked Gram matrix — the TPU
+    throughput mode of the solver (DESIGN.md §3).
+    """
+    def one(K, y):
+        return solve(qp_mod.PrecomputedKernel(K), y, C, cfg)
+
+    return jax.vmap(one)(Ks, ys)

@@ -1,0 +1,124 @@
+"""jit'd wrappers around the Pallas kernels: padding, dispatch, epilogues.
+
+``impl`` selects the backend:
+  * "pallas"    — compiled Pallas (TPU target),
+  * "interpret" — Pallas interpret mode (CPU correctness validation),
+  * "jnp"       — pure-jnp fallback with identical semantics (XLA-fused;
+                  the fast path on CPU and the numerical oracle in tests).
+  * "auto"      — pallas on TPU, jnp elsewhere.
+
+All wrappers pad the example dimension to the block multiple with *inert*
+rows (L = U = 0 so they can never be selected; see sharded.py for the same
+trick) and the feature dimension to a lane multiple for the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_ops
+from repro.kernels.gram_block import gram_pallas
+from repro.kernels.rbf_row_wss import rbf_row_wss_pallas
+from repro.kernels.rbf_update_wss import rbf_update_wss_pallas
+
+NEG_INF = -jnp.inf
+
+
+def resolve_impl(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _pad_l(a, lpad, value=0.0):
+    pad = lpad - a.shape[0]
+    if pad == 0:
+        return a
+    widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _pad_d(a, dpad):
+    pad = dpad - a.shape[-1]
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * (a.ndim - 1) + [(0, pad)]
+    return jnp.pad(a, widths)
+
+
+def pad_dims(l: int, d: int, block_l: int) -> Tuple[int, int]:
+    lpad = ((l + block_l - 1) // block_l) * block_l
+    dpad = ((d + 127) // 128) * 128
+    return lpad, dpad
+
+
+def rbf_row_wss(X, sqn, G, alpha, L, U, xq, a_i, L_i, U_i, g_i, i_idx,
+                use_exact, gamma, *, impl: str = "auto",
+                block_l: int = 1024):
+    """Pass A: returns (k_i (l,), j (int32), gain_j)."""
+    impl = resolve_impl(impl)
+    l, d = X.shape
+    if impl == "jnp":
+        return ref_ops.rbf_row_wss(X, sqn, G, alpha, L, U, xq, a_i, L_i,
+                                   U_i, g_i, i_idx, use_exact, gamma)
+    lpad, dpad = pad_dims(l, d, block_l)
+    dtype = X.dtype
+    scal = jnp.stack([jnp.dot(xq, xq), a_i, L_i, U_i, g_i,
+                      jnp.asarray(gamma, dtype),
+                      use_exact.astype(dtype),
+                      jnp.asarray(i_idx, dtype)]).reshape(1, 8).astype(dtype)
+    k, bmax, barg = rbf_row_wss_pallas(
+        _pad_d(_pad_l(X, lpad), dpad), _pad_l(sqn, lpad), _pad_l(G, lpad),
+        _pad_l(alpha, lpad), _pad_l(L, lpad), _pad_l(U, lpad),
+        _pad_d(xq, dpad), scal,
+        block_l=block_l, interpret=(impl == "interpret"))
+    w = jnp.argmax(bmax)
+    return k[:l], jnp.take(barg, w), jnp.take(bmax, w)
+
+
+def rbf_update_wss(X, sqn, G, k_i, alpha_new, L, U, xq_j, mu, gamma,
+                   *, impl: str = "auto", block_l: int = 1024):
+    """Pass B: returns (G_new (l,), i_next, g_i_next, g_dn)."""
+    impl = resolve_impl(impl)
+    l, d = X.shape
+    if impl == "jnp":
+        return ref_ops.rbf_update_wss(X, sqn, G, k_i, xq_j, mu, alpha_new,
+                                      L, U, gamma)
+    lpad, dpad = pad_dims(l, d, block_l)
+    dtype = X.dtype
+    scal = jnp.stack([jnp.dot(xq_j, xq_j), jnp.asarray(mu, dtype),
+                      jnp.asarray(gamma, dtype)]).reshape(1, 3).astype(dtype)
+    G_new, bmax, barg, bmin = rbf_update_wss_pallas(
+        _pad_d(_pad_l(X, lpad), dpad), _pad_l(sqn, lpad), _pad_l(G, lpad),
+        _pad_l(k_i, lpad), _pad_l(alpha_new, lpad), _pad_l(L, lpad),
+        _pad_l(U, lpad), _pad_d(xq_j, dpad), scal,
+        block_l=block_l, interpret=(impl == "interpret"))
+    w = jnp.argmax(bmax)
+    return (G_new[:l], jnp.take(barg, w), jnp.take(bmax, w), jnp.min(bmin))
+
+
+def gram(X1, X2=None, gamma=1.0, *, impl: str = "auto",
+         block_i: int = 256, block_j: int = 256):
+    """(Cross-)Gram matrix k(X1, X2) -> (l1, l2)."""
+    impl = resolve_impl(impl)
+    if X2 is None:
+        X2 = X1
+    if impl == "jnp":
+        return ref_ops.gram_cross(X1, X2, gamma)
+    l1, d = X1.shape
+    l2 = X2.shape[0]
+    l1p = ((l1 + block_i - 1) // block_i) * block_i
+    l2p = ((l2 + block_j - 1) // block_j) * block_j
+    dpad = ((d + 127) // 128) * 128
+    s1 = jnp.sum(X1 * X1, axis=-1)
+    s2 = jnp.sum(X2 * X2, axis=-1)
+    out = gram_pallas(
+        _pad_d(_pad_l(X1, l1p), dpad), _pad_d(_pad_l(X2, l2p), dpad),
+        _pad_l(s1, l1p), _pad_l(s2, l2p), gamma,
+        block_i=block_i, block_j=block_j,
+        interpret=(impl == "interpret"))
+    return out[:l1, :l2]

@@ -1,0 +1,111 @@
+"""Pass A Pallas kernel: fused RBF kernel-row + WSS2 j-selection.
+
+Grid: 1D over blocks of the example dimension l (block size BL, a multiple
+of 128 so the lane dimension is hardware-aligned).  Per grid step the VMEM
+working set is one (BL, d) tile of X plus six (1, BL) vectors — for the
+default BL=1024, d<=512 that is ~2.3 MB in f32, comfortably inside the
+~16 MB v5e VMEM with double buffering.
+
+The (BL, d) x (d,) matvec runs on the MXU (d padded to a multiple of 128 by
+the ops wrapper); the gain algebra and the masked argmax run on the VPU in
+the same pass, so G, alpha, L, U are read from HBM exactly once and the
+gains are never materialized to HBM.  Outputs: the kernel row k_i (pass B
+needs it), and per-block (max, argmax) pairs that the O(nblocks) epilogue
+reduces on-chip.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TAU = 1e-12
+
+
+def _kernel(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, alpha_ref, L_ref, U_ref,
+            k_out, bmax_out, barg_out, *, block_l: int):
+    b = pl.program_id(0)
+    # scalars: [sqq, a_i, L_i, U_i, g_i, gamma, use_exact, i_idx]
+    sqq = scal_ref[0, 0]
+    a_i = scal_ref[0, 1]
+    L_i = scal_ref[0, 2]
+    U_i = scal_ref[0, 3]
+    g_i = scal_ref[0, 4]
+    gamma = scal_ref[0, 5]
+    use_exact = scal_ref[0, 6] > 0.5
+    i_idx = scal_ref[0, 7].astype(jnp.int32)
+
+    x = X_ref[...]                      # (BL, d)
+    q = xq_ref[...]                     # (1, d)
+    prod = jax.lax.dot_general(x, q, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.promote_types(x.dtype, jnp.float32))  # (BL, 1)
+    d2 = sqq + sqn_ref[...] - 2.0 * prod.reshape(1, block_l)        # (1, BL)
+    k = jnp.exp(-gamma * jnp.maximum(d2, 0.0))
+    k_out[...] = k.astype(k_out.dtype)
+
+    G = G_ref[...]
+    alpha = alpha_ref[...]
+    L = L_ref[...]
+    U = U_ref[...]
+    l_vec = g_i - G
+    q_vec = jnp.maximum(2.0 - 2.0 * k, TAU)      # RBF diag == 1
+    g_tilde = 0.5 * l_vec * l_vec / q_vec
+    lo = jnp.maximum(L_i - a_i, alpha - U)
+    hi = jnp.minimum(U_i - a_i, alpha - L)
+    mu_c = jnp.clip(l_vec / q_vec, lo, hi)
+    g_exact = l_vec * mu_c - 0.5 * q_vec * mu_c * mu_c
+    gains = jnp.where(use_exact, g_exact, g_tilde)
+
+    gidx = (b * block_l
+            + jax.lax.broadcasted_iota(jnp.int32, (1, block_l), 1))
+    mask = (alpha > L) & (l_vec > 0) & (gidx != i_idx)
+    vals = jnp.where(mask, gains, -jnp.inf)
+    arg = jnp.argmax(vals[0]).astype(jnp.int32)
+    bmax_out[0, 0] = vals[0, arg]
+    barg_out[0, 0] = b * block_l + arg
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_l", "interpret"))
+def rbf_row_wss_pallas(X, sqn, G, alpha, L, U, xq, scalars,
+                       *, block_l: int = 1024, interpret: bool = False):
+    """Launch pass A.  All vector inputs must be padded to a multiple of
+    ``block_l`` (the ops wrapper does this).  ``scalars`` is the packed
+    (1, 8) f32 array [sqq, a_i, L_i, U_i, g_i, gamma, use_exact, i_idx].
+
+    Returns (k_i (l,), block_max (nb,), block_arg (nb,)).
+    """
+    lpad, d = X.shape
+    assert lpad % block_l == 0, (lpad, block_l)
+    nb = lpad // block_l
+    dtype = X.dtype
+
+    row2 = lambda a: a.reshape(1, lpad)
+    vec_spec = pl.BlockSpec((1, block_l), lambda b: (0, b))
+    out_shapes = (
+        jax.ShapeDtypeStruct((1, lpad), dtype),      # k_i
+        jax.ShapeDtypeStruct((1, nb), dtype),        # block max
+        jax.ShapeDtypeStruct((1, nb), jnp.int32),    # block arg
+    )
+    k, bmax, barg = pl.pallas_call(
+        functools.partial(_kernel, block_l=block_l),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b: (0, 0)),          # xq
+            pl.BlockSpec((1, 8), lambda b: (0, 0)),          # scalars
+            pl.BlockSpec((block_l, d), lambda b: (b, 0)),    # X
+            vec_spec, vec_spec, vec_spec, vec_spec, vec_spec,
+        ],
+        out_specs=[
+            vec_spec,
+            pl.BlockSpec((1, 1), lambda b: (0, b)),
+            pl.BlockSpec((1, 1), lambda b: (0, b)),
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(xq.reshape(1, d), scalars, X, row2(sqn), row2(G), row2(alpha),
+      row2(L), row2(U))
+    return k[0], bmax[0], barg[0]

@@ -1,0 +1,88 @@
+"""Pass B Pallas kernel: fused k_j recompute + gradient update + next i-pick.
+
+The second row k_j is computed tile-by-tile in VMEM and is *never written to
+HBM* — it only feeds the update G <- G - mu (k_i - k_j) in-register.  The
+same pass emits the per-block first-order argmax over I_up(alpha_new) (the
+next iteration's i-selection) and both KKT gap endpoints, so the stopping
+rule costs no extra pass over G.
+
+HBM traffic per iteration for the whole solver (pass A + pass B):
+read X twice, read G twice, write G once, write k_i once, plus the (1, BL)
+mask vectors — i.e. ~2*l*d + 7*l elements, vs ~2*l*d + 12*l for the naive
+separate row/update/argmax graph.  For small d (the paper's datasets have
+d <= 60) the fusion saves ~40% of HBM bytes; the structural win is fewer
+kernel launches and no HBM round-trip for gains/k_j.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, ki_ref, alpha_ref,
+            L_ref, U_ref, G_out, bmax_out, barg_out, bmin_out,
+            *, block_l: int):
+    b = pl.program_id(0)
+    # scalars: [sqq_j, mu, gamma]
+    sqq = scal_ref[0, 0]
+    mu = scal_ref[0, 1]
+    gamma = scal_ref[0, 2]
+
+    x = X_ref[...]
+    qv = xq_ref[...]
+    prod = jax.lax.dot_general(x, qv, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.promote_types(x.dtype, jnp.float32))
+    d2 = sqq + sqn_ref[...] - 2.0 * prod.reshape(1, block_l)
+    k_j = jnp.exp(-gamma * jnp.maximum(d2, 0.0))
+
+    G_new = G_ref[...] - mu * (ki_ref[...] - k_j)
+    G_out[...] = G_new.astype(G_out.dtype)
+
+    alpha = alpha_ref[...]
+    up = alpha < U_ref[...]
+    dn = alpha > L_ref[...]
+    vals_up = jnp.where(up, G_new, -jnp.inf)
+    arg = jnp.argmax(vals_up[0]).astype(jnp.int32)
+    bmax_out[0, 0] = vals_up[0, arg]
+    barg_out[0, 0] = b * block_l + arg
+    bmin_out[0, 0] = jnp.min(jnp.where(dn, G_new, jnp.inf))
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def rbf_update_wss_pallas(X, sqn, G, k_i, alpha_new, L, U, xq_j, scalars,
+                          *, block_l: int = 1024, interpret: bool = False):
+    """Launch pass B.  ``scalars`` is the packed (1, 3) f32 array
+    [sqq_j, mu, gamma].  Returns (G_new, bmax_up, barg_up, bmin_dn)."""
+    lpad, d = X.shape
+    assert lpad % block_l == 0, (lpad, block_l)
+    nb = lpad // block_l
+    dtype = X.dtype
+
+    row2 = lambda a: a.reshape(1, lpad)
+    vec_spec = pl.BlockSpec((1, block_l), lambda b: (0, b))
+    blk_spec = pl.BlockSpec((1, 1), lambda b: (0, b))
+    out_shapes = (
+        jax.ShapeDtypeStruct((1, lpad), dtype),
+        jax.ShapeDtypeStruct((1, nb), dtype),
+        jax.ShapeDtypeStruct((1, nb), jnp.int32),
+        jax.ShapeDtypeStruct((1, nb), dtype),
+    )
+    G_new, bmax, barg, bmin = pl.pallas_call(
+        functools.partial(_kernel, block_l=block_l),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b: (0, 0)),
+            pl.BlockSpec((1, 3), lambda b: (0, 0)),
+            pl.BlockSpec((block_l, d), lambda b: (b, 0)),
+            vec_spec, vec_spec, vec_spec, vec_spec, vec_spec, vec_spec,
+        ],
+        out_specs=[vec_spec, blk_spec, blk_spec, blk_spec],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(xq_j.reshape(1, d), scalars, X, row2(sqn), row2(G), row2(k_i),
+      row2(alpha_new), row2(L), row2(U))
+    return G_new[0], bmax[0], barg[0], bmin[0]

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TAU = 1e-12
+
+
+def rbf_row(X, sqn, xq, gamma):
+    """k(x_q, X) for one query row."""
+    d2 = jnp.dot(xq, xq) + sqn - 2.0 * (X @ xq)
+    return jnp.exp(-gamma * jnp.maximum(d2, 0.0))
+
+
+def rbf_row_wss(X, sqn, G, alpha, L, U, xq, a_i, L_i, U_i, g_i, i_idx,
+                use_exact, gamma):
+    """Pass A oracle: kernel row k_i + WSS2 j-selection.
+
+    Returns (k_i, j, gain_j).  RBF diag == 1 is hardcoded (paper setting).
+    """
+    k = rbf_row(X, sqn, xq, gamma)
+    l = g_i - G
+    q = jnp.maximum(2.0 - 2.0 * k, TAU)
+    g_tilde = 0.5 * l * l / q
+    lo = jnp.maximum(L_i - a_i, alpha - U)
+    hi = jnp.minimum(U_i - a_i, alpha - L)
+    mu_c = jnp.clip(l / q, lo, hi)
+    g_exact = l * mu_c - 0.5 * q * mu_c * mu_c
+    gains = jnp.where(use_exact, g_exact, g_tilde)
+    idx = jnp.arange(X.shape[0], dtype=jnp.int32)
+    mask = (alpha > L) & (l > 0) & (idx != i_idx)
+    vals = jnp.where(mask, gains, -jnp.inf)
+    j = jnp.argmax(vals).astype(jnp.int32)
+    return k, j, vals[j]
+
+
+def rbf_update_wss(X, sqn, G, k_i, xq_j, mu, alpha_new, L, U, gamma):
+    """Pass B oracle: row k_j + gradient update + next i-pick + gap ends.
+
+    Returns (G_new, i_next, g_i_next, g_dn).
+    """
+    k_j = rbf_row(X, sqn, xq_j, gamma)
+    G_new = G - mu * (k_i - k_j)
+    up = alpha_new < U
+    dn = alpha_new > L
+    vals_up = jnp.where(up, G_new, -jnp.inf)
+    i_next = jnp.argmax(vals_up).astype(jnp.int32)
+    g_dn = jnp.min(jnp.where(dn, G_new, jnp.inf))
+    return G_new, i_next, vals_up[i_next], g_dn
+
+
+def gram(X, gamma):
+    """Full RBF Gram matrix."""
+    sq = jnp.sum(X * X, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (X @ X.T)
+    return jnp.exp(-gamma * jnp.maximum(d2, 0.0))
+
+
+def gram_cross(X1, X2, gamma):
+    """Cross Gram matrix k(X1, X2) -> (l1, l2)."""
+    s1 = jnp.sum(X1 * X1, axis=-1)
+    s2 = jnp.sum(X2 * X2, axis=-1)
+    d2 = s1[:, None] + s2[None, :] - 2.0 * (X1 @ X2.T)
+    return jnp.exp(-gamma * jnp.maximum(d2, 0.0))

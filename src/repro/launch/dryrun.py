@@ -1,0 +1,319 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+
+# The two lines above MUST run before any jax import (jax locks the device
+# count on first init).  Everything below is normal code.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import math              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Optional, Tuple  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, get_config, get_shape       # noqa: E402
+from repro.configs.base import (SHAPES, ModelConfig, ServeConfig,  # noqa: E402
+                                ShapeConfig, TrainConfig)
+from repro.launch.mesh import make_production_mesh            # noqa: E402
+from repro.launch import hlo_analysis                         # noqa: E402
+from repro.launch import roofline as rf                      # noqa: E402
+from repro.models import registry                             # noqa: E402
+from repro.sharding import (DEFAULT_RULES, Rules, axis_rules,  # noqa: E402
+                            tree_shardings)
+from repro.train import optimizer as opt_mod                  # noqa: E402
+from repro.train.train_step import TrainState, make_train_step  # noqa: E402
+from repro.train.serve_step import make_prefill, make_serve_step  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces a JSON artifact with:
+  * compile wall-time, per-device HLO flops/bytes (cost_analysis),
+  * collective operand bytes parsed from the optimized HLO,
+  * memory_analysis (or an analytic params+opt+cache estimate when the CPU
+    backend doesn't implement it),
+  * the derived roofline terms (launch/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --mesh single --arch all --shape all
+  python -m repro.launch.dryrun --mesh multi --arch grok-1-314b \
+      --shape train_4k --out artifacts/dryrun
+"""
+
+
+def _sds_with(sh_tree, sds_tree):
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                             sharding=sh),
+        sds_tree, sh_tree)
+
+
+def choose_microbatches(shape: ShapeConfig, cfg: ModelConfig,
+                        dp: int) -> int:
+    """Keep per-device microbatch activation footprints sane: target ~4k
+    tokens per device per microbatch for d_model >= 4096, 16k below."""
+    b_dev = max(1, shape.global_batch // dp)
+    target_tokens = 4096 if cfg.d_model >= 4096 else 16384
+    mb_rows = max(1, target_tokens // shape.seq_len)
+    m = max(1, math.ceil(b_dev / mb_rows))
+    while b_dev % m != 0:
+        m += 1
+    return min(m, b_dev)
+
+
+def dp_size(mesh) -> int:
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    return dp
+
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh, rules: Rules):
+    tc = TrainConfig(seq_len=shape.seq_len, global_batch=shape.global_batch,
+                     microbatches=choose_microbatches(shape, cfg,
+                                                      dp_size(mesh)),
+                     remat="full")
+    pdt = jnp.bfloat16
+    p_sds = jax.eval_shape(
+        lambda: registry.init_params(jax.random.PRNGKey(0), cfg, pdt))
+    p_log = registry.param_logical(cfg)
+    p_sh = tree_shardings(p_log, p_sds, mesh, rules)
+
+    o_sds = jax.eval_shape(lambda p: opt_mod.init(p, tc), p_sds)
+    rep = NamedSharding(mesh, P())
+    o_sh = opt_mod.AdamWState(step=rep, m=p_sh, v=p_sh)
+
+    state_sds = TrainState(params=_sds_with(p_sh, p_sds),
+                           opt=opt_mod.AdamWState(
+                               step=jax.ShapeDtypeStruct((), jnp.int32,
+                                                         sharding=rep),
+                               m=_sds_with(p_sh, o_sds.m),
+                               v=_sds_with(p_sh, o_sds.v)),
+                           ef=None,
+                           step=jax.ShapeDtypeStruct((), jnp.int32,
+                                                     sharding=rep))
+    b_sds = registry.train_input_specs(cfg, shape)
+    b_log = registry.train_input_logical(cfg)
+    b_sh = tree_shardings(b_log, b_sds, mesh, rules)
+    batch_sds = _sds_with(b_sh, b_sds)
+
+    state_sh = TrainState(params=p_sh, opt=o_sh, ef=None, step=rep)
+    metrics_sh = {"loss": rep, "grad_norm": rep, "lr": rep}
+    fn = jax.jit(make_train_step(cfg, tc),
+                 out_shardings=(state_sh, metrics_sh))
+    return fn, (state_sds, batch_sds), dataclasses.asdict(tc)
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh, rules: Rules):
+    sc = ServeConfig(seq_len=shape.seq_len, batch=shape.global_batch)
+    pdt = jnp.bfloat16
+    p_sds = jax.eval_shape(
+        lambda: registry.init_params(jax.random.PRNGKey(0), cfg, pdt))
+    p_sh = tree_shardings(registry.param_logical(cfg), p_sds, mesh, rules)
+    b_sds = registry.train_input_specs(cfg, shape)
+    b_sds.pop("labels")
+    b_log = registry.train_input_logical(cfg)
+    b_log.pop("labels")
+    b_sh = tree_shardings(b_log, b_sds, mesh, rules)
+    fn = jax.jit(make_prefill(cfg, sc))
+    return fn, (_sds_with(p_sh, p_sds), _sds_with(b_sh, b_sds)), \
+        dataclasses.asdict(sc)
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh, rules: Rules):
+    sc = ServeConfig(seq_len=shape.seq_len, batch=shape.global_batch)
+    pdt = jnp.bfloat16
+    p_sds = jax.eval_shape(
+        lambda: registry.init_params(jax.random.PRNGKey(0), cfg, pdt))
+    p_sh = tree_shardings(registry.param_logical(cfg), p_sds, mesh, rules)
+    c_sds = registry.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    c_sh = tree_shardings(registry.cache_logical(cfg), c_sds, mesh, rules)
+    tok_sds = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1), jnp.int32,
+        sharding=NamedSharding(mesh, rf_spec_batch(shape, mesh, rules)))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, P()))
+    # donate the cache: the ring update aliases in place on device
+    fn = jax.jit(make_serve_step(cfg, sc), donate_argnums=(1,))
+    return fn, (_sds_with(p_sh, p_sds), _sds_with(c_sh, c_sds), tok_sds,
+                pos_sds), dataclasses.asdict(sc)
+
+
+def rf_spec_batch(shape: ShapeConfig, mesh, rules: Rules):
+    from repro.sharding import spec_for
+    return spec_for((shape.global_batch, 1), ("batch", None), mesh, rules)
+
+
+def analytic_bytes_per_device(args_sds) -> float:
+    """Fallback memory estimate: per-device bytes of all inputs (params,
+    opt state, cache, batch) under their shardings.  Activations excluded
+    (reported separately by memory_analysis when available)."""
+    total = 0
+    for leaf in jax.tree.leaves(args_sds):
+        if leaf.sharding is not None:
+            shard_shape = leaf.sharding.shard_shape(leaf.shape)
+        else:
+            shard_shape = leaf.shape
+        total += int(np.prod(shard_shape)) * leaf.dtype.itemsize
+    return float(total)
+
+
+def active_params(cfg: ModelConfig) -> int:
+    if cfg.family == "moe":
+        dense_like = dataclasses.replace(
+            cfg, n_experts=cfg.top_k,
+            name=cfg.name + "-active")
+        return dense_like.param_count()
+    return cfg.param_count()
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             rules: Rules = DEFAULT_RULES,
+             out_dir: Optional[str] = None) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    chips = int(np.prod(list(mesh.shape.values())))
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "chips": chips, "kind": shape.kind, "ok": False}
+
+    ok, reason = registry.supports_cell(cfg, shape)
+    if not ok:
+        record.update(skipped=True, skip_reason=reason, ok=True)
+        _write(record, out_dir)
+        return record
+
+    try:
+        build = {"train": build_train, "prefill": build_prefill,
+                 "decode": build_decode}[shape.kind]
+        with axis_rules(mesh, rules):
+            fn, args, settings = build(cfg, shape, mesh, rules)
+            t0 = time.monotonic()
+            lowered = fn.lower(*args)
+            t_lower = time.monotonic() - t0
+            t0 = time.monotonic()
+            compiled = lowered.compile()
+            t_compile = time.monotonic() - t0
+
+        # raw XLA numbers (recorded for reference; while bodies counted
+        # once — see hlo_analysis docstring)
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            xla_flops = float(ca.get("flops", 0.0))
+            xla_bytes = float(ca.get("bytes accessed", 0.0))
+        except Exception as e:
+            xla_flops, xla_bytes = 0.0, 0.0
+
+        try:
+            mem = compiled.memory_analysis()
+            mem_str = str(mem) if mem is not None else None
+        except Exception:
+            mem_str = None
+
+        # trip-count-corrected per-device costs from the optimized HLO
+        t0 = time.monotonic()
+        cost = hlo_analysis.analyze(compiled.as_text())
+        t_analyze = time.monotonic() - t0
+
+        tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind != "decode" else 1)
+        mf = rf.model_flops(cfg.param_count(), active_params(cfg), tokens,
+                            shape.kind)
+        roof = rf.Roofline(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+            hlo_flops_per_device=cost.flops,
+            hlo_bytes_per_device=cost.bytes,
+            collective_bytes_per_device=cost.collective_bytes,
+            model_flops_global=mf,
+            bytes_per_device_peak=None)
+
+        record.update(
+            ok=True, skipped=False, settings=settings,
+            time_lower_s=t_lower, time_compile_s=t_compile,
+            time_analyze_s=t_analyze,
+            hlo_flops=cost.flops, hlo_bytes=cost.bytes,
+            xla_cost_analysis={"flops": xla_flops, "bytes": xla_bytes,
+                               "caveat": "while bodies counted once"},
+            collectives={**cost.collectives,
+                         "total": cost.collective_bytes,
+                         "counts": cost.collective_counts},
+            loops=cost.loops,
+            memory_analysis=mem_str,
+            input_bytes_per_device=analytic_bytes_per_device(args),
+            param_count=cfg.param_count(),
+            active_param_count=active_params(cfg),
+            roofline=roof.to_dict())
+    except Exception as e:
+        record.update(error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    _write(record, out_dir)
+    return record
+
+
+def _write(record: dict, out_dir: Optional[str]):
+    if out_dir is None:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{record['mesh']}__{record['arch']}__{record['shape']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(record, f, indent=2, default=str)
+
+
+def make_mesh_by_name(name: str):
+    if name == "single":
+        return make_production_mesh(multi_pod=False)
+    if name == "multi":
+        return make_production_mesh(multi_pod=True)
+    # custom "NxM" or "PxNxM" (small test meshes)
+    dims = tuple(int(x) for x in name.split("x"))
+    axes = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
+    return jax.make_mesh(dims, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,)
+                         * len(dims))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=None)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    mesh = make_mesh_by_name(args.mesh)
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = [s.name for s in SHAPES] if args.shape == "all" \
+        else args.shape.split(",")
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            t0 = time.monotonic()
+            rec = run_cell(arch, shape, mesh, args.mesh, DEFAULT_RULES,
+                           args.out)
+            status = ("SKIP" if rec.get("skipped")
+                      else "OK" if rec.get("ok") else "FAIL")
+            extra = ""
+            if rec.get("ok") and not rec.get("skipped"):
+                r = rec["roofline"]
+                extra = (f" dominant={r['dominant']}"
+                         f" frac={r['roofline_fraction']:.3f}"
+                         f" compile={rec['time_compile_s']:.1f}s")
+            if status == "FAIL":
+                extra = " " + rec.get("error", "")[:200]
+            print(f"[{status}] {arch} x {shape} x {args.mesh}"
+                  f" ({time.monotonic() - t0:.1f}s){extra}", flush=True)
+            results.append(rec)
+
+    n_fail = sum(1 for r in results if not r.get("ok"))
+    print(f"\n{len(results)} cells, {n_fail} failures", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

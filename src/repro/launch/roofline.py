@@ -1,0 +1,157 @@
+"""Roofline derivation from compiled dry-run artifacts.
+
+Terms (v5e hardware constants, per the brief):
+
+    compute term    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+    memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective term = collective_bytes / (chips x 50e9 B/s ICI link)
+
+``compiled.cost_analysis()`` supplies per-device FLOPs/bytes (the SPMD
+module is a per-device program).  collective bytes are parsed from the
+post-optimization HLO text: we sum the *operand* sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction (per-device shapes), which is the brief's convention.
+MODEL_FLOPS uses the 6ND / 2ND convention (attention flops excluded), so
+MODEL_FLOPS / HLO_FLOPs exposes remat recompute and dispatch overheads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# shapes like f32[8,128]{1,0} or bf16[4096]
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of collective ops in (post-SPMD) HLO text."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*[^=]*?\b([a-z0-9-]+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(1)
+        # normalize e.g. all-reduce-start / all-gather-done
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start"):
+                base = c
+                break
+        if base is None:
+            continue
+        # operand shapes: everything inside the call parens
+        args = stripped[stripped.index("(") + 1:]
+        total = sum(_shape_bytes(d, dims)
+                    for d, dims in _SHAPE_RE.findall(args))
+        if total == 0:
+            # fall back to the output shape (lhs)
+            lhs = stripped[:stripped.index("=")]
+            rhs_head = stripped[stripped.index("="):stripped.index("(")]
+            total = sum(_shape_bytes(d, dims)
+                        for d, dims in _SHAPE_RE.findall(rhs_head))
+        out[base] += total
+        counts[base] += 1
+    out_all = dict(out)
+    out_all["total"] = sum(out.values())
+    out_all["counts"] = counts
+    return out_all
+
+
+def model_flops(n_params: int, n_active_params: int, tokens: int,
+                kind: str) -> float:
+    """6ND (train) / 2ND (inference) with active params for MoE."""
+    n = n_active_params or n_params
+    return (6.0 if kind == "train" else 2.0) * n * tokens
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_global: float
+    bytes_per_device_peak: Optional[float]  # memory_analysis, if available
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.hlo_flops_per_device * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak compute achievable at the modeled bottleneck:
+        (useful compute time) / (dominant term time)."""
+        useful_s = (self.model_flops_global / self.chips) / PEAK_FLOPS
+        bound = max(self.compute_s, self.memory_s, self.collective_s)
+        return useful_s / bound if bound else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, dominant=self.dominant,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def render_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | MODEL/HLO | roofline_frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)

@@ -1,0 +1,90 @@
+"""Production serving launcher: batched prefill + decode loop on a mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
+        --smoke --batch 4 --prompt-len 32 --tokens 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.configs.base import ServeConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import registry
+from repro.sharding import DEFAULT_RULES, axis_rules
+from repro.train.serve_step import make_prefill, make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    fp32 = jax.default_backend() == "cpu"
+    dt = "float32" if fp32 else "bfloat16"
+    sc = ServeConfig(seq_len=args.prompt_len + args.tokens,
+                     batch=args.batch, param_dtype=dt, compute_dtype=dt,
+                     kv_dtype=dt)
+    mesh = make_production_mesh() if args.production_mesh \
+        else make_host_mesh(len(jax.devices()), 1)
+
+    with axis_rules(mesh, DEFAULT_RULES):
+        params = registry.init_params(
+            jax.random.PRNGKey(0), cfg,
+            jnp.float32 if fp32 else jnp.bfloat16)
+        rng = np.random.default_rng(0)
+        prompt = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
+            jnp.int32)}
+        if cfg.family == "vlm":
+            prompt["patches"] = jnp.asarray(
+                rng.normal(size=(args.batch, cfg.vision_tokens,
+                                 cfg.d_model)) * 0.02,
+                jnp.float32 if fp32 else jnp.bfloat16)
+        if cfg.family == "encdec":
+            prompt["frames"] = jnp.asarray(
+                rng.normal(size=(args.batch, cfg.encoder_seq,
+                                 cfg.d_model)) * 0.02,
+                jnp.float32 if fp32 else jnp.bfloat16)
+
+        prefill = jax.jit(make_prefill(cfg, sc))
+        step = jax.jit(make_serve_step(cfg, sc), donate_argnums=(1,))
+
+        t0 = time.time()
+        logits, cache = prefill(params, prompt)
+        jax.block_until_ready(logits)
+        t_prefill = time.time() - t0
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out = [tok]
+        t0 = time.time()
+        for t in range(args.tokens - 1):
+            logits, cache = step(params, cache, tok,
+                                 jnp.asarray(args.prompt_len + t,
+                                             jnp.int32))
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
+        gen = jnp.concatenate(out, axis=1)
+        print(f"arch={cfg.name} batch={args.batch}")
+        print(f"prefill {args.prompt_len} tok: {t_prefill:.2f}s; decode "
+              f"{args.tokens} tok: {t_decode:.2f}s "
+              f"({args.batch * args.tokens / max(t_decode, 1e-9):.1f} "
+              f"tok/s)")
+        print("first sequence:", np.asarray(gen[0])[:12], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Production training launcher.
+
+Builds the mesh, shards state and data by the logical rules, and runs the
+fault-tolerant step loop (checkpoint/resume/straggler monitor).  On the
+CPU container this runs reduced configs end-to-end; on a pod the same
+entrypoint runs the full configs (device count and mesh shape are the only
+differences — `make_production_mesh`).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --smoke --steps 100 --ckpt /tmp/ck
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, \
+    restore_checkpoint
+from repro.configs import get_config, get_smoke
+from repro.configs.base import TrainConfig
+from repro.data import SyntheticTokens, shard_batch
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import registry
+from repro.runtime import StepMonitor
+from repro.sharding import DEFAULT_RULES, axis_rules, tree_shardings
+from repro.train import optimizer as opt_mod
+from repro.train.train_step import TrainState, init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default="/tmp/repro_launch_ckpt")
+    ap.add_argument("--save-every", type=int, default=25)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the (16,16) mesh (needs >=256 devices)")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    fp32 = jax.default_backend() == "cpu"
+    tc = TrainConfig(
+        seq_len=args.seq, global_batch=args.batch,
+        microbatches=args.microbatches,
+        param_dtype="float32" if fp32 else "bfloat16",
+        compute_dtype="float32" if fp32 else "bfloat16",
+        accum_dtype="float32", remat="full")
+
+    if args.production_mesh:
+        mesh = make_production_mesh()
+    else:
+        n = len(jax.devices())
+        mesh = make_host_mesh(n, 1)
+    print(f"mesh: {dict(mesh.shape)}  arch: {cfg.name} "
+          f"(~{cfg.param_count() / 1e6:.0f}M params)")
+
+    with axis_rules(mesh, DEFAULT_RULES):
+        state = init_state(jax.random.PRNGKey(0), cfg, tc)
+        p_sh = tree_shardings(registry.param_logical(cfg), state.params,
+                              mesh, DEFAULT_RULES)
+        rep = NamedSharding(mesh, P())
+        state = TrainState(
+            params=jax.device_put(state.params, p_sh),
+            opt=opt_mod.AdamWState(
+                step=jax.device_put(state.opt.step, rep),
+                m=jax.device_put(state.opt.m, p_sh),
+                v=jax.device_put(state.opt.v, p_sh)),
+            ef=None, step=jax.device_put(state.step, rep))
+        step_fn = jax.jit(make_train_step(cfg, tc), donate_argnums=(0,))
+
+        data = SyntheticTokens(vocab=cfg.vocab, seq_len=args.seq,
+                               global_batch=args.batch)
+        ckpt = AsyncCheckpointer(args.ckpt)
+        monitor = StepMonitor()
+        start = latest_step(args.ckpt) or 0
+        if start:
+            state = restore_checkpoint(args.ckpt, start, state)
+            print(f"resumed from step {start}")
+
+        for step in range(start, args.steps):
+            batch = shard_batch(data.batch_at(step), mesh)
+            t0 = time.monotonic()
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            slow = monitor.record(time.monotonic() - t0)
+            if step % 10 == 0 or step == args.steps - 1:
+                print(f"step {step:4d}  loss {float(metrics['loss']):.4f}"
+                      f"  gnorm {float(metrics['grad_norm']):.3f}"
+                      + ("  [straggler]" if slow else ""), flush=True)
+            if (step + 1) % args.save_every == 0 or step + 1 == args.steps:
+                ckpt.save(step + 1, state)
+        ckpt.close()
+        print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Model zoo: one module per architecture family.
+
+Every model exposes the same functional interface (no framework deps):
+
+    init_params(rng, cfg, dtype)        -> params pytree (stacked layers)
+    param_logical(cfg)                  -> matching tree of sharding.logical
+    apply(params, cfg, batch, ...)      -> logits           (train forward)
+    init_cache(cfg, batch, max_seq, dt) -> decode cache/state
+    prefill(params, cfg, tokens)        -> (logits, cache)
+    decode_step(params, cfg, cache, tok, pos) -> (logits, cache)
+
+Families: dense GQA decoder (transformer.py), MoE top-2 (moe.py), Mamba2
+SSD (ssm.py), RG-LRU + local-attention hybrid (rglru.py), encoder-decoder
+(encdec.py), ViT-stub VLM (vlm.py).
+"""
+
+from repro.models import registry

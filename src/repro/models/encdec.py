@@ -1,0 +1,261 @@
+"""Whisper-class encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the harness: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, d).  Encoder: bidirectional
+self-attention; decoder: causal self-attention + cross-attention.
+Sinusoidal absolute positions (whisper uses no RoPE).  Decode caches the
+decoder self-attn ring + the once-computed encoder K/V per layer.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.transformer import stack_logical
+from repro.sharding import constrain, logical as lg
+
+
+class EncBlockParams(NamedTuple):
+    ln1: jax.Array
+    attn: L.AttnParams
+    ln2: jax.Array
+    mlp: L.MLPParams
+
+
+class DecBlockParams(NamedTuple):
+    ln1: jax.Array
+    self_attn: L.AttnParams
+    ln_x: jax.Array
+    cross_attn: L.AttnParams
+    ln2: jax.Array
+    mlp: L.MLPParams
+
+
+class EncDecParams(NamedTuple):
+    embed: jax.Array               # (V, d) decoder token embeddings
+    enc_blocks: EncBlockParams     # stacked (Le, ...)
+    enc_ln_f: jax.Array
+    dec_blocks: DecBlockParams     # stacked (Ld, ...)
+    ln_f: jax.Array
+    unembed: Optional[jax.Array]
+
+
+class EncDecCache(NamedTuple):
+    self_kv: L.KVCache             # stacked (Ld, ...) decoder ring
+    cross_k: jax.Array             # (Ld, B, S_enc, KH, hd)
+    cross_v: jax.Array
+
+
+def sinusoidal(S, d, dtype=jnp.float32):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                           axis=-1).astype(dtype)
+
+
+def _enc_block_init(rng, cfg, dtype):
+    k1, k2 = jax.random.split(rng)
+    d = cfg.d_model
+    return EncBlockParams(ln1=jnp.zeros((d,), dtype),
+                          attn=L.attn_init(k1, cfg, dtype),
+                          ln2=jnp.zeros((d,), dtype),
+                          mlp=L.mlp_init(k2, cfg, dtype))
+
+
+def _dec_block_init(rng, cfg, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d = cfg.d_model
+    return DecBlockParams(ln1=jnp.zeros((d,), dtype),
+                          self_attn=L.attn_init(k1, cfg, dtype),
+                          ln_x=jnp.zeros((d,), dtype),
+                          cross_attn=L.attn_init(k2, cfg, dtype),
+                          ln2=jnp.zeros((d,), dtype),
+                          mlp=L.mlp_init(k3, cfg, dtype))
+
+
+def init_params(rng, cfg, dtype=jnp.float32) -> EncDecParams:
+    ke, kb, kd, ku = jax.random.split(rng, 4)
+    enc = jax.vmap(lambda r: _enc_block_init(r, cfg, dtype))(
+        jax.random.split(kb, cfg.encoder_layers))
+    dec = jax.vmap(lambda r: _dec_block_init(r, cfg, dtype))(
+        jax.random.split(kd, cfg.n_layers))
+    return EncDecParams(
+        embed=L.embed_init(ke, cfg, dtype),
+        enc_blocks=enc, enc_ln_f=jnp.zeros((cfg.d_model,), dtype),
+        dec_blocks=dec, ln_f=jnp.zeros((cfg.d_model,), dtype),
+        unembed=None if cfg.tie_embeddings else L.embed_init(ku, cfg, dtype))
+
+
+def param_logical(cfg):
+    enc = EncBlockParams(ln1=lg("embed"), attn=L.attn_logical(cfg),
+                         ln2=lg("embed"), mlp=L.mlp_logical(cfg))
+    dec = DecBlockParams(ln1=lg("embed"), self_attn=L.attn_logical(cfg),
+                         ln_x=lg("embed"), cross_attn=L.attn_logical(cfg),
+                         ln2=lg("embed"), mlp=L.mlp_logical(cfg))
+    return EncDecParams(
+        embed=L.embed_logical(), enc_blocks=stack_logical(enc),
+        enc_ln_f=lg("embed"), dec_blocks=stack_logical(dec),
+        ln_f=lg("embed"),
+        unembed=None if cfg.tie_embeddings else L.embed_logical())
+
+
+def encode(params: EncDecParams, cfg, frames):
+    """frames: (B, S_enc, d) stub embeddings -> (B, S_enc, d)."""
+    S = frames.shape[1]
+    x = frames + sinusoidal(S, cfg.d_model, frames.dtype)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, blk):
+        h, _ = L.attn_apply(blk.attn, cfg,
+                            L.rms_norm(x, blk.ln1, cfg.norm_eps), positions,
+                            causal=False)
+        x = x + h
+        x = x + L.mlp_apply(blk.mlp, L.rms_norm(x, blk.ln2, cfg.norm_eps),
+                            activation="gelu")
+        return constrain(x, "batch", "seq", "embed"), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params.enc_blocks)
+    return L.rms_norm(x, params.enc_ln_f, cfg.norm_eps)
+
+
+def _cross_attend(p: L.AttnParams, cfg, x, enc_k, enc_v):
+    """Cross attention: q from x (B, S, d), k/v precomputed (B, T, KH, hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
+    if p.bq is not None:
+        q = q + p.bq
+    Sq, T = q.shape[1], enc_k.shape[1]
+    o = L.attention(q, enc_k, enc_v,
+                    jnp.arange(Sq, dtype=jnp.int32),
+                    jnp.arange(T, dtype=jnp.int32), causal=False)
+    return L.attn_out(p, o)
+
+
+def _enc_kv(p: L.AttnParams, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p.wk)
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p.wv)
+    if p.bk is not None:
+        k = k + p.bk
+        v = v + p.bv
+    return k, v
+
+
+def apply(params: EncDecParams, cfg, tokens, frames, *, remat: str = "none",
+          return_hidden: bool = False):
+    """Teacher-forced training forward: (tokens (B, S_dec), frames
+    (B, S_enc, d)) -> logits."""
+    enc_out = encode(params, cfg, frames)
+    S = tokens.shape[1]
+    x = L.embed_lookup(params.embed, tokens)
+    x = x + sinusoidal(S, cfg.d_model, x.dtype)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, blk):
+        h, _ = L.attn_apply(blk.self_attn, cfg,
+                            L.rms_norm(x, blk.ln1, cfg.norm_eps), positions,
+                            causal=True)
+        x = x + h
+        k, v = _enc_kv(blk.cross_attn, enc_out)
+        x = x + _cross_attend(blk.cross_attn, cfg,
+                              L.rms_norm(x, blk.ln_x, cfg.norm_eps), k, v)
+        x = x + L.mlp_apply(blk.mlp, L.rms_norm(x, blk.ln2, cfg.norm_eps),
+                            activation="gelu")
+        return constrain(x, "batch", "seq", "embed"), None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params.dec_blocks)
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    if return_hidden:
+        return x
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x)
+
+
+def init_cache(cfg, batch, horizon, dtype=jnp.bfloat16) -> EncDecCache:
+    Ld = cfg.n_layers
+    kv = jax.vmap(lambda _: L.kv_cache_init(
+        batch, horizon, cfg.n_kv_heads, cfg.head_dim, dtype))(
+            jnp.arange(Ld))
+    return EncDecCache(
+        self_kv=kv,
+        cross_k=jnp.zeros((Ld, batch, cfg.encoder_seq, cfg.n_kv_heads,
+                           cfg.head_dim), dtype),
+        cross_v=jnp.zeros((Ld, batch, cfg.encoder_seq, cfg.n_kv_heads,
+                           cfg.head_dim), dtype))
+
+
+def cache_logical(cfg):
+    kv = L.KVCache(
+        k=lg("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        v=lg("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        kpos=lg("layers", "kv_seq"))
+    ckv = lg("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    return EncDecCache(self_kv=kv, cross_k=ckv, cross_v=ckv)
+
+
+def prefill(params: EncDecParams, cfg, tokens, frames, horizon,
+            kv_dtype=jnp.bfloat16):
+    """Encode + teacher-forced decoder pass building both caches."""
+    enc_out = encode(params, cfg, frames)
+    S = tokens.shape[1]
+    x = L.embed_lookup(params.embed, tokens)
+    x = x + sinusoidal(S, cfg.d_model, x.dtype)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, blk):
+        h, (k, v) = L.attn_apply(blk.self_attn, cfg,
+                                 L.rms_norm(x, blk.ln1, cfg.norm_eps),
+                                 positions, causal=True)
+        x = x + h
+        ck, cv = _enc_kv(blk.cross_attn, enc_out)
+        x = x + _cross_attend(blk.cross_attn, cfg,
+                              L.rms_norm(x, blk.ln_x, cfg.norm_eps), ck, cv)
+        x = x + L.mlp_apply(blk.mlp, L.rms_norm(x, blk.ln2, cfg.norm_eps),
+                            activation="gelu")
+        kv = L.kv_cache_from_prefill(k, v, positions, horizon, kv_dtype)
+        return (constrain(x, "batch", "seq", "embed"),
+                (kv, ck.astype(kv_dtype), cv.astype(kv_dtype)))
+
+    x, (kv, ck, cv) = jax.lax.scan(jax.checkpoint(body), x,
+                                   params.dec_blocks)
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x), EncDecCache(self_kv=kv, cross_k=ck,
+                                                cross_v=cv)
+
+
+def decode_step(params: EncDecParams, cfg, cache: EncDecCache, tokens, pos):
+    x = jnp.take(params.embed, tokens, axis=0)
+    x = x + sinusoidal_at(pos, cfg.d_model, x.dtype)
+
+    def body(x, xs):
+        blk, kv, ck, cv = xs
+        h, kv = L.attn_decode(blk.self_attn, cfg,
+                              L.rms_norm(x, blk.ln1, cfg.norm_eps), kv, pos)
+        x = x + h
+        x = x + _cross_attend(blk.cross_attn, cfg,
+                              L.rms_norm(x, blk.ln_x, cfg.norm_eps),
+                              ck.astype(x.dtype), cv.astype(x.dtype))
+        x = x + L.mlp_apply(blk.mlp, L.rms_norm(x, blk.ln2, cfg.norm_eps),
+                            activation="gelu")
+        return x, kv
+
+    x, kv = jax.lax.scan(body, x, (params.dec_blocks, cache.self_kv,
+                                   cache.cross_k, cache.cross_v))
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x), EncDecCache(self_kv=kv,
+                                                cross_k=cache.cross_k,
+                                                cross_v=cache.cross_v)
+
+
+def sinusoidal_at(pos, d, dtype):
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10_000.0, 2.0 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]).astype(dtype)

@@ -1,0 +1,198 @@
+"""Flash attention in pure JAX with a static triangle schedule.
+
+§Perf hillclimb change (EXPERIMENTS.md): the baseline chunked attention
+computes every (q-chunk, kv-chunk) pair — rectangular compute — and lets
+each score tile round-trip HBM ~6x (dot out, mask, exp, row-sums, pv dot).
+This implementation:
+
+  * enumerates only the *needed* chunk pairs at trace time (causal lower
+    triangle, optionally window-banded) — a single ``lax.scan`` over a
+    static pair list, so FLOPs and traffic drop ~2x for causal and more
+    for windowed attention, and the HLO trip counts stay static (the
+    roofline analyzer sees the true counts);
+  * wraps forward+backward in ``jax.custom_vjp`` with the standard flash
+    recomputation, so no O(S^2) residuals are ever saved — the backward
+    replays the same static pair schedule;
+  * keeps q/k/v in their storage dtype (bf16 on TPU) with f32 on-tile
+    accumulation via ``preferred_element_type`` — no f32 copies of the
+    inputs are materialized.
+
+Shapes: q (B, Sq, KH, G, D); k, v (B, Skv, KH, D); GQA grouped, no kv-head
+repetition.  Positions are absolute.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _pairs(nq: int, nk: int, causal: bool, window: int, cq: int, ck: int,
+           q_start_chunk: int = 0):
+    """Static (qi, ki) chunk-pair schedule.
+
+    q chunk qi covers absolute positions [ (q_start_chunk+qi)*cq, +cq );
+    causal keeps ki*ck <= q_end; window drops pairs entirely out of range.
+    """
+    out = []
+    for qi in range(nq):
+        q_lo = (q_start_chunk + qi) * cq
+        q_hi = q_lo + cq - 1
+        for ki in range(nk):
+            k_lo = ki * ck
+            k_hi = k_lo + ck - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window > 0 and k_hi < q_lo - window + 1 - (cq - 1):
+                continue
+            out.append((qi, ki))
+    return out
+
+
+def _tile_mask(qp, kp, causal: bool, window: int):
+    m = jnp.ones((qp.shape[0], kp.shape[0]), bool)
+    if causal:
+        m &= qp[:, None] >= kp[None, :]
+    if window > 0:
+        m &= qp[:, None] - kp[None, :] < window
+    return m
+
+
+def _fwd_scan(q, k, v, q_pos, k_pos, causal, window, cq, ck):
+    B, Sq, KH, G, D = q.shape
+    Skv = k.shape[1]
+    nq, nk = Sq // cq, Skv // ck
+    scale = 1.0 / math.sqrt(D)
+
+    qs = q.reshape(B, nq, cq, KH, G, D)
+    ks = k.reshape(B, nk, ck, KH, D)
+    vs = v.reshape(B, nk, ck, KH, D)
+    qps = q_pos.reshape(nq, cq)
+    kps = k_pos.reshape(nk, ck)
+
+    pairs = _pairs(nq, nk, causal, window, cq, ck)
+    qi_arr = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    ki_arr = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    m0 = jnp.full((nq, B, KH, G, cq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((nq, B, KH, G, cq), jnp.float32)
+    a0 = jnp.zeros((nq, B, KH, G, cq, D), jnp.float32)
+
+    def body(carry, idx):
+        m, l, acc = carry
+        qi, ki = idx
+        qb = jnp.take(qs, qi, axis=1)          # (B, cq, KH, G, D)
+        kb = jnp.take(ks, ki, axis=1)          # (B, ck, KH, D)
+        vb = jnp.take(vs, ki, axis=1)
+        qp = jnp.take(qps, qi, axis=0)
+        kp = jnp.take(kps, ki, axis=0)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(_tile_mask(qp, kp, causal, window)[None, None, None],
+                      s, NEG)
+        mi = jnp.take(m, qi, axis=0)
+        li = jnp.take(l, qi, axis=0)
+        ai = jnp.take(acc, qi, axis=0)
+        m_new = jnp.maximum(mi, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(mi - m_new)
+        l_new = li * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        a_new = ai * corr[..., None] + pv
+        return (m.at[qi].set(m_new), l.at[qi].set(l_new),
+                acc.at[qi].set(a_new)), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (qi_arr, ki_arr))
+    l_safe = jnp.maximum(l, 1e-37)
+    out = acc / l_safe[..., None]
+    # (nq, B, KH, G, cq, D) -> (B, nq, cq, KH, G, D) -> (B, Sq, KH, G, D)
+    out = jnp.transpose(out, (1, 0, 4, 2, 3, 5)).reshape(B, Sq, KH, G, D)
+    lse = m + jnp.log(l_safe)                  # (nq, B, KH, G, cq)
+    return out.astype(q.dtype), lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def flash_attention(q, k, v, q_pos, k_pos, causal=True, window=0,
+                    chunk_q=512, chunk_k=512):
+    out, _ = _fwd_scan(q, k, v, q_pos, k_pos, causal, window, chunk_q,
+                       chunk_k)
+    return out
+
+
+def _flash_fwd(q, k, v, q_pos, k_pos, causal, window, cq, ck):
+    out, lse = _fwd_scan(q, k, v, q_pos, k_pos, causal, window, cq, ck)
+    return out, (q, k, v, q_pos, k_pos, out, lse)
+
+
+def _flash_bwd(causal, window, cq, ck, res, do):
+    q, k, v, q_pos, k_pos, out, lse = res
+    B, Sq, KH, G, D = q.shape
+    Skv = k.shape[1]
+    nq, nk = Sq // cq, Skv // ck
+    scale = 1.0 / math.sqrt(D)
+
+    qs = q.reshape(B, nq, cq, KH, G, D)
+    ks = k.reshape(B, nk, ck, KH, D)
+    vs = v.reshape(B, nk, ck, KH, D)
+    qps = q_pos.reshape(nq, cq)
+    kps = k_pos.reshape(nk, ck)
+    dos = do.reshape(B, nq, cq, KH, G, D)
+    # delta = rowsum(do * out) per query
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                       # (B, Sq, KH, G)
+    deltas = jnp.moveaxis(
+        delta.reshape(B, nq, cq, KH, G), (1, 3, 4), (0, 2, 3))
+    # -> (nq, B, KH, G, cq)
+
+    pairs = _pairs(nq, nk, causal, window, cq, ck)
+    qi_arr = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    ki_arr = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    dq0 = jnp.zeros((nq, B, cq, KH, G, D), jnp.float32)
+    dk0 = jnp.zeros((nk, B, ck, KH, D), jnp.float32)
+    dv0 = jnp.zeros((nk, B, ck, KH, D), jnp.float32)
+
+    def body(carry, idx):
+        dq, dk, dv = carry
+        qi, ki = idx
+        qb = jnp.take(qs, qi, axis=1)
+        kb = jnp.take(ks, ki, axis=1)
+        vb = jnp.take(vs, ki, axis=1)
+        qp = jnp.take(qps, qi, axis=0)
+        kp = jnp.take(kps, ki, axis=0)
+        dob = jnp.take(dos, qi, axis=1)            # (B, cq, KH, G, D)
+        lse_b = jnp.take(lse, qi, axis=0)          # (B, KH, G, cq)
+        del_b = jnp.take(deltas, qi, axis=0)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(_tile_mask(qp, kp, causal, window)[None, None, None],
+                      s, NEG)
+        p = jnp.exp(s - lse_b[..., None])          # (B, KH, G, cq, ck)
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", dob, vb,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - del_b[..., None]) * scale
+        dqb = jnp.einsum("bhgqk,bkhd->bqhgd", ds.astype(k.dtype), kb,
+                         preferred_element_type=jnp.float32)
+        dkb = jnp.einsum("bhgqk,bqhgd->bkhd", ds.astype(q.dtype), qb,
+                         preferred_element_type=jnp.float32)
+        dvb = jnp.einsum("bhgqk,bqhgd->bkhd", p.astype(do.dtype), dob,
+                         preferred_element_type=jnp.float32)
+        return (dq.at[qi].add(dqb), dk.at[ki].add(dkb),
+                dv.at[ki].add(dvb)), None
+
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0),
+                                   (qi_arr, ki_arr))
+    dq = jnp.moveaxis(dq, 0, 1).reshape(B, Sq, KH, G, D).astype(q.dtype)
+    dk = jnp.moveaxis(dk, 0, 1).reshape(B, Skv, KH, D).astype(k.dtype)
+    dv = jnp.moveaxis(dv, 0, 1).reshape(B, Skv, KH, D).astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

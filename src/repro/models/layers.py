@@ -1,0 +1,393 @@
+"""Shared transformer layers: RMSNorm, RoPE, chunked attention, gated MLP.
+
+Attention is computed with an online-softmax chunked scan (flash-attention
+algorithm in pure JAX): the S x S score matrix is never materialized — per
+(q-chunk, kv-chunk) tiles live in registers/VMEM and the kv scan body is
+``jax.checkpoint``-ed so backward recomputes tiles instead of saving them.
+GQA is computed with grouped einsums (no materialized kv-head repeat).
+
+The baseline computes all (q, kv) chunk pairs and masks — i.e. rectangular
+compute even for causal masks; the causal-skip optimization is a §Perf
+hillclimb item (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(rng, shape, std, dtype):
+    return (std * jax.random.truncated_normal(rng, -2.0, 2.0, shape,
+                                              jnp.float32)).astype(dtype)
+
+
+def dense_init(rng, fan_in, shape, dtype):
+    return trunc_normal(rng, shape, 1.0 / math.sqrt(fan_in), dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(
+        jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta=10_000.0):
+    """Rotary embedding, llama-style half rotation.
+
+    x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin,
+                            xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention
+# ---------------------------------------------------------------------------
+
+NEG = -1e30
+
+
+def _chunk_attn(q, k, v, q_pos, k_pos, causal, window, chunk_k):
+    """Online-softmax attention for one q block against all kv chunks.
+
+    q: (B, Sq, KH, G, D); k, v: (B, T, KH, D);
+    q_pos: (Sq,), k_pos: (T,).  Returns (B, Sq, KH, G, D)."""
+    B, Sq, KH, G, D = q.shape
+    T = k.shape[1]
+    nkc = T // chunk_k
+    scale = 1.0 / math.sqrt(D)
+    qf = q.astype(jnp.float32) * scale
+
+    k_c = k.reshape(B, nkc, chunk_k, KH, D)
+    v_c = v.reshape(B, nkc, chunk_k, KH, D)
+    kp_c = k_pos.reshape(nkc, chunk_k)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, kp = xs          # (B, ck, KH, D), (B, ck, KH, D), (ck,)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kb.astype(jnp.float32))
+        mask = jnp.ones((Sq, chunk_k), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kp[None, :]
+        if window > 0:
+            mask &= q_pos[:, None] - kp[None, :] < window
+        s = jnp.where(mask[None, None, None], s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KH, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KH, G, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body),
+        (m0, l0, a0),
+        (jnp.moveaxis(k_c, 1, 0), jnp.moveaxis(v_c, 1, 0), kp_c))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return jnp.moveaxis(out, (1, 2, 3), (2, 3, 1)).astype(q.dtype)
+
+
+import os as _os
+
+# "flash" (triangle-scheduled custom_vjp, the §Perf optimized path) or
+# "rect" (the baseline rectangular scan — kept for A/B roofline artifacts).
+ATTN_BACKEND = _os.environ.get("REPRO_ATTN", "flash")
+
+
+def attention(q, k, v, q_positions, k_positions, *, causal=True,
+              window=0, chunk_q=512, chunk_k=512):
+    """Chunked GQA attention.
+
+    q: (B, Sq, H, D); k, v: (B, T, KH, D).  H % KH == 0.
+    positions are absolute (RoPE already applied by the caller)."""
+    B, Sq, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, Sq, KH, G, D)
+    chunk_q = min(chunk_q, Sq)
+    chunk_k = min(chunk_k, T)
+    if Sq % chunk_q != 0 or T % chunk_k != 0:
+        # fall back to a single chunk when shapes don't tile (smoke sizes)
+        chunk_q, chunk_k = Sq, T
+
+    nqc = Sq // chunk_q
+    if ATTN_BACKEND == "flash" and (nqc > 1 or T // chunk_k > 1):
+        from repro.models.flash import flash_attention
+        out = flash_attention(qg, k, v, q_positions, k_positions, causal,
+                              window, chunk_q, chunk_k)
+    elif nqc == 1:
+        out = _chunk_attn(qg, k, v, q_positions, k_positions, causal,
+                          window, chunk_k)
+    else:
+        qs = qg.reshape(B, nqc, chunk_q, KH, G, D)
+        qp = q_positions.reshape(nqc, chunk_q)
+        out = jax.lax.map(
+            lambda xs: _chunk_attn(xs[0], k, v, xs[1], k_positions,
+                                   causal, window, chunk_k),
+            (jnp.moveaxis(qs, 1, 0), qp))
+        out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, KH, G, D)
+    return out.reshape(B, Sq, H, D)
+
+
+# ---------------------------------------------------------------------------
+# attention block (pre-norm GQA with RoPE)
+# ---------------------------------------------------------------------------
+
+class AttnParams(NamedTuple):
+    wq: jax.Array            # (d, H, hd)
+    wk: jax.Array            # (d, KH, hd)
+    wv: jax.Array            # (d, KH, hd)
+    wo: jax.Array            # (H, hd, d)
+    bq: Optional[jax.Array]  # (H, hd) or None
+    bk: Optional[jax.Array]
+    bv: Optional[jax.Array]
+
+
+def attn_init(rng, cfg, dtype):
+    d, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    bias = cfg.qkv_bias
+    return AttnParams(
+        wq=dense_init(ks[0], d, (d, H, hd), dtype),
+        wk=dense_init(ks[1], d, (d, KH, hd), dtype),
+        wv=dense_init(ks[2], d, (d, KH, hd), dtype),
+        wo=dense_init(ks[3], H * hd, (H, hd, d), dtype),
+        bq=jnp.zeros((H, hd), dtype) if bias else None,
+        bk=jnp.zeros((KH, hd), dtype) if bias else None,
+        bv=jnp.zeros((KH, hd), dtype) if bias else None)
+
+
+def attn_logical(cfg):
+    from repro.sharding import logical as lg
+    bias = cfg.qkv_bias
+    return AttnParams(
+        wq=lg("embed", "heads", "head_dim"),
+        wk=lg("embed", "kv_heads", "head_dim"),
+        wv=lg("embed", "kv_heads", "head_dim"),
+        wo=lg("heads", "head_dim", "embed"),
+        bq=lg("heads", "head_dim") if bias else None,
+        bk=lg("kv_heads", "head_dim") if bias else None,
+        bv=lg("kv_heads", "head_dim") if bias else None)
+
+
+def attn_qkv(p: AttnParams, x, positions, theta):
+    """Project + RoPE (theta=None skips rotary — whisper-style absolute).
+
+    x: (B, S, d) -> q (B,S,H,hd), k/v (B,S,KH,hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, p.wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, p.wv)
+    if p.bq is not None:
+        q = q + p.bq
+        k = k + p.bk
+        v = v + p.bv
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    if theta is not None:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    return q, k, v
+
+
+def attn_out(p: AttnParams, o):
+    y = jnp.einsum("bshk,hkd->bsd", o, p.wo)
+    return constrain(y, "batch", "seq", "embed")
+
+
+def attn_apply(p: AttnParams, cfg, x, positions, *, causal=True, window=0):
+    """Full-sequence self-attention (train / prefill)."""
+    theta = cfg.rope_theta if cfg.use_rope else None
+    q, k, v = attn_qkv(p, x, positions, theta)
+    o = attention(q, k, v, positions, positions, causal=causal,
+                  window=window)
+    return attn_out(p, o), (k, v)
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache: slot t holds the token whose absolute position
+    is ``kpos[t]`` (-1 = empty).  For full attention the ring never wraps
+    (capacity == horizon); for sliding-window / local attention the capacity
+    is the window size, so a 500k-token stream needs only O(window) HBM."""
+
+    k: jax.Array     # (B, Tc, KH, hd)
+    v: jax.Array     # (B, Tc, KH, hd)
+    kpos: jax.Array  # (Tc,) int32 absolute positions; -1 = empty
+
+
+def kv_cache_init(batch, capacity, kv_heads, head_dim, dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, capacity, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, capacity, kv_heads, head_dim), dtype),
+        kpos=jnp.full((capacity,), -1, jnp.int32))
+
+
+def kv_cache_from_prefill(k, v, positions, capacity, dtype) -> KVCache:
+    """Keep the last ``capacity`` tokens of a prefill (window semantics)."""
+    S = k.shape[1]
+    if S <= capacity:
+        pad = capacity - S
+        return KVCache(
+            k=jnp.pad(k.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0))),
+            v=jnp.pad(v.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0))),
+            kpos=jnp.pad(positions.astype(jnp.int32), (0, pad),
+                         constant_values=-1))
+    # ring layout: token at absolute position p sits in slot p % capacity
+    tail_pos = positions[S - capacity:]
+    slots = tail_pos % capacity
+    kc = jnp.zeros((k.shape[0], capacity) + k.shape[2:], dtype)
+    vc = jnp.zeros_like(kc)
+    kc = kc.at[:, slots].set(k[:, S - capacity:].astype(dtype))
+    vc = vc.at[:, slots].set(v[:, S - capacity:].astype(dtype))
+    kpos = jnp.zeros((capacity,), jnp.int32).at[slots].set(tail_pos)
+    return KVCache(k=kc, v=vc, kpos=kpos)
+
+
+def attn_decode(p: AttnParams, cfg, x, cache: KVCache, pos, *, window=0):
+    """One-token decode against a ring cache.
+
+    x: (B, 1, d); pos: scalar int32 absolute position of the new token.
+    Returns (y, cache)."""
+    B, _, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, p.wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, p.wv)
+    if p.bq is not None:
+        q = q + p.bq
+        k = k + p.bk
+        v = v + p.bv
+    posv = jnp.full((1,), pos, jnp.int32)
+    if cfg.use_rope:
+        q = rope(q, posv, cfg.rope_theta)
+        k = rope(k, posv, cfg.rope_theta)
+    Tc = cache.k.shape[1]
+    slot = pos % Tc
+    cache = KVCache(
+        k=jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), slot, axis=1),
+        v=jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), slot, axis=1),
+        kpos=jax.lax.dynamic_update_slice_in_dim(
+            cache.kpos, posv, slot, axis=0))
+    KH = cache.k.shape[2]
+    H = q.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, -1)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    # §Perf: keep the cache in its storage dtype (bf16) — no f32 copies of
+    # the whole cache; accumulate the dots in f32 on-tile.
+    s = jnp.einsum("bkgd,btkd->bkgt", qg.astype(cache.k.dtype), cache.k,
+                   preferred_element_type=jnp.float32) * scale
+    kp = cache.kpos
+    mask = (kp >= 0) & (kp <= pos)
+    if window > 0:
+        mask &= kp > pos - window
+    s = jnp.where(mask[None, None, None, :], s, NEG)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", pattn.astype(cache.v.dtype), cache.v,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    o = o.reshape(B, 1, H, -1)
+    return attn_out_decode(p, o), cache
+
+
+def attn_out_decode(p: AttnParams, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p.wo)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+class MLPParams(NamedTuple):
+    w_gate: jax.Array   # (d, f)
+    w_up: jax.Array     # (d, f)
+    w_down: jax.Array   # (f, d)
+
+
+def mlp_init(rng, cfg, dtype, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return MLPParams(w_gate=dense_init(ks[0], d, (d, f), dtype),
+                     w_up=dense_init(ks[1], d, (d, f), dtype),
+                     w_down=dense_init(ks[2], f, (f, d), dtype))
+
+
+def mlp_logical(cfg):
+    from repro.sharding import logical as lg
+    return MLPParams(w_gate=lg("embed", "mlp"), w_up=lg("embed", "mlp"),
+                     w_down=lg("mlp", "embed"))
+
+
+def mlp_apply(p: MLPParams, x, activation="silu"):
+    g = jnp.einsum("bsd,df->bsf", x, p.w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, p.w_up)
+    g = constrain(g, "batch", "seq", "mlp")
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    y = jnp.einsum("bsf,fd->bsd", act(g) * u, p.w_down)
+    return constrain(y, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+def embed_init(rng, cfg, dtype):
+    return trunc_normal(rng, (cfg.vocab, cfg.d_model), 0.02, dtype)
+
+
+def embed_logical():
+    from repro.sharding import logical as lg
+    return lg("vocab", "embed")
+
+
+def embed_lookup(table, tokens):
+    x = jnp.take(table, tokens, axis=0)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def logits_proj(table_or_w, x):
+    """Final projection; ``table_or_w`` is (V, d) (tied or untied)."""
+    y = jnp.einsum("bsd,vd->bsv", x, table_or_w)
+    return constrain(y, "batch", "seq", "vocab")

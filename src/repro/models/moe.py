@@ -1,0 +1,211 @@
+"""Mixture-of-Experts decoder (grok-1 / mixtral): top-2 router, GShard-style
+capacity dispatch, expert-parallel over the ``model`` mesh axis (+ FSDP on
+``data``).  Sliding-window attention supported (mixtral).
+
+The dispatch/combine einsums are local per token shard; with experts
+sharded on ``model`` XLA inserts the all-to-all between the token-sharded
+and expert-sharded layouts.  Capacity drops overflow tokens (cf=1.25), the
+standard TPU-friendly dropping MoE (documented DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.sharding import constrain, logical as lg
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array   # (d, E)
+    w_gate: jax.Array   # (E, d, f)
+    w_up: jax.Array     # (E, d, f)
+    w_down: jax.Array   # (E, f, d)
+
+
+class MoEBlockParams(NamedTuple):
+    ln1: jax.Array
+    attn: L.AttnParams
+    ln2: jax.Array
+    moe: MoEParams
+
+
+class MoEModelParams(NamedTuple):
+    embed: jax.Array
+    blocks: MoEBlockParams
+    ln_f: jax.Array
+    unembed: Optional[jax.Array]
+
+
+def moe_init(rng, cfg, dtype) -> MoEParams:
+    ks = jax.random.split(rng, 4)
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return MoEParams(
+        router=L.dense_init(ks[0], d, (d, E), dtype),
+        w_gate=L.dense_init(ks[1], d, (E, d, f), dtype),
+        w_up=L.dense_init(ks[2], d, (E, d, f), dtype),
+        w_down=L.dense_init(ks[3], f, (E, f, d), dtype))
+
+
+def moe_logical(cfg):
+    return MoEParams(router=lg("embed", None),
+                     w_gate=lg("expert", None, "moe_ff"),
+                     w_up=lg("expert", None, "moe_ff"),
+                     w_down=lg("expert", "moe_ff", None))
+
+
+def capacity(cfg, seq: int) -> int:
+    cap = int(cfg.capacity_factor * cfg.top_k * seq / cfg.n_experts)
+    return max(8, min(seq, (cap + 7) // 8 * 8))  # 8-aligned
+
+
+def moe_apply(p: MoEParams, cfg, x) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss).  GShard top-2 with capacity drop."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, S)
+
+    logits = jnp.einsum("bsd,de->bse", x, p.router).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B,S,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)              # (B,S,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch/GShard)
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # position of each (token, k) inside its expert's capacity buffer;
+    # k-loop keeps the largest intermediate at (B, S, E, C)
+    onehot_e = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (B,S,K,E)
+    flat = onehot_e.reshape(B, S * K, E)
+    pos_in_e = (jnp.cumsum(flat, axis=1) - flat).reshape(B, S, K, E)
+    dispatch = jnp.zeros((B, S, E, C), x.dtype)
+    combine = jnp.zeros((B, S, E, C), x.dtype)
+    for k in range(K):
+        # one_hot clips out-of-capacity positions (>= C) to all-zero rows
+        oc = jax.nn.one_hot(pos_in_e[:, :, k, :].astype(jnp.int32), C,
+                            dtype=x.dtype)                     # (B,S,E,C)
+        dpk = onehot_e[:, :, k, :, None].astype(x.dtype) * oc
+        dispatch = dispatch + dpk
+        combine = combine + gate_vals[:, :, k, None, None].astype(
+            x.dtype) * dpk
+
+    xin = jnp.einsum("bsec,bsd->ebcd", dispatch, x)
+    xin = constrain(xin, "expert", "batch", None, None)
+    g = jnp.einsum("ebcd,edf->ebcf", xin, p.w_gate)
+    u = jnp.einsum("ebcd,edf->ebcf", xin, p.w_up)
+    g = constrain(g, "expert", "batch", None, "moe_ff")
+    h = jnp.einsum("ebcf,efd->ebcd", jax.nn.silu(g) * u, p.w_down)
+    h = constrain(h, "expert", "batch", None, None)
+    y = jnp.einsum("bsec,ebcd->bsd", combine, h)
+    return constrain(y, "batch", "seq", "embed"), aux
+
+
+def _block_init(rng, cfg, dtype):
+    k1, k2 = jax.random.split(rng)
+    d = cfg.d_model
+    return MoEBlockParams(ln1=jnp.zeros((d,), dtype),
+                          attn=L.attn_init(k1, cfg, dtype),
+                          ln2=jnp.zeros((d,), dtype),
+                          moe=moe_init(k2, cfg, dtype))
+
+
+def init_params(rng, cfg, dtype=jnp.float32) -> MoEModelParams:
+    ke, kb, ku = jax.random.split(rng, 3)
+    blocks = jax.vmap(lambda r: _block_init(r, cfg, dtype))(
+        jax.random.split(kb, cfg.n_layers))
+    return MoEModelParams(
+        embed=L.embed_init(ke, cfg, dtype), blocks=blocks,
+        ln_f=jnp.zeros((cfg.d_model,), dtype),
+        unembed=None if cfg.tie_embeddings else L.embed_init(ku, cfg, dtype))
+
+
+def param_logical(cfg):
+    block = MoEBlockParams(ln1=lg("embed"), attn=L.attn_logical(cfg),
+                           ln2=lg("embed"), moe=moe_logical(cfg))
+    return MoEModelParams(
+        embed=L.embed_logical(), blocks=T.stack_logical(block),
+        ln_f=lg("embed"),
+        unembed=None if cfg.tie_embeddings else L.embed_logical())
+
+
+def apply(params: MoEModelParams, cfg, tokens, *, remat: str = "none",
+          return_hidden: bool = False):
+    """Returns (logits, aux_loss_mean)."""
+    x = L.embed_lookup(params.embed, tokens)
+    S = tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, blk):
+        h, _ = L.attn_apply(blk.attn, cfg,
+                            L.rms_norm(x, blk.ln1, cfg.norm_eps), positions,
+                            causal=True, window=cfg.sliding_window)
+        x = x + h
+        y, aux = moe_apply(blk.moe, cfg,
+                           L.rms_norm(x, blk.ln2, cfg.norm_eps))
+        x = constrain(x + y, "batch", "seq", "embed")
+        return x, aux
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    x, auxs = jax.lax.scan(body, x, params.blocks)
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    if return_hidden:
+        return x, jnp.mean(auxs)
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x), jnp.mean(auxs)
+
+
+def init_cache(cfg, batch, horizon, dtype=jnp.bfloat16) -> T.Cache:
+    return T.init_cache(cfg, batch, horizon, dtype)
+
+
+def cache_logical(cfg):
+    return T.cache_logical(cfg)
+
+
+def prefill(params: MoEModelParams, cfg, tokens, horizon,
+            kv_dtype=jnp.bfloat16):
+    x = L.embed_lookup(params.embed, tokens)
+    S = tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    cap = T.cache_capacity(cfg, horizon)
+
+    def body(x, blk):
+        h, (k, v) = L.attn_apply(
+            blk.attn, cfg, L.rms_norm(x, blk.ln1, cfg.norm_eps), positions,
+            causal=True, window=cfg.sliding_window)
+        x = x + h
+        y, _ = moe_apply(blk.moe, cfg, L.rms_norm(x, blk.ln2, cfg.norm_eps))
+        x = constrain(x + y, "batch", "seq", "embed")
+        return x, L.kv_cache_from_prefill(k, v, positions, cap, kv_dtype)
+
+    x, kv = jax.lax.scan(jax.checkpoint(body), x, params.blocks)
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x), T.Cache(kv=kv)
+
+
+def decode_step(params: MoEModelParams, cfg, cache: T.Cache, tokens, pos):
+    x = jnp.take(params.embed, tokens, axis=0)
+
+    def body(x, xs):
+        blk, kv = xs
+        h, kv = L.attn_decode(blk.attn, cfg,
+                              L.rms_norm(x, blk.ln1, cfg.norm_eps), kv, pos,
+                              window=cfg.sliding_window)
+        x = x + h
+        y, _ = moe_apply(blk.moe, cfg, L.rms_norm(x, blk.ln2, cfg.norm_eps))
+        return x + y, kv
+
+    x, kv = jax.lax.scan(body, x, (params.blocks, cache.kv))
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x), T.Cache(kv=kv)

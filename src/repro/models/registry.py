@@ -1,0 +1,169 @@
+"""Unified model API across families + harness input specs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input of
+a given (arch, shape) cell — weak-type-correct, shardable, no device
+allocation — exactly what the multi-pod dry-run lowers against.
+``demo_batch`` materializes small real batches for CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, moe, rglru, ssm, transformer, vlm
+
+_MODULES = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": ssm,
+    "hybrid": rglru,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+def get_module(cfg: ModelConfig):
+    return _MODULES[cfg.family]
+
+
+def init_params(rng, cfg: ModelConfig, dtype=jnp.float32):
+    return get_module(cfg).init_params(rng, cfg, dtype)
+
+
+def param_logical(cfg: ModelConfig):
+    return get_module(cfg).param_logical(cfg)
+
+
+def supports_cell(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Harness skip rules: long_500k needs sub-quadratic attention."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full quadratic attention at 524288 tokens"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# training inputs / loss
+# ---------------------------------------------------------------------------
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def train_input_logical(cfg: ModelConfig) -> Dict[str, Any]:
+    from repro.sharding import logical as lg
+    specs = {"tokens": lg("batch", "seq"), "labels": lg("batch", "seq")}
+    if cfg.family == "encdec":
+        specs["frames"] = lg("batch", "seq", None)
+    if cfg.family == "vlm":
+        specs["patches"] = lg("batch", "seq", None)
+    return specs
+
+
+def demo_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+               dtype=jnp.float32) -> Dict[str, Any]:
+    rng = np.random.default_rng(seed)
+    out = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(batch, seq)), jnp.int32),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(batch, seq)), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.encoder_seq, cfg.d_model)) * 0.02,
+            dtype)
+    if cfg.family == "vlm":
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.vision_tokens, cfg.d_model)) * 0.02,
+            dtype)
+    return out
+
+
+def forward_logits(params, cfg: ModelConfig, batch: Dict[str, Any],
+                   remat: str = "none"):
+    """Family-dispatched forward.  Returns (logits, aux_loss)."""
+    if cfg.family == "moe":
+        logits, aux = moe.apply(params, cfg, batch["tokens"], remat=remat)
+        return logits, aux
+    if cfg.family == "encdec":
+        return encdec.apply(params, cfg, batch["tokens"], batch["frames"],
+                            remat=remat), 0.0
+    if cfg.family == "vlm":
+        return vlm.apply(params, cfg, batch["tokens"], batch["patches"],
+                         remat=remat), 0.0
+    mod = get_module(cfg)
+    return mod.apply(params, cfg, batch["tokens"], remat=remat), 0.0
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Any],
+            remat: str = "none", aux_weight: float = 0.01):
+    """Next-token cross entropy (+ MoE load-balance aux)."""
+    logits, aux = forward_logits(params, cfg, batch, remat)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1).squeeze(-1)
+    nll = jnp.mean(logz - gold)
+    return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving inputs
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, horizon: int,
+               dtype=jnp.bfloat16):
+    return get_module(cfg).init_cache(cfg, batch, horizon, dtype)
+
+
+def cache_logical(cfg: ModelConfig):
+    return get_module(cfg).cache_logical(cfg)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, horizon: int,
+                dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of the decode cache (no allocation)."""
+    return jax.eval_shape(
+        lambda: get_module(cfg).init_cache(cfg, batch, horizon, dtype))
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    return get_module(cfg).decode_step(params, cfg, cache, tokens, pos)
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], horizon: int,
+            kv_dtype=jnp.bfloat16):
+    if cfg.family == "encdec":
+        return encdec.prefill(params, cfg, batch["tokens"], batch["frames"],
+                              horizon, kv_dtype)
+    if cfg.family == "vlm":
+        return vlm.prefill(params, cfg, batch["tokens"], batch["patches"],
+                           horizon, kv_dtype)
+    return get_module(cfg).prefill(params, cfg, batch["tokens"], horizon,
+                                   kv_dtype)

@@ -1,0 +1,364 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local MQA,
+(rec, rec, attn) 1:2 pattern.
+
+Training uses ``lax.associative_scan`` for the linear recurrence
+h_t = a_t h_{t-1} + b_t (log-space gates in f32); decode carries a (B, w)
+recurrent state and a (K-1)-deep conv ring per recurrent layer plus a
+window-sized KV ring per attention layer — long_500k decode is O(window).
+
+Layers are stacked as scanned triples; the remainder (26 = 8*3 + 2) runs
+unrolled.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.ssm import _causal_conv
+from repro.sharding import constrain, logical as lg
+
+_C = 8.0  # RG-LRU gate sharpness constant (Griffin)
+
+
+class RecBlockParams(NamedTuple):
+    ln1: jax.Array       # (d,)
+    w_x: jax.Array       # (d, w)
+    w_gate: jax.Array    # (d, w)
+    conv_w: jax.Array    # (K, w)
+    conv_b: jax.Array    # (w,)
+    lam: jax.Array       # (w,) Lambda
+    w_a: jax.Array       # (w, w) recurrence gate
+    b_a: jax.Array       # (w,)
+    w_i: jax.Array       # (w, w) input gate
+    b_i: jax.Array       # (w,)
+    w_out: jax.Array     # (w, d)
+    ln2: jax.Array       # (d,)
+    mlp: L.MLPParams
+
+
+class AttnBlockParams(NamedTuple):
+    ln1: jax.Array
+    attn: L.AttnParams
+    ln2: jax.Array
+    mlp: L.MLPParams
+
+
+class TripleParams(NamedTuple):
+    rec1: RecBlockParams
+    rec2: RecBlockParams
+    attn: AttnBlockParams
+
+
+class GriffinParams(NamedTuple):
+    embed: jax.Array
+    triples: TripleParams        # stacked (n_triples, ...)
+    tail: Optional[RecBlockParams]  # stacked (n_tail, ...) or None
+    ln_f: jax.Array
+    unembed: Optional[jax.Array]
+
+
+class RecState(NamedTuple):
+    h: jax.Array        # (B, w) f32
+    conv: jax.Array     # (B, K-1, w)
+
+
+class GriffinCache(NamedTuple):
+    rec1: RecState      # stacked (n_triples, ...)
+    rec2: RecState
+    attn: L.KVCache     # stacked (n_triples, ...)
+    tail: Optional[RecState]  # stacked (n_tail, ...)
+
+
+def _width(cfg):
+    return cfg.rglru_width or cfg.d_model
+
+
+def _rec_init(rng, cfg, dtype):
+    d, w = cfg.d_model, _width(cfg)
+    K = cfg.conv_kernel
+    ks = jax.random.split(rng, 8)
+    # Lambda init so a^c in [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[6], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # inv softplus
+    return RecBlockParams(
+        ln1=jnp.zeros((d,), dtype),
+        w_x=L.dense_init(ks[0], d, (d, w), dtype),
+        w_gate=L.dense_init(ks[1], d, (d, w), dtype),
+        conv_w=L.dense_init(ks[2], K, (K, w), dtype),
+        conv_b=jnp.zeros((w,), dtype),
+        lam=lam.astype(dtype),
+        w_a=L.dense_init(ks[3], w, (w, w), dtype),
+        b_a=jnp.zeros((w,), dtype),
+        w_i=L.dense_init(ks[5], w, (w, w), dtype),
+        b_i=jnp.zeros((w,), dtype),
+        w_out=L.dense_init(ks[4], w, (w, d), dtype),
+        ln2=jnp.zeros((d,), dtype),
+        mlp=L.mlp_init(ks[7], cfg, dtype))
+
+
+def _rec_logical(cfg):
+    return RecBlockParams(
+        ln1=lg("embed"), w_x=lg("embed", "mlp"), w_gate=lg("embed", "mlp"),
+        conv_w=lg("conv", "mlp"), conv_b=lg("mlp"), lam=lg("mlp"),
+        w_a=lg("mlp", None), b_a=lg("mlp"), w_i=lg("mlp", None),
+        b_i=lg("mlp"), w_out=lg("mlp", "embed"), ln2=lg("embed"),
+        mlp=L.mlp_logical(cfg))
+
+
+def _attn_init(rng, cfg, dtype):
+    k1, k2 = jax.random.split(rng)
+    d = cfg.d_model
+    return AttnBlockParams(ln1=jnp.zeros((d,), dtype),
+                           attn=L.attn_init(k1, cfg, dtype),
+                           ln2=jnp.zeros((d,), dtype),
+                           mlp=L.mlp_init(k2, cfg, dtype))
+
+
+def _attn_logical(cfg):
+    return AttnBlockParams(ln1=lg("embed"), attn=L.attn_logical(cfg),
+                           ln2=lg("embed"), mlp=L.mlp_logical(cfg))
+
+
+def layout(cfg) -> Tuple[int, int]:
+    """(n_triples, n_tail_rec) for the (rec, rec, attn) pattern."""
+    n_triples = cfg.n_layers // 3
+    n_tail = cfg.n_layers - 3 * n_triples
+    return n_triples, n_tail
+
+
+def init_params(rng, cfg, dtype=jnp.float32) -> GriffinParams:
+    ke, kt, kr, ku = jax.random.split(rng, 4)
+    n_triples, n_tail = layout(cfg)
+
+    def triple_init(r):
+        r1, r2, r3 = jax.random.split(r, 3)
+        return TripleParams(rec1=_rec_init(r1, cfg, dtype),
+                            rec2=_rec_init(r2, cfg, dtype),
+                            attn=_attn_init(r3, cfg, dtype))
+
+    triples = jax.vmap(triple_init)(jax.random.split(kt, n_triples))
+    tail = None
+    if n_tail:
+        tail = jax.vmap(lambda r: _rec_init(r, cfg, dtype))(
+            jax.random.split(kr, n_tail))
+    return GriffinParams(
+        embed=L.embed_init(ke, cfg, dtype), triples=triples, tail=tail,
+        ln_f=jnp.zeros((cfg.d_model,), dtype),
+        unembed=None if cfg.tie_embeddings else L.embed_init(ku, cfg, dtype))
+
+
+def param_logical(cfg):
+    from repro.models.transformer import stack_logical
+    n_triples, n_tail = layout(cfg)
+    triple = TripleParams(rec1=_rec_logical(cfg), rec2=_rec_logical(cfg),
+                          attn=_attn_logical(cfg))
+    return GriffinParams(
+        embed=L.embed_logical(),
+        triples=stack_logical(triple),
+        tail=stack_logical(_rec_logical(cfg)) if n_tail else None,
+        ln_f=lg("embed"),
+        unembed=None if cfg.tie_embeddings else L.embed_logical())
+
+
+def _rglru(xb, r_gate, i_gate, lam, h0=None):
+    """RG-LRU scan.  xb: (B, S, w); gates same shape; returns (y, h_last).
+
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t),
+    a_t = exp(-c softplus(lam) r_t).
+    """
+    log_a = (-_C * jax.nn.softplus(lam.astype(jnp.float32))
+             * r_gate.astype(jnp.float32))          # (B,S,w), negative
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i_gate.astype(jnp.float32) * xb.astype(jnp.float32))
+
+    # prefix compositions: h_t = A_t h0 + B_t
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        y = A * h0[:, None, :].astype(jnp.float32) + Bc
+    else:
+        y = Bc
+    return y.astype(xb.dtype), y[:, -1, :]  # h_last stays f32
+
+
+def _rec_apply(p: RecBlockParams, cfg, x, state: Optional[RecState] = None):
+    """Recurrent residual block + MLP.  Returns (x, new_state)."""
+    u = L.rms_norm(x, p.ln1, cfg.norm_eps)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", u, p.w_gate))
+    xb = jnp.einsum("bsd,dw->bsw", u, p.w_x)
+    xb = constrain(xb, "batch", "seq", "mlp")
+    if state is not None:
+        ext = jnp.concatenate([state.conv.astype(xb.dtype), xb], axis=1)
+        conv = _causal_conv(ext, p.conv_w, p.conv_b)[:, state.conv.shape[1]:]
+        h0 = state.h
+    else:
+        conv = _causal_conv(xb, p.conv_w, p.conv_b)
+        h0 = None
+    r_gate = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", conv, p.w_a) + p.b_a)
+    i_gate = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", conv, p.w_i) + p.b_i)
+    y, h_last = _rglru(conv, r_gate, i_gate, p.lam, h0)
+    y = jnp.einsum("bsw,wd->bsd", y * gate, p.w_out)
+    x = x + constrain(y, "batch", "seq", "embed")
+    x = x + L.mlp_apply(p.mlp, L.rms_norm(x, p.ln2, cfg.norm_eps),
+                        activation="gelu")
+    # conv ring: always the last K-1 raw inputs (merge with prior state so
+    # single-token decode keeps a full window)
+    Kc = cfg.conv_kernel
+    if state is not None:
+        ring = jnp.concatenate([state.conv.astype(xb.dtype), xb], axis=1)
+    else:
+        ring = xb
+    new_state = RecState(h=h_last, conv=ring[:, -(Kc - 1):, :])
+    return x, new_state
+
+
+def _attn_apply_block(p: AttnBlockParams, cfg, x, positions):
+    h, (k, v) = L.attn_apply(p.attn, cfg,
+                             L.rms_norm(x, p.ln1, cfg.norm_eps), positions,
+                             causal=True, window=cfg.local_window)
+    x = x + h
+    x = x + L.mlp_apply(p.mlp, L.rms_norm(x, p.ln2, cfg.norm_eps),
+                        activation="gelu")
+    return x, (k, v)
+
+
+def apply(params: GriffinParams, cfg, tokens, *, remat: str = "none",
+          return_hidden: bool = False):
+    x = L.embed_lookup(params.embed, tokens)
+    S = tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, trip):
+        x, _ = _rec_apply(trip.rec1, cfg, x)
+        x, _ = _rec_apply(trip.rec2, cfg, x)
+        x, _ = _attn_apply_block(trip.attn, cfg, x, positions)
+        return x, None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params.triples)
+    if params.tail is not None:
+        n_tail = jax.tree.leaves(params.tail)[0].shape[0]
+        for t in range(n_tail):
+            blk = jax.tree.map(lambda a: a[t], params.tail)
+            x, _ = _rec_apply(blk, cfg, x)
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    if return_hidden:
+        return x
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def _rec_state_init(cfg, batch, dtype):
+    w = _width(cfg)
+    return RecState(h=jnp.zeros((batch, w), jnp.float32),
+                    conv=jnp.zeros((batch, cfg.conv_kernel - 1, w), dtype))
+
+
+def init_cache(cfg, batch, horizon, dtype=jnp.bfloat16) -> GriffinCache:
+    n_triples, n_tail = layout(cfg)
+    cap = min(horizon, cfg.local_window)
+    mk_rec = lambda _: _rec_state_init(cfg, batch, dtype)
+    rec1 = jax.vmap(mk_rec)(jnp.arange(n_triples))
+    rec2 = jax.vmap(mk_rec)(jnp.arange(n_triples))
+    kv = jax.vmap(lambda _: L.kv_cache_init(
+        batch, cap, cfg.n_kv_heads, cfg.head_dim, dtype))(
+            jnp.arange(n_triples))
+    tail = jax.vmap(mk_rec)(jnp.arange(n_tail)) if n_tail else None
+    return GriffinCache(rec1=rec1, rec2=rec2, attn=kv, tail=tail)
+
+
+def cache_logical(cfg):
+    n_triples, n_tail = layout(cfg)
+    rec = RecState(h=lg("layers", "batch", "mlp"),
+                   conv=lg("layers", "batch", None, "mlp"))
+    kv = L.KVCache(
+        k=lg("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        v=lg("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        kpos=lg("layers", "kv_seq"))
+    return GriffinCache(rec1=rec, rec2=rec, attn=kv,
+                        tail=rec if n_tail else None)
+
+
+def prefill(params: GriffinParams, cfg, tokens, horizon,
+            kv_dtype=jnp.bfloat16):
+    x = L.embed_lookup(params.embed, tokens)
+    S = tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    cap = min(horizon, cfg.local_window)
+
+    def body(x, trip):
+        x, s1 = _rec_apply(trip.rec1, cfg, x)
+        x, s2 = _rec_apply(trip.rec2, cfg, x)
+        x, (k, v) = _attn_apply_block(trip.attn, cfg, x, positions)
+        kv = L.kv_cache_from_prefill(k, v, positions, cap, kv_dtype)
+        s1 = RecState(h=s1.h, conv=s1.conv.astype(kv_dtype))
+        s2 = RecState(h=s2.h, conv=s2.conv.astype(kv_dtype))
+        return x, (s1, s2, kv)
+
+    x, (rec1, rec2, kv) = jax.lax.scan(jax.checkpoint(body), x,
+                                       params.triples)
+    tail_states = None
+    if params.tail is not None:
+        n_tail = jax.tree.leaves(params.tail)[0].shape[0]
+        ts = []
+        for t in range(n_tail):
+            blk = jax.tree.map(lambda a: a[t], params.tail)
+            x, st = _rec_apply(blk, cfg, x)
+            ts.append(RecState(h=st.h, conv=st.conv.astype(kv_dtype)))
+        tail_states = jax.tree.map(lambda *xs: jnp.stack(xs), *ts)
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x), GriffinCache(rec1=rec1, rec2=rec2,
+                                                 attn=kv, tail=tail_states)
+
+
+def decode_step(params: GriffinParams, cfg, cache: GriffinCache, tokens,
+                pos):
+    x = jnp.take(params.embed, tokens, axis=0)
+
+    def body(x, xs):
+        trip, s1, s2, kv = xs
+        x, s1n = _rec_apply(trip.rec1, cfg, x, state=s1)
+        x, s2n = _rec_apply(trip.rec2, cfg, x, state=s2)
+        h, kvn = L.attn_decode(trip.attn.attn, cfg,
+                               L.rms_norm(x, trip.attn.ln1, cfg.norm_eps),
+                               kv, pos, window=cfg.local_window)
+        x = x + h
+        x = x + L.mlp_apply(trip.attn.mlp,
+                            L.rms_norm(x, trip.attn.ln2, cfg.norm_eps),
+                            activation="gelu")
+        s1n = RecState(h=s1n.h, conv=s1n.conv.astype(s1.conv.dtype))
+        s2n = RecState(h=s2n.h, conv=s2n.conv.astype(s2.conv.dtype))
+        return x, (s1n, s2n, kvn)
+
+    x, (rec1, rec2, kv) = jax.lax.scan(
+        body, x, (params.triples, cache.rec1, cache.rec2, cache.attn))
+    tail_states = cache.tail
+    if params.tail is not None:
+        n_tail = jax.tree.leaves(params.tail)[0].shape[0]
+        ts = []
+        for t in range(n_tail):
+            blk = jax.tree.map(lambda a: a[t], params.tail)
+            st = jax.tree.map(lambda a: a[t], cache.tail)
+            x, stn = _rec_apply(blk, cfg, x, state=st)
+            ts.append(RecState(h=stn.h,
+                               conv=stn.conv.astype(st.conv.dtype)))
+        tail_states = jax.tree.map(lambda *xs: jnp.stack(xs), *ts)
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x), GriffinCache(rec1=rec1, rec2=rec2,
+                                                 attn=kv, tail=tail_states)

@@ -1,0 +1,271 @@
+"""Mamba2 (SSD — state-space duality) blocks, attention-free LM.
+
+Implements the chunked SSD algorithm (Dao & Gu, 2024): within chunks the
+quadratic "attention-like" form runs on the MXU; across chunks a linear
+recurrence over per-chunk states keeps O(S) total work.  Decode keeps an
+O(1) recurrent state (B, H, P, N) per layer — the long_500k cell costs the
+same per token as short contexts.
+
+Single B/C group (n_groups = 1, the mamba2 default).  All decay math in
+f32.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import constrain, logical as lg
+
+
+class SSMBlockParams(NamedTuple):
+    ln: jax.Array          # (d,)
+    w_z: jax.Array         # (d, din)
+    w_xbc: jax.Array       # (d, din + 2N)
+    w_dt: jax.Array        # (d, H)
+    dt_bias: jax.Array     # (H,)
+    A_log: jax.Array       # (H,)
+    D: jax.Array           # (H,)
+    conv_w: jax.Array      # (K, din + 2N) depthwise
+    conv_b: jax.Array      # (din + 2N,)
+    norm: jax.Array        # (din,)
+    w_out: jax.Array       # (din, d)
+
+
+class SSMParams(NamedTuple):
+    embed: jax.Array
+    blocks: SSMBlockParams
+    ln_f: jax.Array
+    unembed: Optional[jax.Array]
+
+
+class SSMCache(NamedTuple):
+    """Decode state: recurrent state + causal-conv ring buffer."""
+
+    h: jax.Array        # (layers, B, H, P, N) f32
+    conv: jax.Array     # (layers, B, K-1, din + 2N)
+
+
+def _dims(cfg):
+    din = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = din // P
+    N = cfg.ssm_state
+    return din, H, P, N
+
+
+def _block_init(rng, cfg, dtype):
+    d = cfg.d_model
+    din, H, P, N = _dims(cfg)
+    K = cfg.conv_kernel
+    ks = jax.random.split(rng, 6)
+    dt = jnp.exp(jax.random.uniform(ks[3], (H,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return SSMBlockParams(
+        ln=jnp.zeros((d,), dtype),
+        w_z=L.dense_init(ks[0], d, (d, din), dtype),
+        w_xbc=L.dense_init(ks[1], d, (d, din + 2 * N), dtype),
+        w_dt=L.dense_init(ks[2], d, (d, H), dtype),
+        dt_bias=dt_bias.astype(dtype),
+        A_log=jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)).astype(dtype),
+        D=jnp.ones((H,), dtype),
+        conv_w=L.dense_init(ks[4], K, (K, din + 2 * N), dtype),
+        conv_b=jnp.zeros((din + 2 * N,), dtype),
+        norm=jnp.zeros((din,), dtype),
+        w_out=L.dense_init(ks[5], din, (din, d), dtype))
+
+
+def block_logical(cfg):
+    return SSMBlockParams(
+        ln=lg("embed"), w_z=lg("embed", "mlp"), w_xbc=lg("embed", "mlp"),
+        w_dt=lg("embed", None), dt_bias=lg(None), A_log=lg(None),
+        D=lg(None), conv_w=lg("conv", "mlp"), conv_b=lg("mlp"),
+        norm=lg("mlp"), w_out=lg("mlp", "embed"))
+
+
+def init_params(rng, cfg, dtype=jnp.float32) -> SSMParams:
+    ke, kb, ku = jax.random.split(rng, 3)
+    blocks = jax.vmap(lambda r: _block_init(r, cfg, dtype))(
+        jax.random.split(kb, cfg.n_layers))
+    return SSMParams(
+        embed=L.embed_init(ke, cfg, dtype), blocks=blocks,
+        ln_f=jnp.zeros((cfg.d_model,), dtype),
+        unembed=None if cfg.tie_embeddings else L.embed_init(ku, cfg, dtype))
+
+
+def param_logical(cfg):
+    from repro.models.transformer import stack_logical
+    return SSMParams(
+        embed=L.embed_logical(), blocks=stack_logical(block_logical(cfg)),
+        ln_f=lg("embed"),
+        unembed=None if cfg.tie_embeddings else L.embed_logical())
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B, S, ch), w (K, ch)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, k:k + x.shape[1], :] * w[k] for k in range(K))
+    return out + b
+
+
+def _segsum_exp(a_cum):
+    """exp(a_cum[..., i] - a_cum[..., j]) masked to i >= j.
+
+    a_cum: (..., Q); returns (..., Q, Q)."""
+    Q = a_cum.shape[-1]
+    diff = a_cum[..., :, None] - a_cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(xdt, dA, Bm, Cm, chunk, h0=None):
+    """Chunked SSD scan.
+
+    xdt: (B, S, H, P) inputs premultiplied by dt;
+    dA:  (B, S, H) per-step log decay (dt * A, negative);
+    Bm, Cm: (B, S, N) shared across heads (single group).
+    Returns (y (B, S, H, P), h_final (B, H, P, N))."""
+    Bsz, S, H, P = xdt.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q != 0:
+        Q = S
+    nc = S // Q
+    xdt = xdt.reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    dA = dA.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bm = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cm = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+
+    a_cum = jnp.cumsum(dA, axis=2)                       # (B,nc,Q,H)
+    a_cum_h = jnp.moveaxis(a_cum, -1, 2)                 # (B,nc,H,Q)
+
+    # 1. intra-chunk (diagonal blocks)
+    Lmat = _segsum_exp(a_cum_h)                          # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cm, Bm)       # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bchqk,bcqk,bckhp->bcqhp", Lmat, scores, xdt)
+
+    # 2. per-chunk states
+    decay_end = jnp.exp(a_cum_h[..., -1:] - a_cum_h)     # (B,nc,H,Q)
+    states = jnp.einsum("bckn,bchk,bckhp->bchpn", Bm, decay_end, xdt)
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum_h[..., -1])              # (B,nc,H)
+
+    def scan_fn(h, xs):
+        st, dec = xs
+        return h * dec[..., None, None] + st, h
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                  # (B,nc,H,P,N)
+
+    # 4. inter-chunk contribution
+    decay_in = jnp.exp(a_cum_h)                          # (B,nc,H,Q)
+    y_inter = jnp.einsum("bcqn,bchq,bchpn->bcqhp", Cm, decay_in, h_prev)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def _block_apply(p: SSMBlockParams, cfg, x, h0=None, conv_state=None):
+    """x: (B, S, d).  Returns (y, h_final, conv_tail)."""
+    din, H, P, N = _dims(cfg)
+    u = L.rms_norm(x, p.ln, cfg.norm_eps)
+    z = jnp.einsum("bsd,df->bsf", u, p.w_z)
+    xbc = jnp.einsum("bsd,df->bsf", u, p.w_xbc)
+    xbc = constrain(xbc, "batch", "seq", "mlp")
+    if conv_state is not None:
+        xbc_ext = jnp.concatenate([conv_state, xbc], axis=1)
+        conv = _causal_conv(xbc_ext, p.conv_w, p.conv_b)[
+            :, conv_state.shape[1]:]
+    else:
+        conv = _causal_conv(xbc, p.conv_w, p.conv_b)
+    conv = jax.nn.silu(conv)
+    xs = conv[..., :din]
+    Bm = conv[..., din:din + N]
+    Cm = conv[..., din + N:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", u, p.w_dt).astype(jnp.float32)
+        + p.dt_bias.astype(jnp.float32))
+    A = -jnp.exp(p.A_log.astype(jnp.float32))
+    xh = xs.reshape(*xs.shape[:2], H, P)
+    y, h_final = ssd_chunked(xh * dt[..., None], dt * A, Bm, Cm,
+                             cfg.ssm_chunk, h0)
+    y = y + xh.astype(jnp.float32) * p.D.astype(jnp.float32)[:, None]
+    y = y.reshape(*xs.shape[:2], din).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p.norm, cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, p.w_out)
+    conv_tail = xbc[:, -(cfg.conv_kernel - 1):, :]
+    return constrain(out, "batch", "seq", "embed"), h_final, conv_tail
+
+
+def apply(params: SSMParams, cfg, tokens, *, remat: str = "none",
+          return_hidden: bool = False):
+    x = L.embed_lookup(params.embed, tokens)
+
+    def body(x, blk):
+        y, _, _ = _block_apply(blk, cfg, x)
+        return x + y, None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params.blocks)
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    if return_hidden:
+        return x
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x)
+
+
+def init_cache(cfg, batch, horizon, dtype=jnp.bfloat16) -> SSMCache:
+    del horizon  # O(1) state regardless of context length
+    din, H, P, N = _dims(cfg)
+    Lc = cfg.n_layers
+    return SSMCache(
+        h=jnp.zeros((Lc, batch, H, P, N), jnp.float32),
+        conv=jnp.zeros((Lc, batch, cfg.conv_kernel - 1, din + 2 * N), dtype))
+
+
+def cache_logical(cfg):
+    return SSMCache(h=lg("layers", "batch", "heads", None, None),
+                    conv=lg("layers", "batch", None, "mlp"))
+
+
+def prefill(params: SSMParams, cfg, tokens, horizon, kv_dtype=jnp.bfloat16):
+    x = L.embed_lookup(params.embed, tokens)
+
+    def body(x, blk):
+        y, h, conv_tail = _block_apply(blk, cfg, x)
+        return x + y, (h, conv_tail.astype(kv_dtype))
+
+    x, (h, conv) = jax.lax.scan(jax.checkpoint(body), x, params.blocks)
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x), SSMCache(h=h, conv=conv)
+
+
+def decode_step(params: SSMParams, cfg, cache: SSMCache, tokens, pos):
+    del pos  # state-space models need no positional input
+    x = jnp.take(params.embed, tokens, axis=0)
+
+    def body(x, xs):
+        blk, h0, conv_state = xs
+        y, h, conv_tail = _block_apply(blk, cfg, x, h0=h0,
+                                       conv_state=conv_state.astype(x.dtype))
+        new_conv = jnp.concatenate(
+            [conv_state[:, 1:], conv_tail.astype(conv_state.dtype)], axis=1)
+        return x + y, (h, new_conv)
+
+    x, (h, conv) = jax.lax.scan(body, x, (params.blocks, cache.h,
+                                          cache.conv))
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x), SSMCache(h=h, conv=conv)

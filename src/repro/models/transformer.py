@@ -1,0 +1,180 @@
+"""Dense GQA decoder-only LM (stablelm / qwen / deepseek / VLM backbone).
+
+Layers are stacked along a leading L axis and traversed with ``lax.scan``
+(HLO size independent of depth); the block function is wrapped in
+``jax.checkpoint`` according to the remat policy.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import constrain, logical as lg
+
+
+class BlockParams(NamedTuple):
+    ln1: jax.Array
+    attn: L.AttnParams
+    ln2: jax.Array
+    mlp: L.MLPParams
+
+
+class DenseParams(NamedTuple):
+    embed: jax.Array                  # (V, d)
+    blocks: BlockParams               # stacked (L, ...)
+    ln_f: jax.Array                   # (d,)
+    unembed: Optional[jax.Array]      # (V, d) or None when tied
+
+
+class Cache(NamedTuple):
+    kv: L.KVCache                     # stacked (L, ...) ring caches
+
+
+def _block_init(rng, cfg, dtype):
+    k1, k2 = jax.random.split(rng)
+    d = cfg.d_model
+    return BlockParams(ln1=jnp.zeros((d,), dtype),
+                       attn=L.attn_init(k1, cfg, dtype),
+                       ln2=jnp.zeros((d,), dtype),
+                       mlp=L.mlp_init(k2, cfg, dtype))
+
+
+def init_params(rng, cfg, dtype=jnp.float32) -> DenseParams:
+    ke, kb, ku = jax.random.split(rng, 3)
+    blocks = jax.vmap(lambda r: _block_init(r, cfg, dtype))(
+        jax.random.split(kb, cfg.n_layers))
+    return DenseParams(
+        embed=L.embed_init(ke, cfg, dtype),
+        blocks=blocks,
+        ln_f=jnp.zeros((cfg.d_model,), dtype),
+        unembed=None if cfg.tie_embeddings
+        else L.embed_init(ku, cfg, dtype))
+
+
+def stack_logical(tree):
+    """Prepend the 'layers' axis to every leaf annotation."""
+    return jax.tree.map(lambda x: lg("layers", *x.names), tree,
+                        is_leaf=lambda x: isinstance(x, lg))
+
+
+def param_logical(cfg):
+    block = BlockParams(ln1=lg("embed"), attn=L.attn_logical(cfg),
+                        ln2=lg("embed"), mlp=L.mlp_logical(cfg))
+    return DenseParams(
+        embed=L.embed_logical(), blocks=stack_logical(block),
+        ln_f=lg("embed"),
+        unembed=None if cfg.tie_embeddings else L.embed_logical())
+
+
+def _block_apply(cfg, x, blk: BlockParams, positions, window):
+    h, _ = L.attn_apply(blk.attn, cfg, L.rms_norm(x, blk.ln1, cfg.norm_eps),
+                        positions, causal=True, window=window)
+    x = x + h
+    x = x + L.mlp_apply(blk.mlp, L.rms_norm(x, blk.ln2, cfg.norm_eps))
+    return constrain(x, "batch", "seq", "embed")
+
+
+def apply(params: DenseParams, cfg, tokens, *, remat: str = "none",
+          prefix_embeds: Optional[jax.Array] = None,
+          return_hidden: bool = False) -> jax.Array:
+    """Train/eval forward: (B, S) int32 -> (B, S, V) logits.
+
+    ``prefix_embeds`` (B, P, d) overrides the first P embedding rows (VLM
+    patch embeddings).  ``return_hidden`` yields the final normed hidden
+    states (B, S, d) instead of logits (feature extraction / SVM probes)."""
+    x = L.embed_lookup(params.embed, tokens)
+    if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x[:, P:]],
+                            axis=1)
+    S = tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, blk):
+        return _block_apply(cfg, x, blk, positions, cfg.sliding_window), None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params.blocks)
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    if return_hidden:
+        return x
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def cache_capacity(cfg, horizon: int) -> int:
+    return min(horizon, cfg.sliding_window) if cfg.sliding_window > 0 \
+        else horizon
+
+
+def init_cache(cfg, batch, horizon, dtype=jnp.bfloat16) -> Cache:
+    cap = cache_capacity(cfg, horizon)
+    kv = jax.vmap(
+        lambda _: L.kv_cache_init(batch, cap, cfg.n_kv_heads, cfg.head_dim,
+                                  dtype))(jnp.arange(cfg.n_layers))
+    return Cache(kv=kv)
+
+
+def cache_logical(cfg):
+    return Cache(kv=L.KVCache(
+        k=lg("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        v=lg("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        kpos=lg("layers", "kv_seq")))
+
+
+def prefill(params: DenseParams, cfg, tokens, horizon,
+            kv_dtype=jnp.bfloat16,
+            prefix_embeds: Optional[jax.Array] = None):
+    """Full forward + cache build: returns (logits, Cache)."""
+    x = L.embed_lookup(params.embed, tokens)
+    if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x[:, P:]],
+                            axis=1)
+    S = tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    cap = cache_capacity(cfg, horizon)
+
+    def body(x, blk):
+        h, (k, v) = L.attn_apply(
+            blk.attn, cfg, L.rms_norm(x, blk.ln1, cfg.norm_eps), positions,
+            causal=True, window=cfg.sliding_window)
+        x = x + h
+        x = x + L.mlp_apply(blk.mlp, L.rms_norm(x, blk.ln2, cfg.norm_eps))
+        kv = L.kv_cache_from_prefill(k, v, positions, cap, kv_dtype)
+        return constrain(x, "batch", "seq", "embed"), kv
+
+    x, kv = jax.lax.scan(jax.checkpoint(body), x, params.blocks)
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x), Cache(kv=kv)
+
+
+def decode_step(params: DenseParams, cfg, cache: Cache, tokens, pos):
+    """One-token decode: tokens (B, 1) int32, pos scalar int32 absolute
+    position.  Returns (logits (B, 1, V), Cache)."""
+    x = jnp.take(params.embed, tokens, axis=0)
+
+    def body(x, xs):
+        blk, kv = xs
+        h, kv = L.attn_decode(blk.attn, cfg,
+                              L.rms_norm(x, blk.ln1, cfg.norm_eps), kv, pos,
+                              window=cfg.sliding_window)
+        x = x + h
+        x = x + L.mlp_apply(blk.mlp, L.rms_norm(x, blk.ln2, cfg.norm_eps))
+        return x, kv
+
+    x, kv = jax.lax.scan(body, x, (params.blocks, cache.kv))
+    x = L.rms_norm(x, params.ln_f, cfg.norm_eps)
+    table = params.embed if params.unembed is None else params.unembed
+    return L.logits_proj(table, x), Cache(kv=kv)

@@ -1,0 +1,1 @@
+from repro.runtime.fault import StepMonitor, FailureInjector, run_resilient

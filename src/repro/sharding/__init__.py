@@ -1,0 +1,4 @@
+from repro.sharding.rules import (Rules, DEFAULT_RULES, LONG_DECODE_RULES,
+                                  axis_rules, constrain, current_rules,
+                                  logical, spec_for, tree_shardings,
+                                  tree_specs)

@@ -1,0 +1,173 @@
+"""Logical-axis sharding rules (MaxText-style), divisibility-aware.
+
+Every parameter and activation in the model zoo is annotated with *logical*
+axis names; a rule table maps logical names to mesh axes.  ``spec_for``
+drops a rule when the concrete dimension is not divisible by the mesh axis
+size (e.g. qwen2's 14 query heads on a 16-way ``model`` axis fall back to
+replication while its d_ff = 4864 still tensor-parallelizes) — this keeps
+every (arch x shape x mesh) cell compilable with one rule table and makes
+the table itself a hillclimb knob (see EXPERIMENTS.md §Perf).
+
+Default layout (production mesh (data=16, model=16), + pod for multi-pod):
+
+    batch   -> ('pod', 'data')   data parallel over pods x data
+    embed   -> 'data'            FSDP: params + optimizer state sharded
+    heads/kv_heads/mlp/vocab/expert -> 'model'   Megatron TP / EP
+    seq/state/layers -> replicated (sequence kept local; see LONG_DECODE)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+Rules = Tuple[Tuple[str, MeshAxes], ...]
+
+DEFAULT_RULES: Rules = (
+    ("batch", ("pod", "data")),
+    ("embed", "data"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("vocab", "model"),
+    ("expert", "model"),
+    # Expert FFN hidden dim shards over model x data jointly (§Perf grok
+    # hillclimb): with few experts (8) vs wide axes (16), expert-dim
+    # sharding is indivisible and FSDP-on-d makes every expert contraction
+    # a partial-sum all-reduce (observed 2.8 TB/step/device).  f-sharding
+    # keeps parameters fully distributed and removes the w_gate/w_up
+    # reductions entirely.
+    ("moe_ff", ("model", "data")),
+    ("conv", None),
+    ("state", None),
+    ("seq", None),
+    # NOTE (§Perf, refuted hypothesis): sharding kv_seq over 'model'
+    # (flash-decoding context parallelism) should cut per-device cache
+    # reads 16x, but GSPMD re-replicates the in-loop cache buffers and the
+    # per-layer writeback balloons 8x instead.  Realizing it needs a
+    # shard_map manual decode step (future work) — replicated here.
+    ("kv_seq", None),
+    ("layers", None),
+    ("head_dim", None),
+)
+
+LONG_DECODE_RULES: Rules = DEFAULT_RULES
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes] if axes in mesh.shape else 0
+    size = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return 0
+        size *= mesh.shape[a]
+    return size
+
+
+def _lookup(rules: Rules, name: Optional[str]) -> MeshAxes:
+    if name is None:
+        return None
+    for key, axes in rules:
+        if key == name:
+            return axes
+    raise KeyError(f"no sharding rule for logical axis {name!r}")
+
+
+def spec_for(shape: Sequence[int], names: Sequence[Optional[str]],
+             mesh: Mesh, rules: Rules = DEFAULT_RULES) -> P:
+    """PartitionSpec for a concrete shape annotated with logical names.
+
+    Rules whose mesh axes are absent from the mesh, already used by an
+    earlier dimension, or do not divide the dimension size are dropped
+    (replicated) — never an error.
+    """
+    assert len(shape) == len(names), (shape, names)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, names):
+        axes = _lookup(rules, name)
+        if axes is None:
+            out.append(None)
+            continue
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        # drop axes missing from the mesh or already used
+        axes_t = tuple(a for a in axes_t
+                       if a in mesh.shape and a not in used)
+        size = 1
+        for a in axes_t:
+            size *= mesh.shape[a]
+        if size <= 1 or dim % size != 0:
+            out.append(None)
+            continue
+        used.update(axes_t)
+        out.append(axes_t[0] if len(axes_t) == 1 else axes_t)
+    return P(*out)
+
+
+@dataclasses.dataclass(frozen=True)
+class logical:
+    """Logical annotation carried in spec trees: shape dims -> names."""
+
+    names: Tuple[Optional[str], ...]
+
+    def __init__(self, *names: Optional[str]):
+        object.__setattr__(self, "names", tuple(names))
+
+
+def tree_specs(logical_tree: Any, shape_tree: Any, mesh: Mesh,
+               rules: Rules = DEFAULT_RULES):
+    """Map a tree of ``logical`` + a matching tree of shapes to
+    PartitionSpecs."""
+    return jax.tree.map(
+        lambda lg, sd: spec_for(sd.shape, lg.names, mesh, rules),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, logical))
+
+
+def tree_shardings(logical_tree: Any, shape_tree: Any, mesh: Mesh,
+                   rules: Rules = DEFAULT_RULES):
+    specs = tree_specs(logical_tree, shape_tree, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Rules = DEFAULT_RULES):
+    """Context under which ``constrain`` resolves logical names.
+
+    Launch/dry-run code wraps tracing in this; CPU smoke tests simply don't,
+    making every ``constrain`` a no-op."""
+    prev = getattr(_CTX, "env", None)
+    _CTX.env = (mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.env = prev
+
+
+def current_rules() -> Optional[Tuple[Mesh, Rules]]:
+    return getattr(_CTX, "env", None)
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Activation sharding constraint by logical names (no-op without an
+    active ``axis_rules`` context)."""
+    env = current_rules()
+    if env is None:
+        return x
+    mesh, rules = env
+    spec = spec_for(x.shape, names, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,3 @@
+from repro.svm.data import (chessboard, gaussian_blobs, ring, xor_gaussians,
+                            DATASETS, make_dataset)
+from repro.svm.model import SVMModel, predict, decision_function, train_svm

@@ -1,0 +1,56 @@
+"""SVM model object: train with any core algorithm, predict, inspect SVs."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qp as qp_mod
+from repro.core.solver import SolveResult, SolverConfig, solve
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SVMModel:
+    """Trained (signed-dual) SVM.  ``alpha`` already carries the label sign,
+    so the decision function is ``h(x) = sum_i alpha_i k(x_i, x) + b``."""
+
+    X: jax.Array        # (l, d) training inputs
+    alpha: jax.Array    # (l,) signed dual variables
+    b: jax.Array        # () bias
+    gamma: jax.Array    # () RBF width
+
+    def n_sv(self, atol: float = 1e-9) -> jax.Array:
+        return jnp.sum(jnp.abs(self.alpha) > atol)
+
+    def n_bounded_sv(self, C, atol: float = 1e-9) -> jax.Array:
+        return jnp.sum(jnp.abs(jnp.abs(self.alpha) - C) <= atol)
+
+
+def decision_function(model: SVMModel, Xq: jax.Array) -> jax.Array:
+    """h(x) for a batch of query points (m, d) -> (m,)."""
+    d2 = (jnp.sum(Xq * Xq, -1)[:, None]
+          + jnp.sum(model.X * model.X, -1)[None, :]
+          - 2.0 * Xq @ model.X.T)
+    Kq = jnp.exp(-model.gamma * jnp.maximum(d2, 0.0))
+    return Kq @ model.alpha + model.b
+
+
+def predict(model: SVMModel, Xq: jax.Array) -> jax.Array:
+    return jnp.sign(decision_function(model, Xq))
+
+
+def train_svm(X, y, C, gamma, cfg: SolverConfig = SolverConfig(),
+              dtype=jnp.float64) -> tuple[SVMModel, SolveResult]:
+    """Train a binary RBF-SVM with the configured core algorithm."""
+    X = jnp.asarray(X, dtype)
+    y = jnp.asarray(y, dtype)
+    kernel = qp_mod.make_rbf(X, gamma)
+    res = solve(kernel, y, C, cfg)
+    model = SVMModel(X=X, alpha=res.alpha, b=res.b,
+                     gamma=jnp.asarray(gamma, dtype))
+    return model, res

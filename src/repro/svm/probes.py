@@ -1,0 +1,85 @@
+"""SVM readout heads on LM features — the integration of the paper's
+solver into the LM stack (DESIGN.md §2).
+
+Workflow: pool the final hidden states of any zoo model (mean over
+sequence), build the RBF Gram matrix with the Pallas-backed Gram builder
+(``kernels.ops.gram``), and train one-vs-rest binary SVMs with the batched
+PA-SMO solver (``solve_batched`` vmaps the whole QP solve across classes —
+the TPU throughput mode of DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solver import SolverConfig, solve_batched
+from repro.kernels import ops as kops
+from repro.models import registry
+
+
+def extract_features(params, cfg, batch, pool: str = "mean") -> jax.Array:
+    """Pooled final hidden states (B, d_model) from any zoo model."""
+    mod = registry.get_module(cfg)
+    kwargs = {"return_hidden": True}
+    if cfg.family == "moe":
+        hidden, _ = mod.apply(params, cfg, batch["tokens"], **kwargs)
+    elif cfg.family == "encdec":
+        hidden = mod.apply(params, cfg, batch["tokens"], batch["frames"],
+                           **kwargs)
+    elif cfg.family == "vlm":
+        hidden = mod.apply(params, cfg, batch["tokens"], batch["patches"],
+                           **kwargs)
+    else:
+        hidden = mod.apply(params, cfg, batch["tokens"], **kwargs)
+    if pool == "mean":
+        return jnp.mean(hidden.astype(jnp.float32), axis=1)
+    return hidden[:, -1].astype(jnp.float32)  # last-token pool
+
+
+@dataclasses.dataclass
+class SVMProbe:
+    X: jax.Array            # (n, d) training features
+    alphas: jax.Array       # (n_classes, n) signed duals
+    biases: jax.Array       # (n_classes,)
+    gamma: float
+    iterations: jax.Array   # (n_classes,) solver iterations per head
+
+
+def median_gamma(feats: jax.Array) -> float:
+    sq = jnp.sum(feats * feats, axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2 * feats @ feats.T
+    return float(1.0 / jnp.maximum(jnp.median(jnp.maximum(d2, 0.0)), 1e-6))
+
+
+def train_probe(feats: jax.Array, labels: jax.Array, n_classes: int,
+                C: float = 10.0, gamma: Optional[float] = None,
+                cfg: SolverConfig = SolverConfig(algorithm="pasmo",
+                                                 eps=1e-3)) -> SVMProbe:
+    """One-vs-rest multiclass SVM trained by batched PA-SMO.
+
+    The n_classes binary QPs (shared Gram matrix, different labels) solve
+    as ONE vmapped while_loop."""
+    feats = jnp.asarray(feats, jnp.float64)
+    n = feats.shape[0]
+    if gamma is None:
+        gamma = median_gamma(feats)
+    K = kops.gram(feats, feats, gamma).astype(jnp.float64)
+    Ks = jnp.broadcast_to(K, (n_classes, n, n))
+    ys = jax.vmap(lambda c: jnp.where(labels == c, 1.0, -1.0))(
+        jnp.arange(n_classes)).astype(jnp.float64)
+    res = solve_batched(Ks, ys, C, cfg)
+    return SVMProbe(X=feats, alphas=res.alpha, biases=res.b, gamma=gamma,
+                    iterations=res.iterations)
+
+
+def predict_probe(probe: SVMProbe, feats: jax.Array) -> jax.Array:
+    """(m, d) -> (m,) class predictions."""
+    Kq = kops.gram(jnp.asarray(feats, jnp.float64), probe.X,
+                   probe.gamma).astype(jnp.float64)
+    scores = Kq @ probe.alphas.T + probe.biases[None, :]
+    return jnp.argmax(scores, axis=-1)

@@ -1,0 +1,1 @@
+from repro.train import optimizer, train_step, serve_step

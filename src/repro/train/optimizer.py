@@ -1,0 +1,216 @@
+"""In-house optimizers: AdamW, Adafactor(-lite), momentum SGD.
+
+No optax dependency.  State dtypes are configurable (fp32 moments by
+default; bf16 supported for memory-squeezed cells) and optimizer state
+inherits the parameter sharding (FSDP x TP), so per-chip optimizer memory
+scales down with the full mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any          # pytree like params
+    v: Any
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any         # row second-moment (last-dim reduced)
+    vc: Any         # col second-moment (second-to-last reduced)
+    v: Any          # full second moment for <2D tensors
+
+
+class SGDMState(NamedTuple):
+    step: jax.Array
+    m: Any
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def _unzip(out, like, n: int):
+    """Split a tree of n-tuples into an n-tuple of trees (NamedTuple-safe)."""
+    outer = jax.tree.structure(like)
+    inner = jax.tree.structure(tuple(0 for _ in range(n)))
+    return jax.tree.transpose(outer, inner, out)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(
+        g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, tc: TrainConfig) -> AdamWState:
+    dt = _dtype(tc.opt_state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def adamw_update(grads, state: AdamWState, params, tc: TrainConfig,
+                 lr: Optional[jax.Array] = None):
+    lr = tc.learning_rate if lr is None else lr
+    b1, b2, eps = tc.beta1, tc.beta2, 1e-8
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mh = m32 / bc1
+        vh = v32 / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + tc.weight_decay * p.astype(
+            jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_p, new_m, new_v = _unzip(out, params, 3)
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments — sublinear optimizer memory)
+# ---------------------------------------------------------------------------
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params, tc: TrainConfig) -> AdafactorState:
+    dt = _dtype(tc.opt_state_dtype)
+
+    def vr(p):
+        return jnp.zeros(p.shape[:-1], dt) if _factored(p) else jnp.zeros(
+            (), dt)
+
+    def vc(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], dt) if _factored(p) \
+            else jnp.zeros((), dt)
+
+    def vf(p):
+        return jnp.zeros((), dt) if _factored(p) else jnp.zeros(p.shape, dt)
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(vr, params),
+                          vc=jax.tree.map(vc, params),
+                          v=jax.tree.map(vf, params))
+
+
+def adafactor_update(grads, state: AdafactorState, params, tc: TrainConfig,
+                     lr: Optional[jax.Array] = None):
+    lr = tc.learning_rate if lr is None else lr
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** -0.8
+    eps = 1e-30
+
+    def upd(g, vr, vc, v, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _factored(p):
+            vr32 = beta2 * vr.astype(jnp.float32) + (1 - beta2) * jnp.mean(
+                g2, axis=-1)
+            vc32 = beta2 * vc.astype(jnp.float32) + (1 - beta2) * jnp.mean(
+                g2, axis=-2)
+            rfac = vr32 / jnp.maximum(
+                jnp.mean(vr32, axis=-1, keepdims=True), eps)
+            pre = rfac[..., None] * vc32[..., None, :]
+            upd_ = g32 * jax.lax.rsqrt(jnp.maximum(pre, eps))
+            v32 = v.astype(jnp.float32)
+        else:
+            v32 = beta2 * v.astype(jnp.float32) + (1 - beta2) * g2
+            upd_ = g32 * jax.lax.rsqrt(jnp.maximum(v32, eps))
+            vr32 = vr.astype(jnp.float32)
+            vc32 = vc.astype(jnp.float32)
+        # update clipping (Shazeer & Stern)
+        rms = jnp.sqrt(jnp.mean(upd_ * upd_))
+        upd_ = upd_ / jnp.maximum(1.0, rms)
+        new_p = (p.astype(jnp.float32) - lr * upd_
+                 - lr * tc.weight_decay * p.astype(jnp.float32)).astype(
+                     p.dtype)
+        return new_p, vr32.astype(vr.dtype), vc32.astype(vc.dtype), \
+            v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, state.v, params)
+    new_p, vr, vc, v = _unzip(out, params, 4)
+    return new_p, AdafactorState(step=step, vr=vr, vc=vc, v=v)
+
+
+# ---------------------------------------------------------------------------
+# momentum SGD
+# ---------------------------------------------------------------------------
+
+def sgdm_init(params, tc: TrainConfig) -> SGDMState:
+    dt = _dtype(tc.opt_state_dtype)
+    return SGDMState(step=jnp.zeros((), jnp.int32),
+                     m=jax.tree.map(lambda p: jnp.zeros(p.shape, dt),
+                                    params))
+
+
+def sgdm_update(grads, state: SGDMState, params, tc: TrainConfig,
+                lr: Optional[jax.Array] = None):
+    lr = tc.learning_rate if lr is None else lr
+
+    def upd(g, m, p):
+        m32 = 0.9 * m.astype(jnp.float32) + g.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * m32
+                 - lr * tc.weight_decay * p.astype(jnp.float32)).astype(
+                     p.dtype)
+        return new_p, m32.astype(m.dtype)
+
+    out = jax.tree.map(upd, grads, state.m, params)
+    new_p, m = _unzip(out, params, 2)
+    return new_p, SGDMState(step=state.step + 1, m=m)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+def init(params, tc: TrainConfig):
+    return {"adamw": adamw_init, "adafactor": adafactor_init,
+            "sgdm": sgdm_init}[tc.optimizer](params, tc)
+
+
+def update(grads, state, params, tc: TrainConfig, lr=None):
+    fn = {"adamw": adamw_update, "adafactor": adafactor_update,
+          "sgdm": sgdm_update}[tc.optimizer]
+    return fn(grads, state, params, tc, lr)
+
+
+def lr_schedule(tc: TrainConfig, step, warmup: int = 100,
+                total: int = 10_000):
+    """Linear warmup + cosine decay."""
+    t = step.astype(jnp.float32)
+    warm = t / max(warmup, 1)
+    prog = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tc.learning_rate * jnp.minimum(warm, 1.0) * jnp.maximum(cos, 0.1)

@@ -1,0 +1,64 @@
+"""Serving: batched prefill + single-token decode steps.
+
+``serve_step`` is the one-new-token function the decode_* dry-run cells
+lower: (params, cache, tokens, pos) -> (logits, cache), with the cache
+donated so the ring update is in-place on device.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models import registry
+
+
+def _cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def make_serve_step(cfg: ModelConfig, sc: ServeConfig):
+    cdt = {"float32": jnp.float32,
+           "bfloat16": jnp.bfloat16}[sc.compute_dtype]
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = registry.decode_step(_cast(params, cdt), cfg, cache,
+                                             tokens, pos)
+        return logits, cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, sc: ServeConfig):
+    cdt = {"float32": jnp.float32,
+           "bfloat16": jnp.bfloat16}[sc.compute_dtype]
+    kdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[sc.kv_dtype]
+
+    def prefill(params, batch: Dict[str, Any]):
+        return registry.prefill(_cast(params, cdt), cfg, batch, sc.seq_len,
+                                kv_dtype=kdt)
+
+    return prefill
+
+
+def greedy_generate(cfg: ModelConfig, sc: ServeConfig, params,
+                    prompt: Dict[str, Any], steps: int):
+    """Simple batched greedy generation driver (example/serving demo)."""
+    prefill = jax.jit(make_prefill(cfg, sc))
+    step = jax.jit(make_serve_step(cfg, sc), donate_argnums=(1,))
+    logits, cache = prefill(params, prompt)
+    S = prompt["tokens"].shape[1]
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [tok]
+    for t in range(steps - 1):
+        logits, cache = step(params, cache, tok,
+                             jnp.asarray(S + t, jnp.int32))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

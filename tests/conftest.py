@@ -1,0 +1,6 @@
+import jax
+
+# The QP solver tests need f64 (chess-board uses C=1e6).  Model smoke tests
+# use explicit f32/bf16 dtypes, so the flag is harmless there.  The dry-run
+# device-count flag is intentionally NOT set here (smoke tests see 1 device).
+jax.config.update("jax_enable_x64", True)

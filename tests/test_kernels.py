@@ -1,0 +1,111 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(64, 2), (200, 7), (1024, 16), (1500, 60), (4096, 128)]
+DTYPES = [jnp.float32, jnp.float64]
+
+
+def _setup(l, d, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(l, d)), dtype)
+    y = jnp.asarray(np.sign(rng.normal(size=l)), dtype)
+    C = 10.0
+    alpha = jnp.asarray(rng.uniform(-1, 1, size=l), dtype) * jnp.abs(y) * C
+    alpha = jnp.clip(alpha, jnp.minimum(0.0, y * C), jnp.maximum(0.0, y * C))
+    G = jnp.asarray(rng.normal(size=l), dtype)
+    L = jnp.minimum(0.0, y * C)
+    U = jnp.maximum(0.0, y * C)
+    sqn = jnp.sum(X * X, axis=-1)
+    gamma = jnp.asarray(0.3, dtype)
+    return X, sqn, G, alpha, L, U, gamma
+
+
+@pytest.mark.parametrize("l,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("use_exact", [False, True])
+def test_pass_a_row_wss(l, d, dtype, use_exact):
+    X, sqn, G, alpha, L, U, gamma = _setup(l, d, dtype)
+    i = 3
+    xq = X[i]
+    a_i, L_i, U_i = alpha[i], L[i], U[i]
+    g_i = G[i]
+    args = (X, sqn, G, alpha, L, U, xq, a_i, L_i, U_i, g_i,
+            jnp.asarray(i, jnp.int32), jnp.asarray(use_exact), gamma)
+    k_ref, j_ref, gain_ref = ref.rbf_row_wss(*args)
+    k_pl, j_pl, gain_pl = ops.rbf_row_wss(*args, impl="interpret",
+                                          block_l=256)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(k_pl), np.asarray(k_ref),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(float(gain_pl), float(gain_ref),
+                               rtol=10 * tol)
+    assert int(j_pl) == int(j_ref)
+
+
+@pytest.mark.parametrize("l,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pass_b_update_wss(l, d, dtype):
+    X, sqn, G, alpha, L, U, gamma = _setup(l, d, dtype, seed=1)
+    i, j = 3, 11
+    k_i = ref.rbf_row(X, sqn, X[i], gamma)
+    mu = jnp.asarray(0.37, dtype)
+    alpha_new = alpha.at[i].add(mu).at[j].add(-mu)
+    alpha_new = jnp.clip(alpha_new, L, U)
+    G_ref, i_ref, gi_ref, gdn_ref = ref.rbf_update_wss(
+        X, sqn, G, k_i, X[j], mu, alpha_new, L, U, gamma)
+    G_pl, i_pl, gi_pl, gdn_pl = ops.rbf_update_wss(
+        X, sqn, G, k_i, alpha_new, L, U, X[j], mu, gamma,
+        impl="interpret", block_l=256)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(G_pl), np.asarray(G_ref),
+                               rtol=tol, atol=tol)
+    assert int(i_pl) == int(i_ref)
+    np.testing.assert_allclose(float(gi_pl), float(gi_ref), rtol=10 * tol)
+    np.testing.assert_allclose(float(gdn_pl), float(gdn_ref), rtol=10 * tol)
+
+
+@pytest.mark.parametrize("l1,l2,d", [(64, 64, 2), (200, 100, 7),
+                                     (300, 513, 33), (1024, 256, 128)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gram_block(l1, l2, d, dtype):
+    rng = np.random.default_rng(2)
+    X1 = jnp.asarray(rng.normal(size=(l1, d)), dtype)
+    X2 = jnp.asarray(rng.normal(size=(l2, d)), dtype)
+    gamma = 0.4
+    K_ref = ref.gram_cross(X1, X2, gamma)
+    K_pl = ops.gram(X1, X2, gamma, impl="interpret", block_i=128,
+                    block_j=128)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(K_pl), np.asarray(K_ref),
+                               rtol=tol, atol=tol)
+
+
+def test_gram_symmetric_psd():
+    rng = np.random.default_rng(3)
+    X = jnp.asarray(rng.normal(size=(100, 5)))
+    K = np.asarray(ops.gram(X, gamma=0.5, impl="interpret",
+                            block_i=128, block_j=128))
+    np.testing.assert_allclose(K, K.T, atol=1e-12)
+    w = np.linalg.eigvalsh(K)
+    assert w.min() > -1e-8
+    np.testing.assert_allclose(np.diag(K), 1.0, atol=1e-12)
+
+
+@pytest.mark.parametrize("block_l", [128, 256, 512, 1024])
+def test_pass_a_block_size_sweep(block_l):
+    """Block shape must not change results (padding/tiling invariance)."""
+    X, sqn, G, alpha, L, U, gamma = _setup(777, 13, jnp.float64, seed=4)
+    i = 42
+    args = (X, sqn, G, alpha, L, U, X[i], alpha[i], L[i], U[i], G[i],
+            jnp.asarray(i, jnp.int32), jnp.asarray(False), gamma)
+    k_ref, j_ref, gain_ref = ref.rbf_row_wss(*args)
+    k, j, gain = ops.rbf_row_wss(*args, impl="interpret", block_l=block_l)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(k_ref), rtol=1e-12)
+    assert int(j) == int(j_ref)

@@ -1,0 +1,131 @@
+"""Hypothesis property tests on the solver's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import qp as qp_mod
+from repro.core import reference as ref
+from repro.core import step as step_mod
+from repro.core.solver import SolverConfig, solve
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _psd_problem(seed, n, C):
+    rng = np.random.default_rng(seed)
+    d = rng.integers(2, 6)
+    X = rng.normal(size=(n, d))
+    gamma = float(10 ** rng.uniform(-1.5, 0.5))
+    sq = np.sum(X * X, 1)
+    K = np.exp(-gamma * (sq[:, None] + sq[None, :] - 2 * X @ X.T))
+    y = np.sign(rng.normal(size=n))
+    if np.all(y == y[0]):
+        y[0] = -y[0]
+    return K, y
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 48),
+       logC=st.floats(-1, 4),
+       alg=st.sampled_from(["smo", "pasmo", "pasmo_simple", "overshoot"]))
+@settings(**SETTINGS)
+def test_final_point_feasible_and_converged(seed, n, logC, alg):
+    """Every solve ends feasible; if converged, the KKT gap is <= eps."""
+    C = float(10 ** logC)
+    K, y = _psd_problem(seed, n, C)
+    cfg = SolverConfig(algorithm=alg, eps=1e-4, max_iter=100_000)
+    res = solve(qp_mod.PrecomputedKernel(jnp.asarray(K)), jnp.asarray(y), C,
+                cfg)
+    bounds = qp_mod.make_bounds(jnp.asarray(y), C)
+    assert bool(qp_mod.is_feasible(res.alpha, bounds, atol=1e-7))
+    assert bool(res.converged)
+    assert float(res.kkt_gap) <= 1e-4 + 1e-12
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 40), logC=st.floats(-1, 3))
+@settings(**SETTINGS)
+def test_pasmo_reaches_smo_objective(seed, n, logC):
+    """PA-SMO's solution is never worse than SMO's at the same eps
+    (the paper's §7.1 claim, here as an invariant up to eps-scale slack)."""
+    C = float(10 ** logC)
+    K, y = _psd_problem(seed, n, C)
+    kern = qp_mod.PrecomputedKernel(jnp.asarray(K))
+    r_smo = solve(kern, jnp.asarray(y), C,
+                  SolverConfig(algorithm="smo", eps=1e-5, max_iter=100_000))
+    r_pa = solve(kern, jnp.asarray(y), C,
+                 SolverConfig(algorithm="pasmo", eps=1e-5, max_iter=100_000))
+    f_s, f_p = float(r_smo.objective), float(r_pa.objective)
+    assert f_p >= f_s - 1e-4 * (1.0 + abs(f_s))
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 32), logC=st.floats(-1, 3))
+@settings(**SETTINGS)
+def test_double_step_monotonicity(seed, n, logC):
+    """Lemma 3 invariant: f never decreases across two consecutive steps
+    (single steps may decrease f during planning)."""
+    C = float(10 ** logC)
+    K, y = _psd_problem(seed, n, C)
+    r = ref.solve_pasmo(K, y, C, eps=1e-5, max_iter=20_000, tie="first",
+                        record_steps=True)
+    alpha = np.zeros(n)
+    f_hist = [0.0]
+    planned = []
+    for (i, j, mu, pl) in r.steps:
+        alpha[i] += mu
+        alpha[j] -= mu
+        planned.append(pl)
+        f_hist.append(float(y @ alpha - 0.5 * alpha @ K @ alpha))
+    for k, pl in enumerate(planned):
+        slack = 1e-9 * (1 + abs(f_hist[k]))
+        if pl:
+            # Lemma 3: planning step at k + following step recover the dip
+            if k + 2 < len(f_hist):
+                assert f_hist[k + 2] >= f_hist[k] - slack
+        else:
+            # plain SMO steps never decrease f
+            assert f_hist[k + 1] >= f_hist[k] - slack
+
+
+@given(w1=st.floats(-10, 10), w2=st.floats(-10, 10),
+       a=st.floats(0.1, 10), b=st.floats(0.1, 10), rho=st.floats(-0.95, 0.95))
+@settings(max_examples=200, deadline=None)
+def test_planning_step_dominates_newton_two_step(w1, w2, a, b, rho):
+    """The planned double-step gain (eq. 7 at eq. 8) >= the gain of the
+    greedy Newton pair — planning-ahead can only help (§4)."""
+    Q11, Q22 = a, b
+    Q12 = rho * np.sqrt(a * b)
+    t = step_mod.PlanningTerms(w1=jnp.float64(w1), w2=jnp.float64(w2),
+                               Q11=jnp.float64(Q11), Q22=jnp.float64(Q22),
+                               Q12=jnp.float64(Q12))
+    mu_opt, ok = step_mod.planning_step(t)
+    assert bool(ok)
+    g_plan = float(step_mod.double_step_gain(mu_opt, t))
+    g_greedy = float(step_mod.double_step_gain(w1 / Q11, t))
+    assert g_plan >= g_greedy - 1e-9 * max(1.0, abs(g_plan))
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 32))
+@settings(**SETTINGS)
+def test_gradient_consistency(seed, n):
+    """Maintained gradient == y - K alpha at exit (no drift)."""
+    K, y = _psd_problem(seed, n, 10.0)
+    res = solve(qp_mod.PrecomputedKernel(jnp.asarray(K)), jnp.asarray(y),
+                10.0, SolverConfig(algorithm="pasmo", eps=1e-4,
+                                   max_iter=100_000))
+    np.testing.assert_allclose(np.asarray(res.G),
+                               y - K @ np.asarray(res.alpha),
+                               rtol=1e-7, atol=1e-7)
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(12, 32),
+       k=st.integers(2, 64))
+@settings(**SETTINGS)
+def test_objective_from_gradient_identity(seed, n, k):
+    """f(a) = 1/2 (y.a + G.a) identity used by the solver finalizer."""
+    rng = np.random.default_rng(seed)
+    K, y = _psd_problem(seed, n, 1.0)
+    alpha = rng.normal(size=n)
+    G = y - K @ alpha
+    f_direct = y @ alpha - 0.5 * alpha @ K @ alpha
+    f_id = 0.5 * (y @ alpha + G @ alpha)
+    np.testing.assert_allclose(f_direct, f_id, rtol=1e-9)

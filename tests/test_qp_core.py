@@ -1,0 +1,197 @@
+"""Unit tests for the step / gain algebra of the paper (eqs. 2-8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qp as qp_mod
+from repro.core import step as step_mod
+from repro.core import wss as wss_mod
+
+
+def _random_psd(rng, n):
+    A = rng.normal(size=(n, n))
+    return A @ A.T / n + 1e-6 * np.eye(n)
+
+
+def _random_terms(rng):
+    """Random PSD 2x2 Q and gradient terms."""
+    A = rng.normal(size=(2, 2))
+    Q = A @ A.T + 1e-3 * np.eye(2)
+    w = rng.normal(size=2)
+    return step_mod.PlanningTerms(w1=jnp.asarray(w[0]), w2=jnp.asarray(w[1]),
+                                  Q11=jnp.asarray(Q[0, 0]),
+                                  Q22=jnp.asarray(Q[1, 1]),
+                                  Q12=jnp.asarray(Q[0, 1]))
+
+
+class TestStepAlgebra:
+    def test_newton_gain_consistency(self):
+        """Eq. (3) == eq. (4): g~ = l^2/(2Q) = 1/2 Q (mu*)^2."""
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            l, q = rng.normal(), abs(rng.normal()) + 1e-3
+            g3 = step_mod.gain_newton(l, q)
+            mu = step_mod.newton_step(l, q)
+            g4 = 0.5 * q * mu * mu
+            np.testing.assert_allclose(g3, g4, rtol=1e-12)
+
+    def test_gain_of_newton_step_is_max(self):
+        """mu* maximizes the single-step gain parabola."""
+        rng = np.random.default_rng(1)
+        for _ in range(50):
+            l, q = rng.normal(), abs(rng.normal()) + 1e-3
+            mu_star = step_mod.newton_step(l, q)
+            g_star = step_mod.gain_of_step(mu_star, l, q)
+            for mu in np.linspace(-3, 3, 41):
+                assert step_mod.gain_of_step(mu, l, q) <= g_star + 1e-12
+
+    def test_fig2_gain_ratio(self):
+        """Fig. 2: gain(mu)/gain(mu*) = 2r - r^2 for r = mu/mu*; on
+        [1-eta, 1+eta] the gain is >= (1-eta^2) g*."""
+        rng = np.random.default_rng(2)
+        eta = 0.9
+        for _ in range(100):
+            l, q = rng.normal() + 1e-6, abs(rng.normal()) + 1e-3
+            mu_star = step_mod.newton_step(l, q)
+            g_star = step_mod.gain_newton(l, q)
+            r = rng.uniform(1 - eta, 1 + eta)
+            g = step_mod.gain_of_step(r * mu_star, l, q)
+            np.testing.assert_allclose(g, (2 * r - r * r) * g_star, rtol=1e-9)
+            assert g >= (1 - eta ** 2) * g_star - 1e-12 * abs(g_star)
+
+    def test_double_step_gain_at_newton_matches_eq5(self):
+        """Eq. (7) evaluated at mu1 = w1/Q11 equals the naive two-Newton-step
+        gain of eq. (5) ... only when Q12 = 0 (independent directions);
+        in general eq. (5) assumes the *updated* gradient for step 2.
+        Check the exact identity instead: eq. (7) == brute-force two-step."""
+        rng = np.random.default_rng(3)
+        for _ in range(100):
+            t = _random_terms(rng)
+            mu1 = rng.normal()
+            mu2 = step_mod.planned_second_step(mu1, t)
+            w = np.array([t.w1, t.w2])
+            Q = np.array([[t.Q11, t.Q12], [t.Q12, t.Q22]])
+            mu = np.array([mu1, mu2])
+            brute = w @ mu - 0.5 * mu @ Q @ mu
+            np.testing.assert_allclose(step_mod.double_step_gain(mu1, t),
+                                       brute, rtol=1e-9, atol=1e-12)
+
+    def test_planning_step_maximizes_double_gain(self):
+        """Eq. (8) is the argmax of eq. (7)."""
+        rng = np.random.default_rng(4)
+        for _ in range(100):
+            t = _random_terms(rng)
+            mu1, ok = step_mod.planning_step(t)
+            assert bool(ok)
+            g_opt = step_mod.double_step_gain(mu1, t)
+            for delta in [-1.0, -0.1, 0.1, 1.0]:
+                assert step_mod.double_step_gain(mu1 + delta, t) <= g_opt + 1e-10
+
+        # analytic gradient check: d/dmu eq.(7) at mu1 = 0
+        t = _random_terms(rng)
+        mu1, _ = step_mod.planning_step(t)
+        grad = jax.grad(lambda m: step_mod.double_step_gain(m, t))(mu1)
+        np.testing.assert_allclose(grad, 0.0, atol=1e-9)
+
+    def test_double_gain_lower_bounded_by_newton_gain(self):
+        """§4/Lemma 3: the planned double-step gain at the optimum is >= the
+        single Newton-step gain g~ (the proof's key inequality)."""
+        rng = np.random.default_rng(5)
+        for _ in range(200):
+            t = _random_terms(rng)
+            mu1, ok = step_mod.planning_step(t)
+            if not bool(ok):
+                continue
+            g2 = step_mod.double_step_gain(mu1, t)
+            g1 = step_mod.gain_newton(t.w1, t.Q11)
+            assert g2 >= g1 - 1e-9 * max(1.0, abs(g1))
+
+    def test_clip_step_bounds(self):
+        rng = np.random.default_rng(6)
+        for _ in range(100):
+            lo, hi = -abs(rng.normal()), abs(rng.normal())
+            mu = rng.normal() * 3
+            c = step_mod.clip_step(mu, step_mod.StepBounds(jnp.asarray(lo),
+                                                           jnp.asarray(hi)))
+            assert lo <= c <= hi
+            if lo < mu < hi:
+                assert c == pytest.approx(mu)
+
+
+class TestQPPrimitives:
+    def test_gradient_and_objective(self):
+        rng = np.random.default_rng(7)
+        n = 16
+        K = _random_psd(rng, n)
+        y = np.sign(rng.normal(size=n))
+        alpha = rng.normal(size=n) * 0.1
+        g = qp_mod.gradient(jnp.asarray(alpha), jnp.asarray(y), jnp.asarray(K))
+        g_ad = jax.grad(lambda a: qp_mod.dual_objective(a, jnp.asarray(y),
+                                                        jnp.asarray(K)))(
+            jnp.asarray(alpha))
+        np.testing.assert_allclose(g, g_ad, rtol=1e-9)
+
+    def test_kkt_gap_zero_at_optimum_free_problem(self):
+        """For an interior optimum (huge C) the gap vanishes at K a = y
+        projected onto sum(a)=0 feasibility."""
+        rng = np.random.default_rng(8)
+        n = 8
+        K = _random_psd(rng, n)
+        y = np.sign(rng.normal(size=n))
+        # solve equality-constrained problem exactly via KKT system
+        A = np.block([[K, np.ones((n, 1))], [np.ones((1, n)), np.zeros((1, 1))]])
+        sol = np.linalg.solve(A, np.concatenate([y, [0.0]]))
+        alpha = sol[:n]
+        bounds = qp_mod.make_bounds(jnp.asarray(y), 1e9)
+        G = qp_mod.gradient(jnp.asarray(alpha), jnp.asarray(y), jnp.asarray(K))
+        gap = qp_mod.kkt_gap(G, jnp.asarray(alpha), bounds)
+        assert abs(float(gap)) < 1e-6
+
+    def test_kernel_oracles_match_materialized(self):
+        rng = np.random.default_rng(9)
+        X = rng.normal(size=(32, 5))
+        for kernel in [qp_mod.make_rbf(jnp.asarray(X), 0.7),
+                       qp_mod.LinearKernel(jnp.asarray(X))]:
+            K = qp_mod.materialize(kernel)
+            np.testing.assert_allclose(np.diag(K), kernel.diag(), rtol=1e-9)
+            for i in [0, 7, 31]:
+                np.testing.assert_allclose(K[i], kernel.row(jnp.asarray(i)),
+                                           rtol=1e-9, atol=1e-12)
+                np.testing.assert_allclose(
+                    K[i, 5], kernel.entry(jnp.asarray(i), jnp.asarray(5)),
+                    rtol=1e-9)
+
+
+class TestWSS:
+    def test_wss2_matches_bruteforce(self):
+        """eq. (3) selection == brute force over all candidate pairs."""
+        rng = np.random.default_rng(10)
+        for trial in range(20):
+            n = 24
+            K = _random_psd(rng, n)
+            y = np.sign(rng.normal(size=n))
+            alpha = np.zeros(n)
+            bounds = qp_mod.make_bounds(jnp.asarray(y), 1.0)
+            G = jnp.asarray(y.copy())
+            up = qp_mod.up_mask(jnp.asarray(alpha), bounds)
+            dn = qp_mod.down_mask(jnp.asarray(alpha), bounds)
+            i, gi = wss_mod.select_i(G, up)
+            sel = wss_mod.select_wss2(G, jnp.asarray(K[int(i)]),
+                                      jnp.asarray(np.diag(K)), up, dn)
+            # brute force j given i
+            best_j, best_g = -1, -np.inf
+            for jj in range(n):
+                if jj == int(i) or not bool(dn[jj]):
+                    continue
+                l = float(gi) - y[jj]
+                if l <= 0:
+                    continue
+                q = max(K[int(i), int(i)] - 2 * K[int(i), jj] + K[jj, jj],
+                        1e-12)
+                g = 0.5 * l * l / q
+                if g > best_g:
+                    best_j, best_g = jj, g
+            assert int(sel.j) == best_j
+            np.testing.assert_allclose(float(sel.gain), best_g, rtol=1e-9)

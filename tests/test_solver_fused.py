@@ -1,0 +1,67 @@
+"""Fused two-pass solver vs the standard solver: same optimum, same
+algorithm semantics, on both the jnp and the Pallas-interpret backends."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import qp as qp_mod
+from repro.core.solver import SolverConfig, solve
+from repro.core.solver_fused import solve_fused
+from repro.svm.data import gaussian_blobs, ring, xor_gaussians
+
+
+def _problem(name, n, seed=0):
+    gen = {"blobs": gaussian_blobs, "ring": ring, "xor": xor_gaussians}[name]
+    X, y = gen(n, seed=seed)
+    gamma = {"blobs": 0.05, "ring": 1.0, "xor": 0.5}[name]
+    C = {"blobs": 1.0, "ring": 10.0, "xor": 100.0}[name]
+    return X, y, C, gamma
+
+
+@pytest.mark.parametrize("alg", ["smo", "pasmo"])
+@pytest.mark.parametrize("name", ["blobs", "ring", "xor"])
+def test_fused_jnp_matches_standard(alg, name):
+    X, y, C, gamma = _problem(name, 80)
+    cfg = SolverConfig(algorithm=alg, eps=1e-4, max_iter=100_000)
+    rf = solve_fused(jnp.asarray(X), jnp.asarray(y), C, gamma, cfg,
+                     impl="jnp")
+    rs = solve(qp_mod.make_rbf(jnp.asarray(X), gamma), jnp.asarray(y), C,
+               cfg)
+    assert bool(rf.converged) and bool(rs.converged)
+    np.testing.assert_allclose(float(rf.objective), float(rs.objective),
+                               rtol=1e-6)
+    assert float(rf.kkt_gap) <= 1e-4 + 1e-12
+    # same algorithm: planning engages on both or neither
+    if alg == "pasmo" and int(rs.n_planning) > 10:
+        assert int(rf.n_planning) > 0
+
+
+@pytest.mark.parametrize("alg", ["smo", "pasmo"])
+def test_fused_pallas_interpret_matches_jnp(alg):
+    """The Pallas kernels inside the full solve loop (interpret mode)."""
+    X, y, C, gamma = _problem("xor", 64, seed=1)
+    cfg = SolverConfig(algorithm=alg, eps=1e-3, max_iter=20_000)
+    r_jnp = solve_fused(jnp.asarray(X), jnp.asarray(y), C, gamma, cfg,
+                        impl="jnp")
+    r_pl = solve_fused(jnp.asarray(X), jnp.asarray(y), C, gamma, cfg,
+                       impl="interpret", block_l=128)
+    assert bool(r_pl.converged)
+    np.testing.assert_allclose(float(r_pl.objective), float(r_jnp.objective),
+                               rtol=1e-6)
+    assert abs(int(r_pl.iterations) - int(r_jnp.iterations)) <= max(
+        3, 0.05 * int(r_jnp.iterations))
+
+
+def test_fused_feasible():
+    X, y, C, gamma = _problem("ring", 70, seed=2)
+    cfg = SolverConfig(algorithm="pasmo", eps=1e-4)
+    r = solve_fused(jnp.asarray(X), jnp.asarray(y), C, gamma, cfg,
+                    impl="jnp")
+    bounds = qp_mod.make_bounds(jnp.asarray(y), C)
+    assert bool(qp_mod.is_feasible(r.alpha, bounds, atol=1e-8))
+    # maintained gradient equals y - K alpha
+    K = qp_mod.materialize(qp_mod.make_rbf(jnp.asarray(X), gamma))
+    np.testing.assert_allclose(np.asarray(r.G),
+                               y - np.asarray(K) @ np.asarray(r.alpha),
+                               rtol=1e-7, atol=1e-7)
