@@ -1,0 +1,105 @@
+"""Grid-solve throughput: batched multi-QP subsystem vs sequential loops.
+
+Three ways to solve a (gamma, class, C) model-selection grid:
+
+* ``grid/compacted``  — :func:`repro.core.grid.solve_grid_compacted`: all
+  (gamma, class) lanes vmapped, scaled warm starts along C, and the batch
+  re-compacted every ``chunk`` iterations so converged lanes stop costing
+  wall time.  The CPU throughput mode.
+* ``grid/fused``      — :func:`repro.core.grid.solve_grid`: the whole grid
+  as ONE jit-compiled vmapped call (the accelerator mode; on CPU it pays
+  the straggler tax of the slowest lane per C-step).
+* ``grid/seq_oracle`` — the status-quo loop: one jitted ``solve`` per grid
+  point through the on-the-fly RBF row oracle (what ``train_svm`` does
+  today).  ``grid/seq_gram`` is the same loop upgraded with a precomputed
+  Gram per gamma — a stronger baseline than the repo had.
+
+``grid/speedup`` = seq_oracle / compacted (the acceptance bar is >= 2x on
+CPU).  All timings are min-over-repeats measured in alternating pairs, so
+slow host windows (thread migration, cgroup throttling) hit every
+contender equally.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grid as grid_mod
+from repro.core import multiclass as mc
+from repro.core import qp as qp_mod
+from repro.core.solver import SolverConfig, solve
+
+
+def _workload(l, d, k, n_gamma, g_range, Cs):
+    from repro.svm.data import multiclass_blobs
+    X, y = multiclass_blobs(l, seed=0, k=k, d=d)
+    X = jnp.asarray(X)
+    _, y_idx = mc.class_index(y)
+    Y = mc.ovr_labels(y_idx, k)
+    gammas = np.geomspace(*g_range, n_gamma)
+    return X, Y, gammas, np.asarray(Cs, np.float64)
+
+
+def _sequential(X, Y, gammas, Cs, cfg, precompute):
+    outs = []
+    for g in gammas:
+        if precompute:
+            kern = qp_mod.PrecomputedKernel(jnp.exp(-g * grid_mod.sqdist(X)))
+        else:
+            kern = qp_mod.make_rbf(X, g)
+        for c in range(Y.shape[0]):
+            for C in Cs:
+                outs.append(solve(kern, Y[c], float(C), cfg))
+    jax.block_until_ready(outs[-1].alpha)
+    return outs
+
+
+def _interleaved_min(fns, repeat):
+    """min wall time per contender, measured in alternating rounds."""
+    for fn in fns:
+        fn()  # warmup / compile
+    mins = [float("inf")] * len(fns)
+    for _ in range(repeat):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            fn()
+            mins[i] = min(mins[i], time.perf_counter() - t0)
+    return mins
+
+
+def run():
+    cfg = SolverConfig(eps=1e-3)
+    rows = []
+    # Small-l, realistic feature dim, dense C-path: the model-selection
+    # shape (many small QPs).  The larger config is reported for context.
+    for l, d, k, ng, g_range, Cs, rep in [
+            (64, 32, 4, 8, (0.05, 1.0), np.geomspace(0.5, 64.0, 10), 6),
+            (256, 2, 3, 2, (0.3, 1.0), [1.0, 4.0, 16.0, 32.0], 3)]:
+        X, Y, gammas, Cs = _workload(l, d, k, ng, g_range, Cs)
+        n_qp = ng * k * len(Cs)
+
+        res = grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg)
+        assert bool(jnp.all(res.converged))
+
+        def compacted():
+            r = grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg)
+            jax.block_until_ready(r.alpha)
+
+        def fused():
+            r = grid_mod.solve_grid(X, Y, Cs, gammas, cfg)
+            jax.block_until_ready(r.alpha)
+
+        t_c, t_f, t_o, t_g = _interleaved_min(
+            [compacted, fused,
+             lambda: _sequential(X, Y, gammas, Cs, cfg, precompute=False),
+             lambda: _sequential(X, Y, gammas, Cs, cfg, precompute=True)],
+            repeat=rep)
+        tag = f"l{l}_k{k}_g{ng}_{n_qp}qp"
+        for name, t in [("compacted", t_c), ("fused", t_f),
+                        ("seq_oracle", t_o), ("seq_gram", t_g)]:
+            rows.append((f"grid/{name}_{tag}", t * 1e6,
+                         f"{n_qp / t:.1f}_qp_per_s"))
+        rows.append((f"grid/speedup_{tag}", 0.0, f"{t_o / t_c:.2f}x"))
+    return rows

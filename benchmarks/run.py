@@ -20,6 +20,7 @@ REGISTRY = [
     ("fig4", "benchmarks.fig4_multi"),
     ("ablation", "benchmarks.ablation_wss"),
     ("solver_micro", "benchmarks.solver_micro"),
+    ("grid", "benchmarks.grid_bench"),
     ("kernels", "benchmarks.kernels_bench"),
     ("lm_step", "benchmarks.lm_step_bench"),
     ("roofline", "benchmarks.roofline_table"),
@@ -33,6 +34,11 @@ def main() -> None:
                          + ",".join(k for k, _ in REGISTRY))
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - {k for k, _ in REGISTRY}
+        if unknown:
+            sys.exit(f"unknown benchmark(s): {','.join(sorted(unknown))}; "
+                     f"choose from: {','.join(k for k, _ in REGISTRY)}")
 
     import importlib
     failures = 0

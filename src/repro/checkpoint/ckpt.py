@@ -28,7 +28,15 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # zstd is an optional dep: fall back to uncompressed snapshots
+    import zstandard
+except ImportError:  # pragma: no cover - exercised where zstd is absent
+    zstandard = None
+
+HAS_ZSTD = zstandard is not None
+_STATE_ZST = "state.msgpack.zst"
+_STATE_RAW = "state.msgpack"
 
 
 def _path_str(path) -> str:
@@ -69,14 +77,20 @@ def save_checkpoint(directory: str, step: int, state: Any,
     """Synchronous save.  Returns the checkpoint path."""
     ckpt_dir = os.path.join(directory, f"step_{step:010d}")
     tmp_dir = ckpt_dir + ".tmp"
-    os.makedirs(tmp_dir, exist_ok=True)
+    if os.path.exists(tmp_dir):  # stale torn write: never let old blobs
+        shutil.rmtree(tmp_dir)   # (e.g. a .zst from a zstd-enabled run)
+    os.makedirs(tmp_dir)         # shadow the snapshot written below
     packed = _pack_tree(state)
-    comp = zstandard.ZstdCompressor(level=3).compress(packed)
-    with open(os.path.join(tmp_dir, "state.msgpack.zst"), "wb") as f:
-        f.write(comp)
+    if HAS_ZSTD:
+        blob = zstandard.ZstdCompressor(level=3).compress(packed)
+        fname, fmt = _STATE_ZST, "msgpack+zstd/v1"
+    else:
+        blob, fname, fmt = packed, _STATE_RAW, "msgpack/v1"
+    with open(os.path.join(tmp_dir, fname), "wb") as f:
+        f.write(blob)
     with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
         json.dump({"step": step, "metadata": metadata or {},
-                   "format": "msgpack+zstd/v1"}, f)
+                   "format": fmt}, f)
     with open(os.path.join(tmp_dir, "COMMIT"), "w") as f:
         f.write("ok")
     if os.path.exists(ckpt_dir):
@@ -102,8 +116,17 @@ def restore_checkpoint(directory: str, step: int, like: Any,
     ShapeDtypeStructs).  ``shardings``: optional matching pytree of
     NamedShardings for elastic re-partition onto the current mesh."""
     ckpt_dir = os.path.join(directory, f"step_{step:010d}")
-    with open(os.path.join(ckpt_dir, "state.msgpack.zst"), "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    zst_path = os.path.join(ckpt_dir, _STATE_ZST)
+    if os.path.exists(zst_path):
+        if not HAS_ZSTD:
+            raise ImportError(
+                f"{zst_path} is zstd-compressed but the 'zstandard' module "
+                "is not installed")
+        with open(zst_path, "rb") as f:
+            raw = zstandard.ZstdDecompressor().decompress(f.read())
+    else:
+        with open(os.path.join(ckpt_dir, _STATE_RAW), "rb") as f:
+            raw = f.read()
     arrays = _unpack_blob(raw)
 
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)

@@ -1,3 +1,8 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Layout: qp (problem + kernel oracles), step/wss (per-iteration algebra),
+# solver (the while_loop driver), multiclass/grid (batched multi-QP layers),
+# solver_fused/sharded (fused and distributed variants), reference (numpy
+# oracle).

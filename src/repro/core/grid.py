@@ -1,0 +1,236 @@
+"""C/gamma model-selection grids as one jit-compiled, vmapped solve.
+
+A hyper-parameter grid over an RBF-SVM is ``n_gamma * n_class * n_C``
+independent QPs that share one dataset.  Three structural facts make the
+whole grid a single compiled call instead of a Python loop:
+
+* The O(l^2 d) part of the Gram work — the squared-distance matrix — is
+  *gamma-independent*: ``K_gamma = exp(-gamma * D2)`` is one elementwise
+  exp per gamma on a shared ``D2``.
+* (C, gamma, labels) are traced arguments of :func:`repro.core.solver.solve`
+  (the config is static, the problem is data), so every grid point shares
+  one compilation and batches under ``vmap``.
+* The C-axis is solved by ``lax.scan`` in ascending order with *scaled
+  warm starts*: ``alpha * (C_t/C_{t-1})`` is exactly feasible for the grown
+  box (signs and the sum-to-zero constraint are scale-invariant, and bound
+  support vectors land exactly on the new bound), and the matching gradient
+  is closed-form — ``G' = (1-r) y + r G`` since ``G = y - K alpha`` — so
+  the restart costs O(l), no kernel evaluations (cf. the paper's cold-start
+  property in §2).
+
+Axis convention for all stacked results: ``(n_gamma, n_class, n_C, ...)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qp as qp_mod
+from repro.core.solver import SolveResult, SolverConfig, solve
+
+
+def sqdist(X: jax.Array) -> jax.Array:
+    """Pairwise squared distances (l, l) — the shared, gamma-free Gram work."""
+    sq = jnp.sum(X * X, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (X @ X.T)
+    return jnp.maximum(d2, 0.0)
+
+
+@partial(jax.jit, static_argnames=("cfg", "warm_start"))
+def _solve_grid(X, Y, Cs, gammas, cfg: SolverConfig,
+                warm_start: bool) -> SolveResult:
+    D2 = sqdist(X)
+
+    def per_gamma(gamma):
+        kern = qp_mod.PrecomputedKernel(jnp.exp(-gamma * D2))
+
+        def per_class(y):
+            def step(carry, C):
+                alpha, G, C_prev = carry
+                r = C / C_prev
+                a0 = alpha * r                   # exactly feasible at C
+                g0 = (1.0 - r) * y + r * G       # y - K(r alpha), O(l)
+                res = solve(kern, y, C, cfg, alpha0=a0, G0=g0)
+                nxt = (res.alpha, res.G, C) if warm_start else carry
+                return nxt, res
+
+            # alpha=0, G=y is the C-free cold start: the scaled carry maps
+            # it to itself, so the first scan step is exact for any C_prev.
+            cold = (jnp.zeros_like(y), y, Cs[0])
+            _, out = jax.lax.scan(step, cold, Cs)
+            return out
+
+        return jax.vmap(per_class)(Y)
+
+    return jax.vmap(per_gamma)(gammas)
+
+
+def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
+               warm_start: bool = True) -> SolveResult:
+    """Solve the full (gamma, class, C) grid in ONE compiled vmapped call.
+
+    ``X``: (l, d) shared inputs; ``Y``: (k, l) signed label vectors (a 1-D
+    ``y`` is promoted to one class head); ``Cs``: (n_C,); ``gammas``:
+    (n_gamma,) (scalars are promoted).  Returns a :class:`SolveResult` whose
+    leaves have leading axes ``(n_gamma, n_class, n_C)`` aligned with the
+    *input* order of ``Cs``/``gammas``.
+
+    With ``warm_start=True`` the C-axis is internally solved in ascending
+    order (results are scattered back to input order), chaining each solve
+    from the previous optimum; ``warm_start=False`` gives independent
+    cold starts — same optima, more iterations (used by the parity tests).
+    """
+    X = jnp.asarray(X)
+    Y = jnp.asarray(Y)
+    if Y.ndim == 1:
+        Y = Y[None, :]
+    Cs_np = np.asarray(Cs, dtype=np.float64).reshape(-1)
+    gammas_np = np.asarray(gammas, dtype=np.float64).reshape(-1)
+    order = np.argsort(Cs_np, kind="stable")
+    res = _solve_grid(X, Y, jnp.asarray(Cs_np[order], X.dtype),
+                      jnp.asarray(gammas_np, X.dtype), cfg, warm_start)
+    if np.any(order != np.arange(len(Cs_np))):
+        inv = np.argsort(order, kind="stable")
+        res = jax.tree.map(lambda leaf: jnp.take(leaf, inv, axis=2), res)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Chunked/compacted grid driver (CPU throughput mode)
+# ---------------------------------------------------------------------------
+#
+# A vmapped while_loop runs until the SLOWEST lane converges, so a batch of
+# heterogeneous QPs wastes (max - mean)/mean of its lane-iterations on
+# already-converged lanes.  The classic fix: run the loop in fixed chunks of
+# iterations, and between chunks compact the unconverged lanes into a
+# smaller (power-of-two-bucketed, so compile count stays logarithmic) batch.
+# Warm-starting makes chunking free — a resumed solve continues from
+# (alpha, G) exactly, only the O(1) planning history is reset.
+
+
+def _bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _chunk_solve(Ks, ys, C, a0, g0, cfg: SolverConfig) -> SolveResult:
+    return jax.vmap(
+        lambda K, y, a, g: solve(qp_mod.PrecomputedKernel(K), y, C, cfg,
+                                 alpha0=a, G0=g))(Ks, ys, a0, g0)
+
+
+def solve_grid_compacted(X, Y, Cs, gammas,
+                         cfg: SolverConfig = SolverConfig(), *,
+                         chunk: int = 96) -> SolveResult:
+    """Host-driven variant of :func:`solve_grid`: same (gamma, class, C)
+    result axes, but the batch is re-compacted every ``chunk`` iterations so
+    converged lanes stop consuming wall time.  This is the CPU throughput
+    mode; the single fused call is the accelerator mode.
+    """
+    X = jnp.asarray(X)
+    Y = jnp.asarray(Y)
+    if Y.ndim == 1:
+        Y = Y[None, :]
+    k, l = Y.shape
+    Cs_np = np.asarray(Cs, np.float64).reshape(-1)
+    gammas_np = np.asarray(gammas, np.float64).reshape(-1)
+    order = np.argsort(Cs_np, kind="stable")
+    nG, nC = len(gammas_np), len(Cs_np)
+    B = nG * k
+
+    D2 = sqdist(X)
+    Ks = jnp.exp(-jnp.asarray(gammas_np, X.dtype)[:, None, None] * D2)
+    Kf = jnp.repeat(Ks, k, axis=0)                      # (B, l, l) lane Grams
+    Yf = jnp.tile(Y, (nG, 1))                           # (B, l)
+    ccfg = dataclasses.replace(cfg, max_iter=chunk)
+
+    alpha = np.zeros((B, l))
+    G = np.asarray(Yf, np.float64).copy()
+    C_prev = float(Cs_np[order][0])
+    out = {f: np.zeros((B, nC) + s) for f, s in
+           [("alpha", (l,)), ("G", (l,)), ("b", ()), ("objective", ()),
+            ("kkt_gap", ()), ("iterations", ()), ("converged", ()),
+            ("n_planning", ())]}
+
+    max_chunks = max(1, -(-cfg.max_iter // chunk))
+    for ci in order:
+        C = float(Cs_np[ci])
+        r = C / C_prev
+        a_c = alpha * r                                  # scaled warm start
+        g_c = (1.0 - r) * np.asarray(Yf) + r * G
+        active = np.arange(B)
+        iters = np.zeros(B)
+        plans = np.zeros(B)
+        for _ in range(max_chunks):
+            bsz = _bucket(len(active))
+            idx = np.concatenate([active, np.repeat(active[:1],
+                                                    bsz - len(active))])
+            res = _chunk_solve(jnp.take(Kf, idx, axis=0),
+                               jnp.take(Yf, idx, axis=0), C,
+                               jnp.asarray(a_c[idx], X.dtype),
+                               jnp.asarray(g_c[idx], X.dtype), ccfg)
+            n = len(active)
+            a_c[active] = np.asarray(res.alpha)[:n]
+            g_c[active] = np.asarray(res.G)[:n]
+            iters[active] += np.asarray(res.iterations)[:n]
+            plans[active] += np.asarray(res.n_planning)[:n]
+            done = np.asarray(res.converged)[:n]
+            for f in ("b", "objective", "kkt_gap"):
+                out[f][active, ci] = np.asarray(getattr(res, f))[:n]
+            out["converged"][active, ci] = done
+            active = active[~done]
+            if len(active) == 0:
+                break
+        out["alpha"][:, ci] = a_c
+        out["G"][:, ci] = g_c
+        out["iterations"][:, ci] = iters
+        out["n_planning"][:, ci] = plans
+        alpha, G, C_prev = a_c, g_c, C
+
+    def shape(f, dtype=X.dtype):
+        arr = out[f].reshape((nG, k, nC) + out[f].shape[2:])
+        return jnp.asarray(arr, dtype)
+
+    zero = jnp.zeros((nG, k, nC), jnp.int32)
+    return SolveResult(
+        alpha=shape("alpha"), b=shape("b"), G=shape("G"),
+        iterations=shape("iterations", jnp.int32),
+        objective=shape("objective"), kkt_gap=shape("kkt_gap"),
+        converged=shape("converged", bool),
+        n_planning=shape("n_planning", jnp.int32),
+        n_free=zero, n_clipped=zero, n_reverted=zero,
+        trace=jnp.zeros((nG, k, nC, 1), X.dtype), n_trace=zero,
+        steps_i=jnp.zeros((nG, k, nC, 1), jnp.int32),
+        steps_j=jnp.zeros((nG, k, nC, 1), jnp.int32),
+        steps_mu=jnp.zeros((nG, k, nC, 1), X.dtype))
+
+
+def grid_decision(Xq, X, gammas, alpha: jax.Array,
+                  b: jax.Array) -> jax.Array:
+    """Decision values of every grid point on query inputs.
+
+    ``alpha``: (n_gamma, k, n_C, l) signed duals from :func:`solve_grid`;
+    ``b``: (n_gamma, k, n_C).  Returns (n_gamma, k, n_C, m) — the query
+    cross-Gram is computed once per gamma and shared by all (class, C)
+    heads.
+    """
+    Xq = jnp.asarray(Xq)
+    X = jnp.asarray(X)
+    gammas = jnp.atleast_1d(jnp.asarray(gammas, X.dtype))
+    sq_q = jnp.sum(Xq * Xq, axis=-1)
+    sq_x = jnp.sum(X * X, axis=-1)
+    d2 = jnp.maximum(sq_q[:, None] + sq_x[None, :] - 2.0 * (Xq @ X.T), 0.0)
+
+    def per_gamma(gamma, a_g, b_g):
+        Kq = jnp.exp(-gamma * d2)                      # (m, l) once per gamma
+        return jnp.einsum("ml,kcl->kcm", Kq, a_g) + b_g[..., None]
+
+    return jax.vmap(per_gamma)(gammas, alpha, b)

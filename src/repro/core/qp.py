@@ -121,6 +121,9 @@ class PrecomputedKernel:
     def entry(self, i: jax.Array, j: jax.Array) -> jax.Array:
         return self.K[i, j]
 
+    def matvec(self, v: jax.Array) -> jax.Array:
+        return self.K @ v
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -156,6 +159,23 @@ class RBFKernel:
               - 2.0 * jnp.dot(xj, xi))
         return jnp.exp(-self.gamma * jnp.maximum(d2, 0.0))
 
+    def matvec(self, v: jax.Array, block: int = 256) -> jax.Array:
+        """``K v`` without materializing K: row-blocked (O(block*l) memory,
+        one fused (block, l) distance+exp+dot per step — warm starts)."""
+        l, d = self.X.shape
+        pad = (-l) % block
+        Xp = jnp.pad(self.X, ((0, pad), (0, 0)))
+        sp = jnp.pad(self.sq_norms, (0, pad))
+
+        def blk(args):
+            Xb, nb = args
+            d2 = nb[:, None] + self.sq_norms[None, :] - 2.0 * (Xb @ self.X.T)
+            return jnp.exp(-self.gamma * jnp.maximum(d2, 0.0)) @ v
+
+        out = jax.lax.map(blk, (Xp.reshape(-1, block, d),
+                                sp.reshape(-1, block)))
+        return out.reshape(-1)[:l]
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -176,6 +196,9 @@ class LinearKernel:
 
     def entry(self, i: jax.Array, j: jax.Array) -> jax.Array:
         return jnp.dot(jnp.take(self.X, i, axis=0), jnp.take(self.X, j, axis=0))
+
+    def matvec(self, v: jax.Array) -> jax.Array:
+        return self.X @ (self.X.T @ v)
 
 
 def make_rbf(X: jax.Array, gamma) -> RBFKernel:

@@ -313,8 +313,10 @@ def init_state(kernel, y, bounds: Bounds, cfg: SolverConfig,
     if alpha0 is None:
         alpha0 = jnp.zeros_like(y)
         G0 = y  # grad f(0) = y: no kernel evaluations (paper §2)
-    else:
-        assert G0 is not None, "warm start needs a matching gradient"
+    elif G0 is None:
+        # Reconstruct grad f(a0) = y - K a0 through the oracle (one matvec).
+        # Warm starts across a C-grid reuse the previous G instead (free).
+        G0 = y - kernel.matvec(alpha0)
     N = cfg.plan_candidates
     cap = cfg.trace_cap if cfg.record_trace else 1
     scap = cfg.step_cap if cfg.record_steps else 1
@@ -381,11 +383,17 @@ def solve_batched(Ks: jax.Array, ys: jax.Array, C,
                   cfg: SolverConfig = SolverConfig()) -> SolveResult:
     """vmap-batched solve over a stack of precomputed-kernel QPs.
 
-    ``Ks``: (B, l, l); ``ys``: (B, l).  One-vs-rest multiclass and C-grid
-    sweeps are batched QPs with a shared or stacked Gram matrix — the TPU
-    throughput mode of the solver (DESIGN.md §3).
+    ``Ks``: (B, l, l); ``ys``: (B, l); ``C``: scalar or (B,) per-problem
+    budgets (C is a traced argument, so heterogeneous batches share one
+    compilation).  One-vs-rest multiclass and C-grid sweeps are batched QPs
+    with a shared or stacked Gram matrix — the TPU throughput mode of the
+    solver (DESIGN.md §3); see :mod:`repro.core.multiclass` and
+    :mod:`repro.core.grid` for the shared-Gram front-ends.
     """
-    def one(K, y):
-        return solve(qp_mod.PrecomputedKernel(K), y, C, cfg)
+    ys = jnp.asarray(ys)
+    Cs = jnp.broadcast_to(jnp.asarray(C, ys.dtype), ys.shape[:1])
 
-    return jax.vmap(one)(Ks, ys)
+    def one(K, y, c):
+        return solve(qp_mod.PrecomputedKernel(K), y, c, cfg)
+
+    return jax.vmap(one)(jnp.asarray(Ks), ys, Cs)

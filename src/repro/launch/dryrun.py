@@ -272,9 +272,8 @@ def make_mesh_by_name(name: str):
     # custom "NxM" or "PxNxM" (small test meshes)
     dims = tuple(int(x) for x in name.split("x"))
     axes = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
-    return jax.make_mesh(dims, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,)
-                         * len(dims))
+    from repro.launch.mesh import _make_mesh
+    return _make_mesh(dims, axes)
 
 
 def main():

@@ -1,3 +1,4 @@
-from repro.svm.data import (chessboard, gaussian_blobs, ring, xor_gaussians,
-                            DATASETS, make_dataset)
+from repro.svm.data import (chessboard, gaussian_blobs, multiclass_blobs,
+                            ring, xor_gaussians, DATASETS, make_dataset)
 from repro.svm.model import SVMModel, predict, decision_function, train_svm
+from repro.svm.svc import SVC

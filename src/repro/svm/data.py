@@ -67,6 +67,22 @@ def xor_gaussians(n: int, seed: int = 0,
     return X, y
 
 
+def multiclass_blobs(n: int, seed: int = 0, k: int = 3, d: int = 2,
+                     sep: float = 3.0) -> Tuple[np.ndarray, np.ndarray]:
+    """k spherical Gaussians on a circle — integer labels 0..k-1 (the
+    one-vs-rest / ``SVC`` multiclass toy problem)."""
+    if d < 2:
+        raise ValueError("multiclass_blobs needs d >= 2 (circle layout)")
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, k, size=n)
+    theta = 2.0 * np.pi * y / k
+    centers = np.zeros((n, d))
+    centers[:, 0] = sep / 2.0 * np.cos(theta)
+    centers[:, 1] = sep / 2.0 * np.sin(theta)
+    X = centers + rng.normal(size=(n, d))
+    return X, y.astype(np.int64)
+
+
 # dataset registry: name -> (generator, default C, default gamma)
 # C/gamma chosen in a generalizing regime, mirroring Table 1's protocol
 # (grid-searched once, then fixed).

@@ -10,6 +10,7 @@ import pytest
 
 from repro.checkpoint import (AsyncCheckpointer, latest_step,
                               restore_checkpoint, save_checkpoint)
+from repro.checkpoint import ckpt as ckpt_mod
 from repro.configs import get_smoke
 from repro.configs.base import TrainConfig
 from repro.data import SyntheticTokens
@@ -32,6 +33,29 @@ def test_roundtrip(tmp_path):
     save_checkpoint(str(tmp_path), 5, state)
     assert latest_step(str(tmp_path)) == 5
     restored = restore_checkpoint(str(tmp_path), 5, state)
+    _tree_equal(state, restored)
+
+
+@pytest.mark.skipif(not ckpt_mod.HAS_ZSTD, reason="zstandard not installed")
+def test_zstd_compressed_on_disk(tmp_path):
+    """With zstd present, the snapshot is the compressed format."""
+    state = {"w": jnp.zeros((256, 256), jnp.float32)}
+    path = save_checkpoint(str(tmp_path), 1, state)
+    assert os.path.exists(os.path.join(path, "state.msgpack.zst"))
+    # all-zero payload must compress far below the raw 256 KiB
+    assert os.path.getsize(os.path.join(path, "state.msgpack.zst")) \
+        < 256 * 256 * 4 / 10
+
+
+def test_uncompressed_fallback_roundtrip(tmp_path, monkeypatch):
+    """Without zstd the checkpointer degrades to raw msgpack, and the
+    restore path reads it back transparently."""
+    monkeypatch.setattr(ckpt_mod, "HAS_ZSTD", False)
+    state = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)}
+    path = save_checkpoint(str(tmp_path), 3, state)
+    assert os.path.exists(os.path.join(path, "state.msgpack"))
+    assert not os.path.exists(os.path.join(path, "state.msgpack.zst"))
+    restored = restore_checkpoint(str(tmp_path), 3, state)
     _tree_equal(state, restored)
 
 

@@ -14,6 +14,7 @@ from repro.models import registry
 from repro.svm.data import xor_gaussians
 
 
+@pytest.mark.slow
 class TestRingCacheWraparound:
     def test_sliding_window_decode_beyond_capacity(self):
         """Decode far past the ring capacity: the windowed model must match

@@ -49,7 +49,12 @@ def test_forward_matches_naive(Sq, Skv, cq, ck, causal, window):
                                rtol=2e-4, atol=2e-4)
 
 
-@pytest.mark.parametrize("Sq,Skv,cq,ck,causal,window", CASES[:4])
+# gradient checks on the larger shapes are slow-tier
+GRAD_CASES = CASES[:2] + [pytest.param(*c, marks=pytest.mark.slow)
+                          for c in CASES[2:4]]
+
+
+@pytest.mark.parametrize("Sq,Skv,cq,ck,causal,window", GRAD_CASES)
 def test_grads_match_naive(Sq, Skv, cq, ck, causal, window):
     rng = np.random.default_rng(1)
     B, KH, G, D = 1, 2, 2, 8

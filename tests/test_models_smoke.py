@@ -12,8 +12,17 @@ from repro.models import registry
 
 F32 = jnp.float32
 
+# Tier-1 keeps two cheap representative archs; the rest ride in the slow
+# tier (full run: pytest -m "").
+_LIGHT_ARCHS = {"deepseek-7b", "internvl2-1b"}
 
-@pytest.mark.parametrize("arch", ARCHS)
+
+def _tiered(archs):
+    return [a if a in _LIGHT_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+            for a in archs]
+
+
+@pytest.mark.parametrize("arch", _tiered(ARCHS))
 def test_forward_and_grad_step(arch):
     cfg = get_smoke(arch)
     params = registry.init_params(jax.random.PRNGKey(0), cfg, F32)
@@ -35,7 +44,7 @@ def test_forward_and_grad_step(arch):
                for g in flat)
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _tiered(ARCHS))
 def test_remat_matches_no_remat(arch):
     cfg = get_smoke(arch)
     params = registry.init_params(jax.random.PRNGKey(1), cfg, F32)
@@ -48,7 +57,7 @@ def test_remat_matches_no_remat(arch):
 DECODE_ARCHS = [a for a in ARCHS]
 
 
-@pytest.mark.parametrize("arch", DECODE_ARCHS)
+@pytest.mark.parametrize("arch", _tiered(DECODE_ARCHS))
 def test_prefill_decode_matches_full_forward(arch):
     """Greedy decode continuation: logits from (prefill + decode_step) must
     match the full forward on the extended sequence."""

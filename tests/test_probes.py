@@ -40,6 +40,7 @@ def test_feature_extraction_shapes(arch):
     assert bool(jnp.all(jnp.isfinite(feats)))
 
 
+@pytest.mark.slow
 def test_probe_on_lm_features_end_to_end():
     """Full pipeline: model features -> batched PA-SMO heads -> predict."""
     cfg = get_smoke("qwen2-0.5b")

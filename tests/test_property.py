@@ -2,7 +2,11 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'hypothesis' dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import qp as qp_mod
 from repro.core import reference as ref
@@ -42,6 +46,7 @@ def test_final_point_feasible_and_converged(seed, n, logC, alg):
     assert float(res.kkt_gap) <= 1e-4 + 1e-12
 
 
+@pytest.mark.slow
 @given(seed=st.integers(0, 10_000), n=st.integers(8, 40), logC=st.floats(-1, 3))
 @settings(**SETTINGS)
 def test_pasmo_reaches_smo_objective(seed, n, logC):
@@ -58,6 +63,7 @@ def test_pasmo_reaches_smo_objective(seed, n, logC):
     assert f_p >= f_s - 1e-4 * (1.0 + abs(f_s))
 
 
+@pytest.mark.slow
 @given(seed=st.integers(0, 10_000), n=st.integers(8, 32), logC=st.floats(-1, 3))
 @settings(**SETTINGS)
 def test_double_step_monotonicity(seed, n, logC):

@@ -81,6 +81,7 @@ _SUBPROCESS_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_sharded_eight_devices_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(

@@ -73,6 +73,7 @@ class TestConvergenceToOptimum:
                                    y - K @ np.asarray(res.alpha),
                                    rtol=1e-8, atol=1e-8)
 
+    @pytest.mark.slow
     def test_pasmo_multi_candidates(self):
         K, y, C = _problem("xor", 60, seed=1)
         f_star = _exact_qp(K, y, C)
@@ -84,6 +85,7 @@ class TestConvergenceToOptimum:
             assert bool(res.converged)
             assert float(res.objective) >= f_star - 1e-4 * (1 + abs(f_star))
 
+    @pytest.mark.slow
     def test_rbf_oracle_equals_precomputed(self):
         X, y = xor_gaussians(50, seed=2)
         gamma, C = 0.5, 100.0
@@ -101,6 +103,7 @@ class TestConvergenceToOptimum:
         np.testing.assert_allclose(float(r1.objective), float(r2.objective),
                                    rtol=1e-8)
 
+    @pytest.mark.slow
     def test_shrinking_same_optimum(self):
         K, y, C = _problem("ring", 80, seed=5)
         base = solve(qp_mod.PrecomputedKernel(jnp.asarray(K)), jnp.asarray(y),

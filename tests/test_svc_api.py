@@ -1,0 +1,83 @@
+"""SVC facade: fit/predict round-trips, batched-vs-single parity, shapes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.svm import SVC
+from repro.svm.data import multiclass_blobs, ring
+
+
+def _binary_data(n=120, seed=0):
+    X, y = ring(n, seed=seed)
+    return X, y.astype(np.int64)  # labels in {-1, 1}
+
+
+def test_binary_fit_predict_roundtrip():
+    X, y = _binary_data()
+    clf = SVC(C=10.0, gamma=1.0, eps=1e-4).fit(X, y)
+    assert clf.score(X, y) > 0.95
+    df = clf.decision_function(X)
+    assert df.shape == (len(y),)
+    # sign(decision) maps to classes_[df >= 0]
+    pred = clf.predict(X)
+    np.testing.assert_array_equal(pred, clf.classes_[(np.asarray(df) >= 0)
+                                                     .astype(int)])
+
+
+def test_multiclass_fit_predict_roundtrip():
+    X, y = multiclass_blobs(150, seed=1, k=3)
+    clf = SVC(C=10.0, gamma=0.5, eps=1e-4).fit(X, y)
+    assert clf.score(X, y) > 0.8
+    df = clf.decision_function(X)
+    assert df.shape == (len(y), 3)
+    assert clf.alpha_.shape == (3, len(y))
+    assert set(clf.predict(X)) <= set(clf.classes_)
+    # held-out data from the same distribution
+    Xq, yq = multiclass_blobs(60, seed=9, k=3)
+    assert clf.score(Xq, yq) > 0.7
+
+
+def test_batched_vs_single_example_predict_parity():
+    X, y = multiclass_blobs(90, seed=2, k=3)
+    clf = SVC(C=5.0, gamma=0.7, eps=1e-4).fit(X, y)
+    Xq, _ = multiclass_blobs(25, seed=3, k=3)
+    batched = clf.predict(Xq)
+    singles = np.array([clf.predict(Xq[i]) for i in range(len(Xq))])
+    np.testing.assert_array_equal(batched, singles)
+    df_b = np.asarray(clf.decision_function(Xq))
+    for i in range(len(Xq)):
+        np.testing.assert_allclose(np.asarray(clf.decision_function(Xq[i])),
+                                   df_b[i], rtol=1e-10)
+
+
+def test_label_dtype_preserved():
+    X, y = _binary_data(80, seed=4)
+    labels = np.where(y > 0, 7, 3)  # arbitrary non-contiguous labels
+    clf = SVC(C=10.0, gamma=1.0, eps=1e-3).fit(X, labels)
+    assert set(np.unique(clf.predict(X))) <= {3, 7}
+    assert clf.score(X, labels) > 0.9
+
+
+def test_gamma_scale_and_introspection():
+    X, y = multiclass_blobs(80, seed=5, k=3)
+    clf = SVC(C=10.0, gamma="scale", eps=1e-3).fit(X, y)
+    assert clf.gamma_ > 0
+    assert clf.n_support_.shape == (3,)
+    assert np.all(clf.n_support_ > 0)
+
+
+def test_precompute_false_matches_precompute_true():
+    X, y = _binary_data(70, seed=6)
+    a = SVC(C=10.0, gamma=1.0, eps=1e-4, precompute=True).fit(X, y)
+    b = SVC(C=10.0, gamma=1.0, eps=1e-4, precompute=False).fit(X, y)
+    np.testing.assert_allclose(float(a.fit_result_.objective),
+                               float(b.fit_result_.objective), rtol=1e-8)
+    np.testing.assert_array_equal(a.predict(X), b.predict(X))
+
+
+def test_unfitted_and_degenerate_errors():
+    with pytest.raises(RuntimeError):
+        SVC().predict(np.zeros((3, 2)))
+    with pytest.raises(ValueError):
+        SVC().fit(np.zeros((4, 2)), np.zeros(4))  # single class

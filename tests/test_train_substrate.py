@@ -89,6 +89,7 @@ def test_train_step_reduces_loss():
     assert losses[-1] < losses[0] - 0.5, losses[::6]
 
 
+@pytest.mark.slow
 def test_microbatch_accumulation_matches_full_batch():
     cfg = get_smoke("qwen2-0.5b")
     data = SyntheticTokens(vocab=cfg.vocab, seq_len=16, global_batch=8)
@@ -127,6 +128,7 @@ def test_error_feedback_unbiased_over_time():
     np.testing.assert_allclose(applied / 50, np.asarray(g_true), atol=1e-2)
 
 
+@pytest.mark.slow
 def test_compressed_training_still_converges():
     cfg = get_smoke("qwen2-0.5b")
     tc = TrainConfig(**{**TC.__dict__, "compress_grads": True})
