@@ -1,25 +1,31 @@
-"""Grid-solve throughput: batched multi-QP subsystem vs sequential loops.
+"""Grid-solve throughput: batched multi-QP engines vs sequential loops.
 
-Three ways to solve a (gamma, class, C) model-selection grid:
+Contenders for a (gamma, class, C) model-selection grid:
 
-* ``grid/compacted``  — :func:`repro.core.grid.solve_grid_compacted`: all
-  (gamma, class) lanes vmapped, scaled warm starts along C, and the batch
-  re-compacted every ``chunk`` iterations so converged lanes stop costing
-  wall time.  The CPU throughput mode.
-* ``grid/fused``      — :func:`repro.core.grid.solve_grid`: the whole grid
-  as ONE jit-compiled vmapped call (the accelerator mode; on CPU it pays
-  the straggler tax of the slowest lane per C-step).
-* ``grid/seq_oracle`` — the status-quo loop: one jitted ``solve`` per grid
-  point through the on-the-fly RBF row oracle (what ``train_svm`` does
-  today).  ``grid/seq_gram`` is the same loop upgraded with a precomputed
-  Gram per gamma — a stronger baseline than the repo had.
+* ``sequential``    — the status-quo loop: one jitted ``solve`` per grid
+  point over a per-gamma precomputed Gram (a stronger baseline than the
+  original on-the-fly-row loop; reported as the ``sequential`` mode).
+* ``vmapped``       — :func:`repro.core.grid.solve_grid`: the whole grid as
+  ONE jit-compiled vmapped call over the standard ~4-pass solver body (the
+  PR-1 engine; op-dispatch bound on CPU).
+* ``compacted``     — :func:`repro.core.grid.solve_grid_compacted`: the
+  vmapped engine in host-driven chunks with converged-lane compaction.
+* ``fused_batched`` — :func:`repro.core.grid.solve_grid` with
+  ``impl="jnp"``: the fused two-pass batched engine, two kernel launches
+  per iteration for all lanes, in-kernel lane freezing.
+* ``compacted_fused`` — the chunked driver over the fused engine.
 
-``grid/speedup`` = seq_oracle / compacted (the acceptance bar is >= 2x on
-CPU).  All timings are min-over-repeats measured in alternating pairs, so
-slow host windows (thread migration, cgroup throttling) hit every
-contender equally.
+Acceptance bar (ISSUE 2): ``fused_batched`` >= 2x over ``vmapped`` on the
+CPU jnp backend for a >= 24-lane heterogeneous grid at l ~ 512.  All
+timings are min-over-repeats measured in alternating rounds, so slow host
+windows (thread migration, cgroup throttling) hit every contender equally.
+
+``run(profile=..., json_path=...)`` also emits the machine-readable
+``BENCH_grid.json`` perf-trajectory record (see ``benchmarks.run --quick``).
 """
 
+import json
+import os
 import time
 
 import jax
@@ -30,6 +36,25 @@ from repro.core import grid as grid_mod
 from repro.core import multiclass as mc
 from repro.core import qp as qp_mod
 from repro.core.solver import SolverConfig, solve
+
+# Each config: problem shape + which contenders to time.  "quick" is the CI
+# trajectory profile (small, <1 min); "full" ends with the acceptance
+# config — 8 gammas x 3 classes = 24 heterogeneous lanes at l = 512.
+PROFILES = {
+    "quick": [
+        dict(l=96, d=16, k=3, n_gamma=4, g_range=(0.1, 1.0),
+             Cs=[1.0, 8.0], repeat=2, sequential=True),
+    ],
+    "full": [
+        dict(l=64, d=32, k=4, n_gamma=8, g_range=(0.05, 1.0),
+             Cs=list(np.geomspace(0.5, 64.0, 10)), repeat=4,
+             sequential=True),
+        # acceptance config: 8 gammas x 3 classes x 4 C values = 96
+        # heterogeneous QPs (24 (gamma, class) lanes) at l = 512
+        dict(l=512, d=32, k=3, n_gamma=8, g_range=(0.05, 2.0),
+             Cs=[0.5, 2.0, 8.0, 32.0], repeat=3, sequential=True),
+    ],
+}
 
 
 def _workload(l, d, k, n_gamma, g_range, Cs):
@@ -42,13 +67,10 @@ def _workload(l, d, k, n_gamma, g_range, Cs):
     return X, Y, gammas, np.asarray(Cs, np.float64)
 
 
-def _sequential(X, Y, gammas, Cs, cfg, precompute):
+def _sequential(X, Y, gammas, Cs, cfg):
     outs = []
     for g in gammas:
-        if precompute:
-            kern = qp_mod.PrecomputedKernel(jnp.exp(-g * grid_mod.sqdist(X)))
-        else:
-            kern = qp_mod.make_rbf(X, g)
+        kern = qp_mod.PrecomputedKernel(jnp.exp(-g * grid_mod.sqdist(X)))
         for c in range(Y.shape[0]):
             for C in Cs:
                 outs.append(solve(kern, Y[c], float(C), cfg))
@@ -58,48 +80,97 @@ def _sequential(X, Y, gammas, Cs, cfg, precompute):
 
 def _interleaved_min(fns, repeat):
     """min wall time per contender, measured in alternating rounds."""
-    for fn in fns:
+    for fn in fns.values():
         fn()  # warmup / compile
-    mins = [float("inf")] * len(fns)
+    mins = {name: float("inf") for name in fns}
     for _ in range(repeat):
-        for i, fn in enumerate(fns):
+        for name, fn in fns.items():
             t0 = time.perf_counter()
             fn()
-            mins[i] = min(mins[i], time.perf_counter() - t0)
+            mins[name] = min(mins[name], time.perf_counter() - t0)
     return mins
 
 
-def run():
+def run_bench(profile: str = "full") -> dict:
     cfg = SolverConfig(eps=1e-3)
-    rows = []
-    # Small-l, realistic feature dim, dense C-path: the model-selection
-    # shape (many small QPs).  The larger config is reported for context.
-    for l, d, k, ng, g_range, Cs, rep in [
-            (64, 32, 4, 8, (0.05, 1.0), np.geomspace(0.5, 64.0, 10), 6),
-            (256, 2, 3, 2, (0.3, 1.0), [1.0, 4.0, 16.0, 32.0], 3)]:
-        X, Y, gammas, Cs = _workload(l, d, k, ng, g_range, Cs)
-        n_qp = ng * k * len(Cs)
+    bench = {
+        "benchmark": "grid",
+        "profile": profile,
+        "backend": jax.default_backend(),
+        "device": str(jax.devices()[0]),
+        "x64": bool(jax.config.jax_enable_x64),
+        "configs": [],
+    }
+    for spec in PROFILES[profile]:
+        l, d, k, ng = spec["l"], spec["d"], spec["k"], spec["n_gamma"]
+        X, Y, gammas, Cs = _workload(l, d, k, ng, spec["g_range"],
+                                     spec["Cs"])
+        lanes = ng * k
+        n_qp = lanes * len(Cs)
 
-        res = grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg)
+        res = grid_mod.solve_grid(X, Y, Cs, gammas, cfg, impl="jnp")
         assert bool(jnp.all(res.converged))
 
-        def compacted():
-            r = grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg)
-            jax.block_until_ready(r.alpha)
+        fns = {
+            "vmapped": lambda: jax.block_until_ready(
+                grid_mod.solve_grid(X, Y, Cs, gammas, cfg).alpha),
+            "compacted": lambda: jax.block_until_ready(
+                grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg).alpha),
+            "fused_batched": lambda: jax.block_until_ready(
+                grid_mod.solve_grid(X, Y, Cs, gammas, cfg,
+                                    impl="jnp").alpha),
+            "compacted_fused": lambda: jax.block_until_ready(
+                grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg,
+                                              impl="jnp").alpha),
+        }
+        if spec["sequential"]:
+            fns["sequential"] = lambda: _sequential(X, Y, gammas, Cs, cfg)
 
-        def fused():
-            r = grid_mod.solve_grid(X, Y, Cs, gammas, cfg)
-            jax.block_until_ready(r.alpha)
+        secs = _interleaved_min(fns, spec["repeat"])
+        speedups = {
+            "fused_batched_vs_vmapped": secs["vmapped"]
+                                        / secs["fused_batched"],
+            "compacted_fused_vs_vmapped": secs["vmapped"]
+                                          / secs["compacted_fused"],
+        }
+        if "sequential" in secs:
+            speedups["fused_batched_vs_sequential"] = (
+                secs["sequential"] / secs["fused_batched"])
+            speedups["compacted_vs_sequential"] = (
+                secs["sequential"] / secs["compacted"])
+        bench["configs"].append({
+            "config": {kk: spec[kk] for kk in
+                       ("l", "d", "k", "n_gamma", "g_range", "Cs",
+                        "repeat")},
+            "lanes": lanes,
+            "n_qp": n_qp,
+            "eps": cfg.eps,
+            "seconds": secs,
+            "speedups": speedups,
+        })
+    return bench
 
-        t_c, t_f, t_o, t_g = _interleaved_min(
-            [compacted, fused,
-             lambda: _sequential(X, Y, gammas, Cs, cfg, precompute=False),
-             lambda: _sequential(X, Y, gammas, Cs, cfg, precompute=True)],
-            repeat=rep)
-        tag = f"l{l}_k{k}_g{ng}_{n_qp}qp"
-        for name, t in [("compacted", t_c), ("fused", t_f),
-                        ("seq_oracle", t_o), ("seq_gram", t_g)]:
+
+def rows_from_bench(bench: dict):
+    rows = []
+    for entry in bench["configs"]:
+        c = entry["config"]
+        tag = f"l{c['l']}_k{c['k']}_g{c['n_gamma']}_{entry['n_qp']}qp"
+        for name, t in sorted(entry["seconds"].items()):
             rows.append((f"grid/{name}_{tag}", t * 1e6,
-                         f"{n_qp / t:.1f}_qp_per_s"))
-        rows.append((f"grid/speedup_{tag}", 0.0, f"{t_o / t_c:.2f}x"))
+                         f"{entry['n_qp'] / t:.1f}_qp_per_s"))
+        for name, s in sorted(entry["speedups"].items()):
+            rows.append((f"grid/{name}_{tag}", 0.0, f"{s:.2f}x"))
     return rows
+
+
+def run(profile: str = "full", json_path: str = None):
+    bench = run_bench(profile)
+    if json_path:
+        parent = os.path.dirname(json_path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return rows_from_bench(bench)

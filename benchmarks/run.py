@@ -1,7 +1,10 @@
 """Benchmark runner: one module per paper table/figure + system benches.
 
 Prints ``name,us_per_call,derived`` CSV (stdout).  Select subsets with
-``python -m benchmarks.run --only table2,fig3``.
+``python -m benchmarks.run --only table2,fig3``.  The ``grid`` benchmark
+additionally writes a machine-readable ``BENCH_grid.json`` perf-trajectory
+record (``--json-dir`` controls where; ``--quick`` selects the small CI
+profile).
 """
 
 import argparse
@@ -32,6 +35,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: "
                          + ",".join(k for k, _ in REGISTRY))
+    ap.add_argument("--quick", action="store_true",
+                    help="small CI profile for benchmarks that support "
+                         "profiles (currently: grid)")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for machine-readable BENCH_*.json "
+                         "records (currently: BENCH_grid.json)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     if only:
@@ -41,6 +50,7 @@ def main() -> None:
                      f"choose from: {','.join(k for k, _ in REGISTRY)}")
 
     import importlib
+    import os
     failures = 0
     for key, module in REGISTRY:
         if only is not None and key not in only:
@@ -49,7 +59,14 @@ def main() -> None:
         print(f"# --- {key} ({module}) ---", flush=True)
         try:
             mod = importlib.import_module(module)
-            emit(mod.run())
+            if key == "grid":
+                json_path = os.path.join(args.json_dir, "BENCH_grid.json")
+                rows = mod.run(profile="quick" if args.quick else "full",
+                               json_path=json_path)
+                emit(rows)
+                print(f"# wrote {json_path}", flush=True)
+            else:
+                emit(mod.run())
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"{key}/ERROR,0,{type(e).__name__}:{e}", flush=True)

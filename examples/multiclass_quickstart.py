@@ -40,6 +40,15 @@ def main():
     print(f"grid: {res.alpha.shape[0] * res.alpha.shape[1] * res.alpha.shape[2]}"
           f" QPs solved in one call, all converged={bool(res.converged.all())}")
 
+    # same grid through the fused two-pass batched engine (one while_loop,
+    # two kernel passes per iteration for every lane; see README "Backend /
+    # engine selection")
+    res_f = grid_mod.solve_grid(jnp.asarray(Xtr), Y, Cs, gammas,
+                                SolverConfig(eps=1e-3), impl="auto")
+    agree = bool(jnp.allclose(res_f.objective, res.objective, rtol=1e-5))
+    print(f"fused-batched engine: converged={bool(res_f.converged.all())} "
+          f"objectives_match_vmapped={agree}")
+
     dec = grid_mod.grid_decision(jnp.asarray(Xte), jnp.asarray(Xtr), gammas,
                                  res.alpha, res.b)   # (nG, k, nC, m)
     pred = jnp.argmax(dec, axis=1)                   # (nG, nC, m)

@@ -18,6 +18,18 @@ whole grid a single compiled call instead of a Python loop:
   the restart costs O(l), no kernel evaluations (cf. the paper's cold-start
   property in §2).
 
+Two engines share this structure, selected by ``impl``:
+
+* ``impl=None`` — the vmapped standard solver over per-gamma precomputed
+  Gram matrices (the differential oracle; ~4 logical passes per iteration
+  per lane).
+* ``impl="auto"|"pallas"|"interpret"|"jnp"`` — the fused two-pass batched
+  engine (:func:`repro.core.solver_fused.solve_fused_batched`): the whole
+  lane batch advances through ONE while_loop with TWO batched kernel
+  launches per iteration, no Gram materialization, converged lanes frozen
+  in-kernel.  The direct answer to the ROADMAP's "vmapped while_loop body
+  is op-dispatch bound" item.
+
 Axis convention for all stacked results: ``(n_gamma, n_class, n_C, ...)``.
 """
 
@@ -32,6 +44,7 @@ import numpy as np
 
 from repro.core import qp as qp_mod
 from repro.core.solver import SolveResult, SolverConfig, solve
+from repro.core.solver_fused import FusedResult, solve_fused_batched
 
 
 def sqdist(X: jax.Array) -> jax.Array:
@@ -70,9 +83,80 @@ def _solve_grid(X, Y, Cs, gammas, cfg: SolverConfig,
     return jax.vmap(per_gamma)(gammas)
 
 
+# ---------------------------------------------------------------------------
+# Fused-batched engine (two kernel launches per iteration, all lanes)
+# ---------------------------------------------------------------------------
+#
+# The vmapped engine above runs the standard ~4-pass solver body per lane —
+# correct everywhere, but op-dispatch bound on CPU (the ROADMAP open item).
+# The fused engine flattens ALL grid axes — gamma, class, AND C — into
+# B = n_gamma * k * n_C lanes over shared X and drives the whole batch
+# through ``solve_fused_batched``: ONE while_loop total, TWO batched kernel
+# launches per iteration, O(B) scalar algebra in between.  In-kernel lane
+# freezing is what makes the flat batch viable: the wall clock is the
+# SLOWEST single lane, not the sum of per-C maxima that the scanned
+# warm-start chain pays (all-C-lanes-at-once replaces the C chain, so the
+# scaled warm start does not apply here; lanes cold-start).
+#
+# On the CPU jnp backend the bank of per-gamma Gram matrices is built once
+# (same (n_gamma, l, l) memory as the vmapped engine) and rows become
+# gathers; on pallas/interpret the rows are recomputed from X tiles (the
+# accelerator memory mode — no Gram at all).
+#
+# The fused engine does not track the per-step counters n_clipped /
+# n_reverted (genuinely untracked: they are zero-filled); n_free is instead
+# reported as the number of *free support vectors* at the optimum, computed
+# from the final alpha and the box bounds.
+
+
+def _free_sv_count(alpha, L, U) -> jax.Array:
+    """Per-lane count of strictly-interior (free) support vectors."""
+    return jnp.sum((alpha > L) & (alpha < U), axis=-1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl", "block_l"))
+def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
+                      impl: str, block_l: int) -> SolveResult:
+    from repro.kernels.ops import resolve_impl
+    k, l = Y.shape
+    nG = gammas.shape[0]
+    nC = Cs.shape[0]
+    # lane order (gamma, class, C) row-major, matching the result axes
+    Yf = jnp.repeat(jnp.tile(Y, (nG, 1)), nC, axis=0)    # (B, l)
+    gf = jnp.repeat(gammas, k * nC)                      # (B,)
+    Cf = jnp.tile(Cs, nG * k)                            # (B,)
+    if resolve_impl(impl) == "jnp":
+        bank = jnp.exp(-gammas[:, None, None] * sqdist(X))
+        bidx = jnp.repeat(jnp.arange(nG, dtype=jnp.int32), k * nC)
+        out = solve_fused_batched(X, Yf, Cf, gf, cfg, impl=impl,
+                                  block_l=block_l, gram=bank, gram_idx=bidx)
+    else:
+        out = solve_fused_batched(X, Yf, Cf, gf, cfg, impl=impl,
+                                  block_l=block_l)
+
+    def to_grid(leaf):                                   # (B, ...) leaves
+        return leaf.reshape((nG, k, nC) + leaf.shape[1:])
+
+    fr: FusedResult = jax.tree.map(to_grid, out)
+    YC = Y[None, :, None, :] * Cs[None, None, :, None]
+    n_free = _free_sv_count(fr.alpha, jnp.minimum(0.0, YC),
+                            jnp.maximum(0.0, YC))
+    zero = jnp.zeros((nG, k, Cs.shape[0]), jnp.int32)
+    return SolveResult(
+        alpha=fr.alpha, b=fr.b, G=fr.G, iterations=fr.iterations,
+        objective=fr.objective, kkt_gap=fr.kkt_gap, converged=fr.converged,
+        n_planning=fr.n_planning, n_free=n_free,
+        n_clipped=zero, n_reverted=zero,
+        trace=jnp.zeros((nG, k, Cs.shape[0], 1), X.dtype), n_trace=zero,
+        steps_i=jnp.zeros((nG, k, Cs.shape[0], 1), jnp.int32),
+        steps_j=jnp.zeros((nG, k, Cs.shape[0], 1), jnp.int32),
+        steps_mu=jnp.zeros((nG, k, Cs.shape[0], 1), X.dtype))
+
+
 def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
-               warm_start: bool = True) -> SolveResult:
-    """Solve the full (gamma, class, C) grid in ONE compiled vmapped call.
+               warm_start: bool = True, impl: str | None = None,
+               block_l: int = 1024) -> SolveResult:
+    """Solve the full (gamma, class, C) grid in ONE compiled call.
 
     ``X``: (l, d) shared inputs; ``Y``: (k, l) signed label vectors (a 1-D
     ``y`` is promoted to one class head); ``Cs``: (n_C,); ``gammas``:
@@ -80,10 +164,26 @@ def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
     leaves have leading axes ``(n_gamma, n_class, n_C)`` aligned with the
     *input* order of ``Cs``/``gammas``.
 
-    With ``warm_start=True`` the C-axis is internally solved in ascending
-    order (results are scattered back to input order), chaining each solve
-    from the previous optimum; ``warm_start=False`` gives independent
-    cold starts — same optima, more iterations (used by the parity tests).
+    ``impl`` selects the engine.  ``None`` (default) is the vmapped
+    standard-solver path over per-gamma precomputed Gram matrices — the
+    differential oracle.  Any kernel backend name
+    (``"auto"``/``"pallas"``/``"interpret"``/``"jnp"``) routes the grid
+    through the fused two-pass batched engine
+    (:func:`repro.core.solver_fused.solve_fused_batched`): the WHOLE
+    (gamma, class, C) grid becomes one flat lane batch advanced by a
+    single while_loop with two kernel launches per iteration and
+    in-kernel lane freezing (jnp backend: Gram-bank gathers; pallas:
+    X-tile row recompute, no Gram).  The fused engine requires
+    ``cfg.algorithm in ("smo", "pasmo")``, ``plan_candidates == 1``,
+    WSS2 selection and no trace/step recording (asserted), and
+    zero-fills the step-type counters (see module notes).
+
+    With ``warm_start=True`` the vmapped engine solves the C-axis in
+    ascending order (results are scattered back to input order), chaining
+    each solve from the previous optimum; ``warm_start=False`` gives
+    independent cold starts — same optima, more iterations (used by the
+    parity tests).  The fused engine runs all C lanes concurrently from
+    cold starts, so ``warm_start`` has no effect there.
     """
     X = jnp.asarray(X)
     Y = jnp.asarray(Y)
@@ -92,8 +192,12 @@ def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
     Cs_np = np.asarray(Cs, dtype=np.float64).reshape(-1)
     gammas_np = np.asarray(gammas, dtype=np.float64).reshape(-1)
     order = np.argsort(Cs_np, kind="stable")
-    res = _solve_grid(X, Y, jnp.asarray(Cs_np[order], X.dtype),
-                      jnp.asarray(gammas_np, X.dtype), cfg, warm_start)
+    Cs_j = jnp.asarray(Cs_np[order], X.dtype)
+    gammas_j = jnp.asarray(gammas_np, X.dtype)
+    if impl is None:
+        res = _solve_grid(X, Y, Cs_j, gammas_j, cfg, warm_start)
+    else:
+        res = _solve_grid_fused(X, Y, Cs_j, gammas_j, cfg, impl, block_l)
     if np.any(order != np.arange(len(Cs_np))):
         inv = np.argsort(order, kind="stable")
         res = jax.tree.map(lambda leaf: jnp.take(leaf, inv, axis=2), res)
@@ -121,19 +225,128 @@ def _bucket(n: int) -> int:
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def _chunk_solve(Ks, ys, C, a0, g0, cfg: SolverConfig) -> SolveResult:
+def _chunk_solve(Ks, gidx, ys, C, a0, g0, cfg: SolverConfig) -> SolveResult:
+    """One chunk of vmapped solves over lanes indexing the shared Gram bank.
+
+    ``Ks`` is the un-mapped (n_gamma, l, l) stack; ``gidx`` maps each lane
+    to its gamma — a :class:`~repro.core.qp.StackedKernel` gather per row
+    access instead of a per-lane Gram copy (``jnp.repeat`` would cost
+    k-fold memory on multiclass grids).
+    """
     return jax.vmap(
-        lambda K, y, a, g: solve(qp_mod.PrecomputedKernel(K), y, C, cfg,
-                                 alpha0=a, G0=g))(Ks, ys, a0, g0)
+        lambda g, y, a, gr: solve(qp_mod.StackedKernel(Ks, g), y, C, cfg,
+                                  alpha0=a, G0=gr))(gidx, ys, a0, g0)
+
+
+# step-type counters a chunked solve CAN resume across chunks (they are
+# plain per-step sums, so summing the per-chunk values matches solve_grid)
+_CHUNK_COUNTERS = ("iterations", "n_planning", "n_free", "n_clipped",
+                   "n_reverted")
+
+
+def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
+                          cfg: SolverConfig, chunk: int, impl: str,
+                          block_l: int) -> SolveResult:
+    """Chunked driver over the fused engine, FLAT lane layout.
+
+    Like :func:`_solve_grid_fused` every (gamma, class, C) grid point is
+    its own cold-started lane — there is no C chain to scan — and between
+    chunks the host drops converged lanes (power-of-two bucketing keeps
+    the compile count logarithmic).  Compaction stacks with the in-kernel
+    freeze: frozen lanes cost masked no-op work only until the next chunk
+    boundary, after which they cost nothing.
+    """
+    from repro.kernels.ops import resolve_impl
+    k, l = Y.shape
+    nG, nC = len(gammas_np), len(Cs_np)
+    B = nG * k * nC
+    dtype = X.dtype
+    Yf = np.repeat(np.tile(np.asarray(Y, np.float64), (nG, 1)), nC, axis=0)
+    gam_lane = np.repeat(gammas_np, k * nC)
+    C_lane = np.tile(Cs_np, nG * k)
+    g_of_lane = np.repeat(np.arange(nG, dtype=np.int32), k * nC)
+    use_bank = resolve_impl(impl) == "jnp"
+    bank = (jnp.exp(-jnp.asarray(gammas_np, dtype)[:, None, None]
+                    * sqdist(X)) if use_bank else None)
+    # never exceed the caller's budget: the last chunk may be partial
+    ccfg = dataclasses.replace(cfg, max_iter=min(chunk, cfg.max_iter))
+
+    a_c = np.zeros((B, l))
+    g_c = Yf.copy()
+    out = {f: np.zeros((B,)) for f in
+           ("b", "objective", "kkt_gap", "converged", "iterations",
+            "n_planning")}
+    active = np.arange(B)
+    for _ in range(max(1, -(-cfg.max_iter // chunk))):
+        bsz = _bucket(len(active))
+        idx = np.concatenate([active,
+                              np.repeat(active[:1], bsz - len(active))])
+        bank_kw = (dict(gram=bank, gram_idx=jnp.asarray(g_of_lane[idx]))
+                   if use_bank else {})
+        res = solve_fused_batched(
+            X, jnp.asarray(Yf[idx], dtype), jnp.asarray(C_lane[idx], dtype),
+            jnp.asarray(gam_lane[idx], dtype), ccfg, impl=impl,
+            block_l=block_l, alpha0=jnp.asarray(a_c[idx], dtype),
+            G0=jnp.asarray(g_c[idx], dtype), **bank_kw)
+        n = len(active)
+        a_c[active] = np.asarray(res.alpha)[:n]
+        g_c[active] = np.asarray(res.G)[:n]
+        out["iterations"][active] += np.asarray(res.iterations)[:n]
+        out["n_planning"][active] += np.asarray(res.n_planning)[:n]
+        done = np.asarray(res.converged)[:n]
+        for f in ("b", "objective", "kkt_gap"):
+            out[f][active] = np.asarray(getattr(res, f))[:n]
+        out["converged"][active] = done
+        active = active[~done]
+        if len(active) == 0:
+            break
+
+    n_free = np.asarray(_free_sv_count(
+        a_c, np.minimum(0.0, Yf * C_lane[:, None]),
+        np.maximum(0.0, Yf * C_lane[:, None])))
+
+    def shape(arr, dt=dtype):
+        return jnp.asarray(arr.reshape((nG, k, nC) + arr.shape[1:]), dt)
+
+    zero = jnp.zeros((nG, k, nC), jnp.int32)
+    return SolveResult(
+        alpha=shape(a_c), b=shape(out["b"]), G=shape(g_c),
+        iterations=shape(out["iterations"], jnp.int32),
+        objective=shape(out["objective"]), kkt_gap=shape(out["kkt_gap"]),
+        converged=shape(out["converged"], bool),
+        n_planning=shape(out["n_planning"], jnp.int32),
+        n_free=shape(n_free, jnp.int32),
+        n_clipped=zero, n_reverted=zero,
+        trace=jnp.zeros((nG, k, nC, 1), dtype), n_trace=zero,
+        steps_i=jnp.zeros((nG, k, nC, 1), jnp.int32),
+        steps_j=jnp.zeros((nG, k, nC, 1), jnp.int32),
+        steps_mu=jnp.zeros((nG, k, nC, 1), dtype))
 
 
 def solve_grid_compacted(X, Y, Cs, gammas,
                          cfg: SolverConfig = SolverConfig(), *,
-                         chunk: int = 96) -> SolveResult:
+                         chunk: int = 96, impl: str | None = None,
+                         block_l: int = 1024) -> SolveResult:
     """Host-driven variant of :func:`solve_grid`: same (gamma, class, C)
     result axes, but the batch is re-compacted every ``chunk`` iterations so
     converged lanes stop consuming wall time.  This is the CPU throughput
     mode; the single fused call is the accelerator mode.
+
+    ``impl`` selects the chunk engine exactly as in :func:`solve_grid`.
+    ``None`` runs the vmapped standard solver over the shared per-gamma
+    Gram bank (lanes *index* the (n_gamma, l, l) stack — no per-lane Gram
+    copies), scanning the C axis with scaled warm starts; the per-step
+    counters ``n_free``/``n_clipped``/``n_reverted`` are accumulated
+    across chunks, matching :func:`solve_grid` semantics.  A kernel
+    backend name routes chunks through
+    :func:`~repro.core.solver_fused.solve_fused_batched` in the FLAT lane
+    layout (every (gamma, class, C) point is a lane; compaction stacks
+    with the in-kernel freeze); there ``n_free`` is the
+    free-support-vector count from the final ``alpha``/bounds while
+    ``n_clipped``/``n_reverted`` are genuinely untracked (zero) — the
+    fused iteration never materializes the step type.  The trace/step
+    recording buffers are placeholders in both modes (chunk resumes reset
+    the O(1) recording state).
     """
     X = jnp.asarray(X)
     Y = jnp.asarray(Y)
@@ -142,23 +355,27 @@ def solve_grid_compacted(X, Y, Cs, gammas,
     k, l = Y.shape
     Cs_np = np.asarray(Cs, np.float64).reshape(-1)
     gammas_np = np.asarray(gammas, np.float64).reshape(-1)
+    if impl is not None:
+        return _compacted_fused_flat(X, Y, Cs_np, gammas_np, cfg, chunk,
+                                     impl, block_l)
     order = np.argsort(Cs_np, kind="stable")
     nG, nC = len(gammas_np), len(Cs_np)
     B = nG * k
 
+    Yf = jnp.tile(Y, (nG, 1))                           # (B, l)
+    g_of_lane = np.repeat(np.arange(nG, dtype=np.int32), k)
     D2 = sqdist(X)
     Ks = jnp.exp(-jnp.asarray(gammas_np, X.dtype)[:, None, None] * D2)
-    Kf = jnp.repeat(Ks, k, axis=0)                      # (B, l, l) lane Grams
-    Yf = jnp.tile(Y, (nG, 1))                           # (B, l)
-    ccfg = dataclasses.replace(cfg, max_iter=chunk)
+    # never exceed the caller's budget: the last chunk may be partial
+    ccfg = dataclasses.replace(cfg, max_iter=min(chunk, cfg.max_iter))
 
     alpha = np.zeros((B, l))
     G = np.asarray(Yf, np.float64).copy()
     C_prev = float(Cs_np[order][0])
     out = {f: np.zeros((B, nC) + s) for f, s in
            [("alpha", (l,)), ("G", (l,)), ("b", ()), ("objective", ()),
-            ("kkt_gap", ()), ("iterations", ()), ("converged", ()),
-            ("n_planning", ())]}
+            ("kkt_gap", ()), ("converged", ()),
+            *[(f, ()) for f in _CHUNK_COUNTERS]]}
 
     max_chunks = max(1, -(-cfg.max_iter // chunk))
     for ci in order:
@@ -167,21 +384,20 @@ def solve_grid_compacted(X, Y, Cs, gammas,
         a_c = alpha * r                                  # scaled warm start
         g_c = (1.0 - r) * np.asarray(Yf) + r * G
         active = np.arange(B)
-        iters = np.zeros(B)
-        plans = np.zeros(B)
+        counts = {f: np.zeros(B) for f in _CHUNK_COUNTERS}
         for _ in range(max_chunks):
             bsz = _bucket(len(active))
             idx = np.concatenate([active, np.repeat(active[:1],
                                                     bsz - len(active))])
-            res = _chunk_solve(jnp.take(Kf, idx, axis=0),
+            res = _chunk_solve(Ks, jnp.asarray(g_of_lane[idx]),
                                jnp.take(Yf, idx, axis=0), C,
                                jnp.asarray(a_c[idx], X.dtype),
                                jnp.asarray(g_c[idx], X.dtype), ccfg)
             n = len(active)
             a_c[active] = np.asarray(res.alpha)[:n]
             g_c[active] = np.asarray(res.G)[:n]
-            iters[active] += np.asarray(res.iterations)[:n]
-            plans[active] += np.asarray(res.n_planning)[:n]
+            for f in _CHUNK_COUNTERS:
+                counts[f][active] += np.asarray(getattr(res, f))[:n]
             done = np.asarray(res.converged)[:n]
             for f in ("b", "objective", "kkt_gap"):
                 out[f][active, ci] = np.asarray(getattr(res, f))[:n]
@@ -191,8 +407,8 @@ def solve_grid_compacted(X, Y, Cs, gammas,
                 break
         out["alpha"][:, ci] = a_c
         out["G"][:, ci] = g_c
-        out["iterations"][:, ci] = iters
-        out["n_planning"][:, ci] = plans
+        for f in _CHUNK_COUNTERS:
+            out[f][:, ci] = counts[f]
         alpha, G, C_prev = a_c, g_c, C
 
     def shape(f, dtype=X.dtype):
@@ -206,7 +422,9 @@ def solve_grid_compacted(X, Y, Cs, gammas,
         objective=shape("objective"), kkt_gap=shape("kkt_gap"),
         converged=shape("converged", bool),
         n_planning=shape("n_planning", jnp.int32),
-        n_free=zero, n_clipped=zero, n_reverted=zero,
+        n_free=shape("n_free", jnp.int32),
+        n_clipped=shape("n_clipped", jnp.int32),
+        n_reverted=shape("n_reverted", jnp.int32),
         trace=jnp.zeros((nG, k, nC, 1), X.dtype), n_trace=zero,
         steps_i=jnp.zeros((nG, k, nC, 1), jnp.int32),
         steps_j=jnp.zeros((nG, k, nC, 1), jnp.int32),

@@ -87,6 +87,36 @@ def solve_ovr(kernel, Y: jax.Array, C,
         in_axes=(0, 0, 0, 0))(Y, C, alpha0, G0)
 
 
+def solve_ovr_fused(X, Y: jax.Array, C, gamma,
+                    cfg: SolverConfig = SolverConfig(), *,
+                    impl: str = "auto", block_l: int = 1024,
+                    precompute: bool = False):
+    """Solve all one-vs-rest heads through the fused two-pass batched engine.
+
+    Unlike :func:`solve_ovr` this consumes the raw ``X`` (l, d); every
+    iteration advances the whole class stack through two batched kernel
+    passes (:func:`repro.core.solver_fused.solve_fused_batched`).  With
+    ``precompute=True`` on the jnp backend the single shared Gram matrix
+    is built once and rows become gathers (CPU throughput mode); otherwise
+    rows are recomputed from ``X`` and no Gram is ever materialized.
+    ``C`` is scalar or (k,) per-class budgets; ``gamma`` is the shared RBF
+    width.  Returns a :class:`~repro.core.solver_fused.FusedResult` with a
+    leading class axis on every leaf.  Requires
+    ``cfg.algorithm in ("smo", "pasmo")`` and ``plan_candidates == 1``.
+    """
+    from repro.core.solver_fused import solve_fused_batched
+    from repro.kernels import ops as kernel_ops
+    X = jnp.asarray(X)
+    Y = jnp.asarray(Y)
+    bank_kw = {}
+    if precompute and kernel_ops.resolve_impl(impl) == "jnp":
+        K = kernel_ops.gram(X, gamma=gamma, impl=impl)
+        bank_kw = dict(gram=K[None].astype(Y.dtype),
+                       gram_idx=jnp.zeros((Y.shape[0],), jnp.int32))
+    return solve_fused_batched(X, Y, C, gamma, cfg,
+                               impl=impl, block_l=block_l, **bank_kw)
+
+
 def ovr_decision(Kq: jax.Array, alpha: jax.Array, b: jax.Array) -> jax.Array:
     """OVR decision scores for query cross-kernel ``Kq`` (m, l).
 

@@ -127,6 +127,43 @@ class PrecomputedKernel:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class StackedKernel:
+    """Oracle over one Gram matrix inside a stacked (n_stack, l, l) bank.
+
+    A batch of QPs that share a few distinct Gram matrices (e.g. the
+    one-vs-rest heads of a multiclass C/gamma grid: ``k`` lanes per gamma)
+    vmaps with ``Ks`` un-mapped and ``g`` lane-mapped, so every access is a
+    gather into the shared bank — no per-lane (l, l) copy is ever
+    materialized (``jnp.repeat`` on the bank costs k-fold memory).
+    """
+
+    Ks: jax.Array  # (n_stack, l, l) symmetric PSD bank
+    g: jax.Array   # scalar int32 index into the bank
+
+    @property
+    def n(self) -> int:
+        return self.Ks.shape[-1]
+
+    def row(self, i: jax.Array) -> jax.Array:
+        return self.Ks[self.g, i]
+
+    def diag(self) -> jax.Array:
+        idx = jnp.arange(self.n)
+        return self.Ks[self.g, idx, idx]
+
+    def entry(self, i: jax.Array, j: jax.Array) -> jax.Array:
+        return self.Ks[self.g, i, j]
+
+    def matvec(self, v: jax.Array) -> jax.Array:
+        # NOTE: gathers the full (l, l) matrix — under vmap this is the
+        # per-lane copy the row/entry accessors avoid.  Only reached by
+        # alpha0-without-G0 restarts, which the grid drivers never use
+        # (they always carry the closed-form G0).
+        return jnp.take(self.Ks, self.g, axis=0) @ v
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class RBFKernel:
     """Gaussian kernel oracle ``k(x, z) = exp(-gamma ||x - z||^2)``.
 

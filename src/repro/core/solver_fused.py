@@ -16,6 +16,17 @@ runs on scalars, with single-row RBF evaluations costing O(d).
 Semantics are identical to ``solver.solve`` with an RBF oracle (same
 Algorithms 3/4/5); trajectories agree modulo floating-point reassociation.
 ``impl`` selects pallas/interpret/jnp exactly as in ``repro.kernels.ops``.
+
+:func:`solve_fused_batched` runs a whole *batch of lanes* — one lane per
+(C, gamma, labels) QP over shared X — through ONE ``lax.while_loop`` whose
+body is TWO batched kernel launches plus O(B) per-lane algebra.  The lane
+batching differs from the single-lane shape in one structural way: pass A
+returns only the selection, and pass B recomputes both rows k_i/k_j
+against the shared X tile.  That removes the k_i HBM round-trip and —
+crucially — the data-dependent pass-A relaunch when Alg. 3's B^(t-2)
+candidate wins, which has no batched equivalent.  Converged lanes are
+frozen *in kernel*: their step size is forced to 0, so pass B's update is
+a bitwise no-op on G and the loop condition is simply "any lane active".
 """
 
 from __future__ import annotations
@@ -32,6 +43,7 @@ from repro.core import step as step_mod
 from repro.core.qp import TAU
 from repro.core.solver import SolverConfig
 from repro.kernels import ops
+from repro.kernels import ref as ref_ops
 
 
 @jax.tree_util.register_dataclass
@@ -71,6 +83,10 @@ def solve_fused(X, y, C, gamma, cfg: SolverConfig = SolverConfig(),
                 *, impl: str = "auto", block_l: int = 1024) -> FusedResult:
     assert cfg.algorithm in ("smo", "pasmo")
     assert cfg.plan_candidates == 1
+    assert cfg.wss == "wss2", \
+        "the fused passes hardcode WSS2 selection (use the standard solver)"
+    assert not (cfg.record_trace or cfg.record_steps), \
+        "the fused solver does not record traces/steps"
     X = jnp.asarray(X)
     y = jnp.asarray(y)
     dtype = y.dtype
@@ -219,4 +235,311 @@ def solve_fused(X, y, C, gamma, cfg: SolverConfig = SolverConfig(),
     return FusedResult(
         alpha=s.alpha, b=0.5 * (g_up + g_dn), G=s.G, iterations=s.t,
         objective=0.5 * (jnp.dot(y, s.alpha) + jnp.dot(s.G, s.alpha)),
+        kkt_gap=s.gap, converged=s.done, n_planning=s.n_planning)
+
+
+# ---------------------------------------------------------------------------
+# Lane-batched fused solver
+# ---------------------------------------------------------------------------
+
+
+class _BatchState(NamedTuple):
+    alpha: jax.Array          # (B, l)
+    G: jax.Array              # (B, l)
+    i: jax.Array              # (B,) next working-set first index (pass B)
+    g_i: jax.Array            # (B,) G[i] == max gradient over I_up
+    gap: jax.Array            # (B,)
+    t: jax.Array              # () global iteration counter
+    iters: jax.Array          # (B,) per-lane iterations until convergence
+    done: jax.Array           # (B,)
+    pi: jax.Array             # (B,) planning history B^(t-1)
+    pj: jax.Array
+    qi: jax.Array             # (B,) planning history B^(t-2)
+    qj: jax.Array
+    n_hist: jax.Array         # (B,)
+    p_smo: jax.Array          # (B,)
+    prev_free: jax.Array      # (B,)
+    prev_ratio_ok: jax.Array  # (B,)
+    n_planning: jax.Array     # (B,)
+
+
+def _take_lane(M, idx):
+    """Per-lane gather: M (B, l), idx (B,) -> (B,)."""
+    return jnp.take_along_axis(M, idx[:, None], axis=1)[:, 0]
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl", "block_l"))
+def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
+                        *, impl: str = "auto", block_l: int = 1024,
+                        alpha0=None, G0=None, gram=None,
+                        gram_idx=None) -> FusedResult:
+    """Solve a batch of B RBF QPs over shared ``X`` in ONE while_loop.
+
+    ``Y`` is (B, l) signed label vectors; ``C``/``gamma`` are scalars or
+    (B,) per-lane values (traced — heterogeneous batches share one
+    compilation).  Optional (B, l) ``alpha0``/``G0`` warm starts must come
+    as a pair (the closed-form C-path restart of :mod:`repro.core.grid`).
+
+    Per iteration the body launches the batched pass A (selection) and
+    pass B (both-rows + update + stopping scan) kernels; all remaining
+    algebra — steps, planning, Alg. 3 candidates — is O(B) vector math
+    plus O(B d) single-entry kernel evaluations.  Converged lanes freeze
+    in-kernel: mu is forced to 0, so the update pass leaves their state
+    bitwise unchanged while the loop runs until every lane is done (or
+    ``cfg.max_iter``).  The returned :class:`FusedResult` leaves carry a
+    leading lane axis; ``iterations`` counts per-lane iterations *until
+    that lane converged*.
+
+    Two row sources:
+
+    * default — rows are recomputed from ``X`` inside the kernels (the
+      accelerator memory mode: O(B l) state, no Gram ever materialized;
+      ``impl`` picks pallas/interpret/jnp as in :mod:`repro.kernels.ops`).
+    * ``gram``/``gram_idx`` — a shared (n_stack, l, l) Gram bank plus the
+      per-lane stack index: rows become gathers and the exp work is paid
+      once per distinct gamma instead of per iteration.  This is the CPU
+      throughput mode (it mirrors the vmapped engine's memory layout) and
+      runs as pure jnp algebra (``impl`` is ignored).  Lanes sharing a
+      gamma index the same bank entry — no per-lane Gram copies.
+    """
+    assert cfg.algorithm in ("smo", "pasmo")
+    assert cfg.plan_candidates == 1
+    assert cfg.wss == "wss2", \
+        "the fused passes hardcode WSS2 selection (use the standard solver)"
+    assert not (cfg.record_trace or cfg.record_steps), \
+        "the fused solver does not record traces/steps"
+    assert (alpha0 is None) == (G0 is None), \
+        "warm starts need the (alpha0, G0) pair"
+    assert (gram is None) == (gram_idx is None), \
+        "the Gram bank needs the (gram, gram_idx) pair"
+    bank = gram is not None
+    X = jnp.asarray(X)
+    Y = jnp.asarray(Y)
+    dtype = Y.dtype
+    B, n = Y.shape
+    C = jnp.broadcast_to(jnp.asarray(C, dtype), (B,))
+    gamma = jnp.broadcast_to(jnp.asarray(gamma, dtype), (B,))
+    L = jnp.minimum(0.0, Y * C[:, None])
+    U = jnp.maximum(0.0, Y * C[:, None])
+    sqn = jnp.sum(X * X, axis=-1)
+    eps = cfg.eps
+    eta = cfg.eta
+    planning = cfg.algorithm == "pasmo"
+    lanes = jnp.arange(B)
+    if bank:
+        gram = jnp.asarray(gram)
+        gidx = jnp.asarray(gram_idx, jnp.int32)
+
+    # The loop body is dispatch-bound on CPU (dozens of O(B) ops between the
+    # two passes), so the per-lane scalar algebra below leans on three
+    # fusions: (a) box bounds at an index come from ONE label gather
+    # (L = min(0, y C) is how L was built, so the values are bitwise
+    # identical), (b) paired gathers/entries stack their index vectors and
+    # gather once, and (c) the two alpha scatters merge into one.
+
+    def entry_pairs(a, b, reps):
+        """Kernel entries for ``reps`` stacked (reps*B,) index pairs."""
+        if bank:
+            return gram[jnp.tile(gidx, reps), a, b]
+        d2 = (jnp.take(sqn, a) + jnp.take(sqn, b)
+              - 2.0 * jnp.sum(jnp.take(X, a, axis=0)
+                              * jnp.take(X, b, axis=0), axis=-1))
+        return jnp.exp(-jnp.tile(gamma, reps) * jnp.maximum(d2, 0.0))
+
+    def body(s: _BatchState) -> _BatchState:
+        alpha, G = s.alpha, s.G
+        idx2 = jnp.concatenate([lanes, lanes])
+
+        def at_idx(idx):
+            """(alpha, G, L, U) at per-lane index ``idx``: three tiny (B,)
+            gathers; the box bounds are rebuilt in-register from the label
+            gather (bitwise identical to gathering L/U directly)."""
+            y_at = _take_lane(Y, idx)
+            yC = y_at * C
+            return (_take_lane(alpha, idx), _take_lane(G, idx),
+                    jnp.minimum(0.0, yC), jnp.maximum(0.0, yC))
+
+        active = ~s.done
+        use_exact = jnp.asarray(planning) & (~s.p_smo) & (~s.prev_ratio_ok)
+
+        # ---- pass A: j-selection (k_i stays in VMEM / the bank) ------------
+        a_i, _, L_i, U_i = at_idx(s.i)
+        if bank:
+            k_cur = gram[gidx, s.i]
+            j0, gain0 = ref_ops.row_wss_batched_from_k(
+                k_cur, G, alpha, L, U, a_i, L_i, U_i, s.g_i, s.i, use_exact)
+        else:
+            j0, gain0 = ops.rbf_row_wss_batched(
+                X, sqn, G, alpha, L, U, jnp.take(X, s.i, axis=0),
+                jnp.take(sqn, s.i), a_i, L_i, U_i, s.g_i, s.i, use_exact,
+                gamma, impl=impl, block_l=block_l)
+        a_j0, G_j0, L_j0, U_j0 = at_idx(j0)
+
+        # ---- Alg. 3 extra candidate B^(t-2) (O(B d)) -----------------------
+        if planning:
+            # both "historic" entries in one stacked lookup:
+            # K(qi, qj) for the candidate, K(pi, pj) for planning's Q22
+            e2 = entry_pairs(jnp.concatenate([s.qi, s.pi]),
+                             jnp.concatenate([s.qj, s.pj]), 2)
+            K_qq, K_pp = e2[:B], e2[B:]
+            a_qi, G_qi, L_qi, U_qi = at_idx(s.qi)
+            a_qj, G_qj, L_qj, U_qj = at_idx(s.qj)
+            l_q = G_qi - G_qj
+            q_q = jnp.maximum(2.0 - 2.0 * K_qq, TAU)
+            sb_q = step_mod.step_bounds(a_qi, a_qj, L_qi, U_qi, L_qj, U_qj)
+            mu_q = step_mod.clip_step(l_q / q_q, sb_q)
+            cg_exact = step_mod.gain_of_step(mu_q, l_q, q_q)
+            cg_tilde = 0.5 * l_q * l_q / q_q
+            cg = jnp.where(use_exact, cg_exact, cg_tilde)
+            adm = ((a_qi < U_qi) & (a_qj > L_qj)
+                   & (l_q > 0) & (s.qi != s.qj) & (s.n_hist > 1))
+            take = (~s.p_smo) & adm & (cg > gain0)
+            # no relaunch needed: pass B recomputes the winning row anyway,
+            # and the candidate's scalars are selects of already-gathered
+            # values — no fresh gathers for (i_sel, j_sel)
+            i_sel = jnp.where(take, s.qi, s.i)
+            j_sel = jnp.where(take, s.qj, j0)
+            g_i_sel = jnp.where(take, G_qi, s.g_i)
+            a_isel = jnp.where(take, a_qi, a_i)
+            L_isel = jnp.where(take, L_qi, L_i)
+            U_isel = jnp.where(take, U_qi, U_i)
+            a_jsel = jnp.where(take, a_qj, a_j0)
+            G_jsel = jnp.where(take, G_qj, G_j0)
+            L_jsel = jnp.where(take, L_qj, L_j0)
+            U_jsel = jnp.where(take, U_qj, U_j0)
+        else:
+            i_sel, j_sel, g_i_sel = s.i, j0, s.g_i
+            a_isel, L_isel, U_isel = a_i, L_i, U_i
+            a_jsel, G_jsel, L_jsel, U_jsel = a_j0, G_j0, L_j0, U_j0
+
+        # in bank mode both working-set rows come from ONE stacked gather;
+        # when planning is off i_sel == s.i so pass A's row is reused
+        if bank:
+            if planning:
+                rows = gram[jnp.tile(gidx, 2),
+                            jnp.concatenate([i_sel, j_sel])]
+                k_i, k_j = rows[:B], rows[B:]
+            else:
+                k_i, k_j = k_cur, gram[gidx, j_sel]
+
+        # ---- O(B) step computation ----------------------------------------
+        lw = g_i_sel - G_jsel
+        K_ij = (_take_lane(k_i, j_sel) if bank
+                else entry_pairs(i_sel, j_sel, 1))
+        q11 = jnp.maximum(2.0 - 2.0 * K_ij, TAU)
+        sb = step_mod.step_bounds(a_isel, a_jsel, L_isel, U_isel,
+                                  L_jsel, U_jsel)
+        mu_star = lw / q11
+        mu_smo, free_smo = step_mod.smo_step(lw, q11, sb)
+
+        do_plan = jnp.zeros((B,), bool)
+        mu_plan = mu_smo
+        ratio_ok = s.prev_ratio_ok
+        if planning:
+            a_pi, G_pi, L_pi, U_pi = at_idx(s.pi)
+            a_pj, G_pj, L_pj, U_pj = at_idx(s.pj)
+            w2 = G_pi - G_pj
+            q22 = jnp.maximum(2.0 - 2.0 * K_pp, TAU)
+            if bank:
+                # k_i[pi], k_j[pi] and k_i[pj], k_j[pj] — two stacked
+                # lookups on the (2B, l) row block instead of four
+                kp = jnp.take_along_axis(
+                    rows, jnp.tile(s.pi, 2)[:, None], axis=1)[:, 0]
+                kq = jnp.take_along_axis(
+                    rows, jnp.tile(s.pj, 2)[:, None], axis=1)[:, 0]
+                q12 = kp[:B] - kq[:B] - kp[B:] + kq[B:]
+            else:
+                e4 = entry_pairs(
+                    jnp.concatenate([i_sel, i_sel, j_sel, j_sel]),
+                    jnp.concatenate([s.pi, s.pj, s.pi, s.pj]), 4)
+                q12 = e4[:B] - e4[B:2 * B] - e4[2 * B:3 * B] + e4[3 * B:]
+            terms = step_mod.PlanningTerms(w1=lw, w2=w2, Q11=q11, Q22=q22,
+                                           Q12=q12)
+            mu1, okdet = step_mod.planning_step(terms)
+            mu2 = step_mod.planned_second_step(mu1, terms)
+            interior1 = (sb.lo < mu1) & (mu1 < sb.hi)
+            d_pi = ((s.pi == i_sel).astype(dtype)
+                    - (s.pi == j_sel).astype(dtype))
+            d_pj = ((s.pj == i_sel).astype(dtype)
+                    - (s.pj == j_sel).astype(dtype))
+            sb2 = step_mod.step_bounds(a_pi + mu1 * d_pi, a_pj + mu1 * d_pj,
+                                       L_pi, U_pi, L_pj, U_pj)
+            interior2 = (sb2.lo < mu2) & (mu2 < sb2.hi)
+            feasible = okdet & interior1 & interior2 & (s.n_hist > 0)
+            do_plan = s.prev_free & feasible
+            mu_plan = jnp.where(do_plan, mu1, mu_smo)
+            ratio = mu1 / jnp.where(jnp.abs(mu_star) > 0, mu_star, 1.0)
+            ratio_ok = jnp.where(do_plan,
+                                 (ratio >= 1.0 - eta) & (ratio <= 1.0 + eta),
+                                 s.prev_ratio_ok)
+
+        # lane freeze: converged lanes take a zero step — pass B becomes a
+        # bitwise no-op on their G, alpha is untouched.  Both working-set
+        # coordinates update through ONE stacked scatter.
+        mu = jnp.where(active, jnp.where(do_plan, mu_plan, mu_smo), 0.0)
+        alpha_new = alpha.at[idx2, jnp.concatenate([i_sel, j_sel])].add(
+            jnp.concatenate([mu, -mu]))
+
+        # ---- pass B: k_i/k_j + update + next i + gap -----------------------
+        if bank:
+            G_new, i_next, g_i_next, g_dn = \
+                ref_ops.update_wss_batched_from_rows(G, k_i, k_j, mu,
+                                                     alpha_new, L, U)
+        else:
+            G_new, i_next, g_i_next, g_dn = ops.rbf_update_wss_batched(
+                X, sqn, G, alpha_new, L, U,
+                jnp.take(X, i_sel, axis=0), jnp.take(sqn, i_sel),
+                jnp.take(X, j_sel, axis=0), jnp.take(sqn, j_sel),
+                mu, gamma, impl=impl, block_l=block_l)
+        gap = jnp.where(active, g_i_next - g_dn, s.gap)
+        done = s.done | (gap <= eps)
+
+        return _BatchState(
+            alpha=alpha_new, G=G_new,
+            i=jnp.where(active, i_next.astype(jnp.int32), s.i),
+            g_i=jnp.where(active, g_i_next, s.g_i),
+            gap=gap, t=s.t + 1, iters=s.iters + active.astype(jnp.int32),
+            done=done,
+            pi=jnp.where(active, i_sel, s.pi).astype(jnp.int32),
+            pj=jnp.where(active, j_sel, s.pj).astype(jnp.int32),
+            qi=jnp.where(active, s.pi, s.qi),
+            qj=jnp.where(active, s.pj, s.qj),
+            n_hist=jnp.where(active, jnp.minimum(s.n_hist + 1, 2), s.n_hist),
+            p_smo=jnp.where(active, ~do_plan, s.p_smo),
+            prev_free=jnp.where(active, (~do_plan) & free_smo, s.prev_free),
+            prev_ratio_ok=jnp.where(active, ratio_ok, s.prev_ratio_ok),
+            n_planning=s.n_planning + (do_plan & active).astype(jnp.int32))
+
+    # ---- init ---------------------------------------------------------------
+    if alpha0 is None:
+        alpha0 = jnp.zeros_like(Y)
+        G0 = Y
+    else:
+        alpha0 = jnp.asarray(alpha0, dtype)
+        G0 = jnp.asarray(G0, dtype)
+    up0 = alpha0 < U
+    dn0 = alpha0 > L
+    v_up = jnp.where(up0, G0, -jnp.inf)
+    i0 = jnp.argmax(v_up, axis=1).astype(jnp.int32)
+    g_i0 = _take_lane(v_up, i0)
+    gap0 = g_i0 - jnp.min(jnp.where(dn0, G0, jnp.inf), axis=1)
+    zB = jnp.zeros((B,), jnp.int32)
+    fB = jnp.zeros((B,), bool)
+    s0 = _BatchState(alpha=alpha0, G=G0, i=i0, g_i=g_i0, gap=gap0,
+                     t=jnp.asarray(0, jnp.int32), iters=zB,
+                     done=gap0 <= eps, pi=zB, pj=zB, qi=zB, qj=zB,
+                     n_hist=zB, p_smo=~fB, prev_free=fB,
+                     prev_ratio_ok=~fB, n_planning=zB)
+
+    s = jax.lax.while_loop(
+        lambda s: jnp.any(~s.done) & (s.t < cfg.max_iter), body, s0)
+
+    up = s.alpha < U
+    dn = s.alpha > L
+    g_up = jnp.max(jnp.where(up, s.G, -jnp.inf), axis=1)
+    g_dn = jnp.min(jnp.where(dn, s.G, jnp.inf), axis=1)
+    return FusedResult(
+        alpha=s.alpha, b=0.5 * (g_up + g_dn), G=s.G, iterations=s.iters,
+        objective=0.5 * (jnp.sum(Y * s.alpha, axis=1)
+                         + jnp.sum(s.G * s.alpha, axis=1)),
         kkt_gap=s.gap, converged=s.done, n_planning=s.n_planning)

@@ -22,8 +22,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as ref_ops
 from repro.kernels.gram_block import gram_pallas
-from repro.kernels.rbf_row_wss import rbf_row_wss_pallas
-from repro.kernels.rbf_update_wss import rbf_update_wss_pallas
+from repro.kernels.rbf_row_wss import (rbf_row_wss_batched_pallas,
+                                       rbf_row_wss_pallas)
+from repro.kernels.rbf_update_wss import (rbf_update_wss_batched_pallas,
+                                          rbf_update_wss_pallas)
 
 NEG_INF = -jnp.inf
 
@@ -99,6 +101,101 @@ def rbf_update_wss(X, sqn, G, k_i, alpha_new, L, U, xq_j, mu, gamma,
         block_l=block_l, interpret=(impl == "interpret"))
     w = jnp.argmax(bmax)
     return (G_new[:l], jnp.take(barg, w), jnp.take(bmax, w), jnp.min(bmin))
+
+
+# ---------------------------------------------------------------------------
+# Lane-batched wrappers (one lane = one QP; X is shared across lanes)
+# ---------------------------------------------------------------------------
+#
+# The example dimension is padded exactly as above; the lane dimension is
+# padded to a sublane multiple (8) with *inert* lanes: L = U = alpha = 0
+# rows can never be selected in pass A, and mu = 0 makes pass B a no-op, so
+# padded lanes never influence the epilogue reductions.
+
+_LANE = 8
+
+
+def pad_lanes(B: int) -> int:
+    return ((B + _LANE - 1) // _LANE) * _LANE
+
+
+def _pad_bl(a, bpad, lpad, value=0.0):
+    """Pad a (B, l) per-lane state array on both axes."""
+    return jnp.pad(a, ((0, bpad - a.shape[0]), (0, lpad - a.shape[1])),
+                   constant_values=value)
+
+
+def _pad_b(a, bpad, value=0.0):
+    widths = [(0, bpad - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i,
+                        g_i, i_idx, use_exact, gammas, *, impl: str = "auto",
+                        block_l: int = 1024):
+    """Batched pass A: per-lane WSS2 selection, returns (j (B,), gain (B,)).
+
+    ``X``/``sqn`` are shared; ``G``/``alpha``/``L``/``U`` are (B, l); ``XQ``
+    is the (B, d) gathered query rows; the rest are (B,) per-lane scalars.
+    """
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        return ref_ops.rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq,
+                                           a_i, L_i, U_i, g_i, i_idx,
+                                           use_exact, gammas)
+    l, d = X.shape
+    B = G.shape[0]
+    lpad, dpad = pad_dims(l, d, block_l)
+    bpad = pad_lanes(B)
+    dtype = X.dtype
+    scal = jnp.stack([sqq, a_i, L_i, U_i, g_i,
+                      jnp.broadcast_to(gammas, (B,)),
+                      use_exact.astype(dtype),
+                      i_idx.astype(dtype)], axis=1).astype(dtype)
+    bmax, barg = rbf_row_wss_batched_pallas(
+        _pad_d(_pad_l(X, lpad), dpad), _pad_l(sqn, lpad),
+        _pad_bl(G, bpad, lpad), _pad_bl(alpha, bpad, lpad),
+        _pad_bl(L, bpad, lpad), _pad_bl(U, bpad, lpad),
+        _pad_b(_pad_d(XQ, dpad), bpad), _pad_b(scal, bpad),
+        block_l=block_l, interpret=(impl == "interpret"))
+    w = jnp.argmax(bmax, axis=1)
+    j = jnp.take_along_axis(barg, w[:, None], axis=1)[:, 0]
+    gain = jnp.take_along_axis(bmax, w[:, None], axis=1)[:, 0]
+    return j[:B], gain[:B]
+
+
+def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
+                           mu, gammas, *, impl: str = "auto",
+                           block_l: int = 1024):
+    """Batched pass B: returns (G_new (B, l), i_next, g_i_next, g_dn).
+
+    Recomputes both rows k_i/k_j against the shared X (no HBM round-trip
+    for either); a lane with ``mu == 0`` leaves G bitwise unchanged.
+    """
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        return ref_ops.rbf_update_wss_batched(X, sqn, G, alpha_new, L, U,
+                                              XQi, sqqi, XQj, sqqj, mu,
+                                              gammas)
+    l, d = X.shape
+    B = G.shape[0]
+    lpad, dpad = pad_dims(l, d, block_l)
+    bpad = pad_lanes(B)
+    dtype = X.dtype
+    scal = jnp.stack([sqqi, sqqj, jnp.broadcast_to(mu, (B,)),
+                      jnp.broadcast_to(gammas, (B,))], axis=1).astype(dtype)
+    G_new, bmax, barg, bmin = rbf_update_wss_batched_pallas(
+        _pad_d(_pad_l(X, lpad), dpad), _pad_l(sqn, lpad),
+        _pad_bl(G, bpad, lpad), _pad_bl(alpha_new, bpad, lpad),
+        _pad_bl(L, bpad, lpad), _pad_bl(U, bpad, lpad),
+        _pad_b(_pad_d(XQi, dpad), bpad), _pad_b(_pad_d(XQj, dpad), bpad),
+        _pad_b(scal, bpad),
+        block_l=block_l, interpret=(impl == "interpret"))
+    w = jnp.argmax(bmax, axis=1)
+    i_next = jnp.take_along_axis(barg, w[:, None], axis=1)[:, 0]
+    g_i_next = jnp.take_along_axis(bmax, w[:, None], axis=1)[:, 0]
+    return (G_new[:B, :l], i_next[:B], g_i_next[:B],
+            jnp.min(bmin, axis=1)[:B])
 
 
 def gram(X1, X2=None, gamma=1.0, *, impl: str = "auto",

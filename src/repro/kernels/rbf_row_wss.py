@@ -68,6 +68,98 @@ def _kernel(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, alpha_ref, L_ref, U_ref,
     barg_out[0, 0] = b * block_l + arg
 
 
+def _kernel_batched(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, alpha_ref,
+                    L_ref, U_ref, bmax_out, barg_out, *, block_l: int):
+    """Lane-batched pass A: every lane shares the (BL, d) X tile.
+
+    The B query rows hit the tile as ONE (B, d) x (d, BL) MXU matmul; the
+    per-lane gain algebra and masked argmax run on the VPU over (B, BL)
+    registers.  Unlike the single-lane kernel no k-row is written back —
+    the batched pass B recomputes it, trading one extra matmul for an HBM
+    round-trip of (B, l) and for launch-free Alg. 3 candidate swaps.
+    """
+    b = pl.program_id(0)
+    # per-lane scalars: [sqq, a_i, L_i, U_i, g_i, gamma, use_exact, i_idx]
+    sqq = scal_ref[:, 0:1]
+    a_i = scal_ref[:, 1:2]
+    L_i = scal_ref[:, 2:3]
+    U_i = scal_ref[:, 3:4]
+    g_i = scal_ref[:, 4:5]
+    gamma = scal_ref[:, 5:6]
+    use_exact = scal_ref[:, 6:7] > 0.5
+    i_idx = scal_ref[:, 7:8].astype(jnp.int32)
+
+    x = X_ref[...]                      # (BL, d) shared tile
+    q = xq_ref[...]                     # (B, d) per-lane query rows
+    prod = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.promote_types(x.dtype, jnp.float32))
+    d2 = sqq + sqn_ref[...] - 2.0 * prod                    # (B, BL)
+    k = jnp.exp(-gamma * jnp.maximum(d2, 0.0))
+
+    G = G_ref[...]
+    alpha = alpha_ref[...]
+    L = L_ref[...]
+    U = U_ref[...]
+    l_vec = g_i - G
+    q_vec = jnp.maximum(2.0 - 2.0 * k, TAU)      # RBF diag == 1
+    g_tilde = 0.5 * l_vec * l_vec / q_vec
+    lo = jnp.maximum(L_i - a_i, alpha - U)
+    hi = jnp.minimum(U_i - a_i, alpha - L)
+    mu_c = jnp.clip(l_vec / q_vec, lo, hi)
+    g_exact = l_vec * mu_c - 0.5 * q_vec * mu_c * mu_c
+    gains = jnp.where(use_exact, g_exact, g_tilde)
+
+    nb_lanes = G.shape[0]
+    gidx = (b * block_l
+            + jax.lax.broadcasted_iota(jnp.int32, (nb_lanes, block_l), 1))
+    mask = (alpha > L) & (l_vec > 0) & (gidx != i_idx)
+    vals = jnp.where(mask, gains, -jnp.inf)
+    arg = jnp.argmax(vals, axis=1).astype(jnp.int32)
+    bmax_out[...] = jnp.max(vals, axis=1, keepdims=True)
+    barg_out[...] = (b * block_l + arg)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def rbf_row_wss_batched_pallas(X, sqn, G, alpha, L, U, XQ, scalars,
+                               *, block_l: int = 1024,
+                               interpret: bool = False):
+    """Launch lane-batched pass A.  ``G``/``alpha``/``L``/``U`` are (B, lpad)
+    with the lane dimension padded to a sublane multiple by the ops wrapper;
+    ``XQ`` is (B, d); ``scalars`` is the packed (B, 8) array
+    [sqq, a_i, L_i, U_i, g_i, gamma, use_exact, i_idx] per lane.
+
+    Returns (block_max (B, nb), block_arg (B, nb)).
+    """
+    lpad, d = X.shape
+    B = G.shape[0]
+    assert lpad % block_l == 0, (lpad, block_l)
+    nb = lpad // block_l
+    dtype = X.dtype
+
+    lane_spec = pl.BlockSpec((B, block_l), lambda b: (0, b))
+    blk_spec = pl.BlockSpec((B, 1), lambda b: (0, b))
+    out_shapes = (
+        jax.ShapeDtypeStruct((B, nb), dtype),        # block max
+        jax.ShapeDtypeStruct((B, nb), jnp.int32),    # block arg
+    )
+    bmax, barg = pl.pallas_call(
+        functools.partial(_kernel_batched, block_l=block_l),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((B, d), lambda b: (0, 0)),          # XQ
+            pl.BlockSpec((B, 8), lambda b: (0, 0)),          # scalars
+            pl.BlockSpec((block_l, d), lambda b: (b, 0)),    # X
+            pl.BlockSpec((1, block_l), lambda b: (0, b)),    # sqn
+            lane_spec, lane_spec, lane_spec, lane_spec,
+        ],
+        out_specs=[blk_spec, blk_spec],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(XQ, scalars, X, sqn.reshape(1, lpad), G, alpha, L, U)
+    return bmax, barg
+
+
 @functools.partial(jax.jit,
                    static_argnames=("block_l", "interpret"))
 def rbf_row_wss_pallas(X, sqn, G, alpha, L, U, xq, scalars,

@@ -52,6 +52,87 @@ def _kernel(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, ki_ref, alpha_ref,
     bmin_out[0, 0] = jnp.min(jnp.where(dn, G_new, jnp.inf))
 
 
+def _kernel_batched(xqi_ref, xqj_ref, scal_ref, X_ref, sqn_ref, G_ref,
+                    alpha_ref, L_ref, U_ref, G_out, bmax_out, barg_out,
+                    bmin_out, *, block_l: int):
+    """Lane-batched pass B: recompute BOTH rows k_i, k_j against the shared
+    X tile (two (B, d) x (d, BL) matmuls), update G in-register, and emit
+    the per-lane next-i argmax plus both KKT gap endpoints.
+
+    Neither row ever touches HBM.  A lane with ``mu == 0`` writes G back
+    bitwise unchanged — that is the in-kernel lane freeze: converged lanes
+    ride along as masked no-ops until every lane is done.
+    """
+    b = pl.program_id(0)
+    # per-lane scalars: [sqq_i, sqq_j, mu, gamma]
+    sqq_i = scal_ref[:, 0:1]
+    sqq_j = scal_ref[:, 1:2]
+    mu = scal_ref[:, 2:3]
+    gamma = scal_ref[:, 3:4]
+
+    x = X_ref[...]                      # (BL, d) shared tile
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    prod_i = jax.lax.dot_general(xqi_ref[...], x, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=acc)
+    prod_j = jax.lax.dot_general(xqj_ref[...], x, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=acc)
+    sqn = sqn_ref[...]
+    k_i = jnp.exp(-gamma * jnp.maximum(sqq_i + sqn - 2.0 * prod_i, 0.0))
+    k_j = jnp.exp(-gamma * jnp.maximum(sqq_j + sqn - 2.0 * prod_j, 0.0))
+
+    G_new = G_ref[...] - mu * (k_i - k_j)
+    G_out[...] = G_new.astype(G_out.dtype)
+
+    alpha = alpha_ref[...]
+    up = alpha < U_ref[...]
+    dn = alpha > L_ref[...]
+    vals_up = jnp.where(up, G_new, -jnp.inf)
+    arg = jnp.argmax(vals_up, axis=1).astype(jnp.int32)
+    bmax_out[...] = jnp.max(vals_up, axis=1, keepdims=True)
+    barg_out[...] = (b * block_l + arg)[:, None]
+    bmin_out[...] = jnp.min(jnp.where(dn, G_new, jnp.inf), axis=1,
+                            keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def rbf_update_wss_batched_pallas(X, sqn, G, alpha_new, L, U, XQi, XQj,
+                                  scalars, *, block_l: int = 1024,
+                                  interpret: bool = False):
+    """Launch lane-batched pass B.  ``scalars`` is the packed (B, 4) array
+    [sqq_i, sqq_j, mu, gamma] per lane.  Returns
+    (G_new (B, lpad), bmax_up (B, nb), barg_up (B, nb), bmin_dn (B, nb))."""
+    lpad, d = X.shape
+    B = G.shape[0]
+    assert lpad % block_l == 0, (lpad, block_l)
+    nb = lpad // block_l
+    dtype = X.dtype
+
+    lane_spec = pl.BlockSpec((B, block_l), lambda b: (0, b))
+    blk_spec = pl.BlockSpec((B, 1), lambda b: (0, b))
+    out_shapes = (
+        jax.ShapeDtypeStruct((B, lpad), dtype),
+        jax.ShapeDtypeStruct((B, nb), dtype),
+        jax.ShapeDtypeStruct((B, nb), jnp.int32),
+        jax.ShapeDtypeStruct((B, nb), dtype),
+    )
+    G_new, bmax, barg, bmin = pl.pallas_call(
+        functools.partial(_kernel_batched, block_l=block_l),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((B, d), lambda b: (0, 0)),          # XQi
+            pl.BlockSpec((B, d), lambda b: (0, 0)),          # XQj
+            pl.BlockSpec((B, 4), lambda b: (0, 0)),          # scalars
+            pl.BlockSpec((block_l, d), lambda b: (b, 0)),    # X
+            pl.BlockSpec((1, block_l), lambda b: (0, b)),    # sqn
+            lane_spec, lane_spec, lane_spec, lane_spec,
+        ],
+        out_specs=[lane_spec, blk_spec, blk_spec, blk_spec],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(XQi, XQj, scalars, X, sqn.reshape(1, lpad), G, alpha_new, L, U)
+    return G_new, bmax, barg, bmin
+
+
 @functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
 def rbf_update_wss_pallas(X, sqn, G, k_i, alpha_new, L, U, xq_j, scalars,
                           *, block_l: int = 1024, interpret: bool = False):

@@ -51,6 +51,94 @@ def rbf_update_wss(X, sqn, G, k_i, xq_j, mu, alpha_new, L, U, gamma):
     return G_new, i_next, vals_up[i_next], g_dn
 
 
+# ---------------------------------------------------------------------------
+# Batched (lane-dimension) oracles
+# ---------------------------------------------------------------------------
+#
+# One lane = one QP (a (C, gamma, labels) grid point).  All lanes share the
+# same X / sqn; per-lane state is stacked on a leading B axis.  The O(l d B)
+# part — the squared-distance rows — is ONE (B, d) x (d, l) matmul over the
+# shared X, and per-lane gamma costs one extra exp on that shared d2 row
+# (mirroring the solve_grid factorization).  Unlike the single-lane pass A,
+# the batched pass A returns only the selection (j, gain): pass B recomputes
+# both rows k_i / k_j in place of an HBM round-trip, which also lets the
+# Alg. 3 candidate swap the i-row without a data-dependent relaunch.
+
+
+def rbf_rows_batched(X, sqn, XQ, sqq, gammas):
+    """k(x_q^b, X) for a batch of query rows -> (B, l)."""
+    d2 = sqq[:, None] + sqn[None, :] - 2.0 * (XQ @ X.T)
+    return jnp.exp(-gammas[:, None] * jnp.maximum(d2, 0.0))
+
+
+def row_wss_batched_from_k(k, G, alpha, L, U, a_i, L_i, U_i, g_i, i_idx,
+                           use_exact):
+    """Pass A selection algebra given the (B, l) kernel rows ``k``.
+
+    Shared by the X-backed oracle below and the Gram-bank gather mode of
+    :func:`repro.core.solver_fused.solve_fused_batched`.  RBF diag == 1 is
+    hardcoded (paper setting).  Returns (j (B,) int32, gain_j (B,)).
+    """
+    lv = g_i[:, None] - G
+    q = jnp.maximum(2.0 - 2.0 * k, TAU)
+    g_tilde = 0.5 * lv * lv / q
+    lo = jnp.maximum((L_i - a_i)[:, None], alpha - U)
+    hi = jnp.minimum((U_i - a_i)[:, None], alpha - L)
+    mu_c = jnp.clip(lv / q, lo, hi)
+    g_exact = lv * mu_c - 0.5 * q * mu_c * mu_c
+    gains = jnp.where(use_exact[:, None], g_exact, g_tilde)
+    idx = jnp.arange(G.shape[1], dtype=jnp.int32)
+    mask = (alpha > L) & (lv > 0) & (idx[None, :] != i_idx[:, None])
+    vals = jnp.where(mask, gains, -jnp.inf)
+    j = jnp.argmax(vals, axis=1).astype(jnp.int32)
+    return j, jnp.take_along_axis(vals, j[:, None], axis=1)[:, 0]
+
+
+def rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i,
+                        g_i, i_idx, use_exact, gammas):
+    """Batched pass A oracle: WSS2 j-selection per lane.
+
+    ``G``/``alpha``/``L``/``U`` are (B, l); ``XQ`` is (B, d); the remaining
+    per-lane scalars are (B,).  Returns (j (B,) int32, gain_j (B,)).
+    """
+    k = rbf_rows_batched(X, sqn, XQ, sqq, gammas)
+    return row_wss_batched_from_k(k, G, alpha, L, U, a_i, L_i, U_i, g_i,
+                                  i_idx, use_exact)
+
+
+def update_wss_batched_from_rows(G, k_i, k_j, mu, alpha_new, L, U):
+    """Pass B update + stopping-scan algebra given both (B, l) rows.
+
+    A lane with ``mu == 0`` is a bitwise no-op on G (the in-kernel
+    lane-freeze used by ``solve_fused_batched``).  Returns
+    (G_new (B, l), i_next (B,), g_i_next (B,), g_dn (B,)).
+    """
+    G_new = G - mu[:, None] * (k_i - k_j)
+    up = alpha_new < U
+    dn = alpha_new > L
+    vals_up = jnp.where(up, G_new, -jnp.inf)
+    i_next = jnp.argmax(vals_up, axis=1).astype(jnp.int32)
+    g_i_next = jnp.take_along_axis(vals_up, i_next[:, None], axis=1)[:, 0]
+    g_dn = jnp.min(jnp.where(dn, G_new, jnp.inf), axis=1)
+    return G_new, i_next, g_i_next, g_dn
+
+
+def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
+                           mu, gammas):
+    """Batched pass B oracle: k_i/k_j recompute + update + next i + gap ends.
+
+    Both rows come from one stacked (2B, d) x (d, l) matmul.  Returns
+    (G_new (B, l), i_next (B,), g_i_next (B,), g_dn (B,)).
+    """
+    B = G.shape[0]
+    Kr = rbf_rows_batched(X, sqn,
+                          jnp.concatenate([XQi, XQj], axis=0),
+                          jnp.concatenate([sqqi, sqqj]),
+                          jnp.concatenate([gammas, gammas]))
+    return update_wss_batched_from_rows(G, Kr[:B], Kr[B:], mu, alpha_new,
+                                        L, U)
+
+
 def gram(X, gamma):
     """Full RBF Gram matrix."""
     sq = jnp.sum(X * X, axis=-1)

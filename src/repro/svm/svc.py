@@ -1,10 +1,21 @@
 """sklearn-style ``SVC`` facade over the PA-SMO core.
 
 Binary problems are one signed-dual QP; multiclass problems are reduced
-one-vs-rest and solved as ONE vmapped batch of QPs sharing the precomputed
-Gram matrix (:mod:`repro.core.multiclass`).  Prediction is batched through
-:func:`repro.kernels.ops.gram`, so the query cross-kernel is computed once
-for all class heads (and hits the Pallas path on TPU).
+one-vs-rest.  Two fit engines (selected by ``engine``):
+
+* ``"fused"`` — the fused two-pass batched solver
+  (:mod:`repro.core.solver_fused`): two kernel passes per iteration for
+  the whole class stack, converged heads frozen in-kernel; ``precompute``
+  picks the row source (Gram-bank gathers vs on-the-fly X rows).  The
+  default whenever the solver config is compatible (``algorithm`` in
+  smo/pasmo, ``plan_candidates == 1``).
+* ``"batched"`` — the standard vmapped solver over a precomputed Gram
+  matrix (or on-the-fly rows with ``precompute=False``); supports every
+  algorithm/ablation knob.
+
+Prediction is batched through :func:`repro.kernels.ops.gram`, so the query
+cross-kernel is computed once for all class heads (and hits the Pallas
+path on TPU).
 
     >>> clf = SVC(C=10.0, gamma=0.5).fit(X, y)
     >>> clf.predict(Xq)            # labels, any dtype y was given in
@@ -22,6 +33,7 @@ import numpy as np
 from repro.core import multiclass as mc
 from repro.core import qp as qp_mod
 from repro.core.solver import SolveResult, SolverConfig, solve
+from repro.core.solver_fused import FusedResult
 from repro.kernels import ops
 
 
@@ -32,17 +44,24 @@ class SVC:
     per-class vector for one-vs-rest), ``gamma`` (float or ``"scale"``).
     Solver knobs (``algorithm``, ``eps``, ``max_iter``, ``plan_candidates``)
     map onto :class:`repro.core.solver.SolverConfig`; ``impl`` selects the
-    kernel backend for fit/predict Gram work (``"auto"`` = Pallas on TPU,
-    jnp elsewhere); ``precompute=False`` trades the O(l^2) Gram memory for
-    on-the-fly kernel rows (large-l fits).
+    kernel backend (``"auto"`` = Pallas on TPU, jnp elsewhere) for both the
+    fused fit engine and the predict Gram work; ``engine`` picks the fit
+    engine (``"auto"`` resolves to ``"fused"`` when the config allows it,
+    else ``"batched"``); ``precompute=False`` trades the O(l^2) Gram
+    memory for on-the-fly kernel rows in either engine (in the fused
+    engine ``precompute=True`` builds the shared Gram bank on the jnp
+    backend — the CPU throughput mode).
     """
 
     def __init__(self, C: Union[float, np.ndarray] = 1.0,
                  gamma: Union[float, str] = "scale", *,
                  algorithm: str = "pasmo", eps: float = 1e-3,
                  max_iter: int = 1_000_000, plan_candidates: int = 1,
-                 impl: str = "auto", precompute: bool = True,
-                 dtype=None):
+                 impl: str = "auto", engine: str = "auto",
+                 precompute: bool = True, dtype=None):
+        if engine not in ("auto", "fused", "batched"):
+            raise ValueError(f"engine must be auto|fused|batched, "
+                             f"got {engine!r}")
         self.C = C
         self.gamma = gamma
         self.algorithm = algorithm
@@ -50,6 +69,7 @@ class SVC:
         self.max_iter = max_iter
         self.plan_candidates = plan_candidates
         self.impl = impl
+        self.engine = engine
         self.precompute = precompute
         # f64 when x64 is on (the paper-accuracy setting), else a clean f32
         # fallback instead of per-call truncation warnings
@@ -69,6 +89,13 @@ class SVC:
             return 1.0 / (X.shape[1] * var) if var > 0 else 1.0
         return float(self.gamma)
 
+    def _resolve_engine(self) -> str:
+        if self.engine != "auto":
+            return self.engine
+        fusable = (self.algorithm in ("smo", "pasmo")
+                   and self.plan_candidates == 1)
+        return "fused" if fusable else "batched"
+
     def fit(self, X, y) -> "SVC":
         X = jnp.asarray(X, self.dtype)
         self.classes_, y_idx = mc.class_index(y)
@@ -77,25 +104,45 @@ class SVC:
             raise ValueError("fit needs at least two classes")
         self.gamma_ = self._resolve_gamma(X)
         self.X_ = X
-
-        if self.precompute:
-            K = ops.gram(X, gamma=self.gamma_, impl=self.impl)
-            kern = qp_mod.PrecomputedKernel(K.astype(self.dtype))
-        else:
-            kern = qp_mod.make_rbf(X, self.gamma_)
         cfg = self._config()
+        engine = self._resolve_engine()
 
+        if k == 2 and np.asarray(self.C).size != 1:
+            raise ValueError("per-class C requires more than two "
+                             "classes (binary problems are one QP)")
         if k == 2:
-            if np.asarray(self.C).size != 1:
-                raise ValueError("per-class C requires more than two "
-                                 "classes (binary problems are one QP)")
             yb = jnp.where(jnp.asarray(y_idx) == 1, 1.0, -1.0) \
                     .astype(self.dtype)
-            res = solve(kern, yb, float(np.asarray(self.C).reshape(())), cfg)
         else:
             Y = mc.ovr_labels(y_idx, k, self.dtype)
-            res = mc.solve_ovr(kern, Y, jnp.asarray(self.C, self.dtype), cfg)
-        self.fit_result_: SolveResult = res
+
+        if engine == "fused":
+            if k == 2:
+                res = mc.solve_ovr_fused(X, yb[None, :],
+                                         float(np.asarray(self.C)
+                                               .reshape(())),
+                                         self.gamma_, cfg, impl=self.impl,
+                                         precompute=self.precompute)
+                res = jax.tree.map(lambda leaf: leaf[0], res)
+            else:
+                res = mc.solve_ovr_fused(X, Y,
+                                         jnp.asarray(self.C, self.dtype),
+                                         self.gamma_, cfg, impl=self.impl,
+                                         precompute=self.precompute)
+        else:
+            if self.precompute:
+                K = ops.gram(X, gamma=self.gamma_, impl=self.impl)
+                kern = qp_mod.PrecomputedKernel(K.astype(self.dtype))
+            else:
+                kern = qp_mod.make_rbf(X, self.gamma_)
+            if k == 2:
+                res = solve(kern, yb,
+                            float(np.asarray(self.C).reshape(())), cfg)
+            else:
+                res = mc.solve_ovr(kern, Y,
+                                   jnp.asarray(self.C, self.dtype), cfg)
+        self.fit_result_: Union[SolveResult, FusedResult] = res
+        self.engine_ = engine
         self.alpha_ = res.alpha          # (l,) binary, (k, l) one-vs-rest
         self.b_ = res.b
         return self

@@ -98,6 +98,89 @@ def test_gram_symmetric_psd():
     np.testing.assert_allclose(np.diag(K), 1.0, atol=1e-12)
 
 
+def _setup_batched(l, d, B, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(l, d)), dtype)
+    sqn = jnp.sum(X * X, axis=-1)
+    ys = jnp.asarray(np.sign(rng.normal(size=(B, l))), dtype)
+    C = 10.0
+    L = jnp.minimum(0.0, ys * C)
+    U = jnp.maximum(0.0, ys * C)
+    alpha = jnp.clip(jnp.asarray(rng.uniform(-1, 1, (B, l)), dtype) * C, L, U)
+    G = jnp.asarray(rng.normal(size=(B, l)), dtype)
+    gammas = jnp.asarray(rng.uniform(0.2, 1.5, B), dtype)
+    i_idx = jnp.asarray(rng.integers(0, l, B), jnp.int32)
+    return X, sqn, G, alpha, L, U, gammas, i_idx
+
+
+def _lane(M, idx):
+    return jnp.take_along_axis(M, idx[:, None], axis=1)[:, 0]
+
+
+@pytest.mark.parametrize("l,d,B", [(64, 2, 3), (513, 33, 9)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pass_a_batched_matches_single_lane(l, d, B, dtype):
+    """Batched pass A (jnp + interpret) == per-lane single-lane oracle."""
+    X, sqn, G, alpha, L, U, gammas, i_idx = _setup_batched(l, d, B, dtype)
+    XQ = jnp.take(X, i_idx, axis=0)
+    sqq = jnp.take(sqn, i_idx)
+    a_i, L_i, U_i = _lane(alpha, i_idx), _lane(L, i_idx), _lane(U, i_idx)
+    g_i = _lane(G, i_idx)
+    use_exact = jnp.asarray([b % 2 == 0 for b in range(B)])
+    js, gains = [], []
+    for b in range(B):
+        _, j, g = ref.rbf_row_wss(X, sqn, G[b], alpha[b], L[b], U[b], XQ[b],
+                                  a_i[b], L_i[b], U_i[b], g_i[b], i_idx[b],
+                                  use_exact[b], gammas[b])
+        js.append(int(j))
+        gains.append(float(g))
+    tol = 1e-4 if dtype == jnp.float32 else 1e-11
+    for impl in ("jnp", "interpret"):
+        j_b, gain_b = ops.rbf_row_wss_batched(
+            X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i, g_i, i_idx,
+            use_exact, gammas, impl=impl, block_l=128)
+        assert [int(x) for x in j_b] == js, impl
+        np.testing.assert_allclose(np.asarray(gain_b), gains, rtol=tol)
+
+
+@pytest.mark.parametrize("l,d,B", [(64, 2, 3), (513, 33, 9)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pass_b_batched_matches_single_lane(l, d, B, dtype):
+    """Batched pass B (jnp + interpret) == per-lane single-lane oracle,
+    including a frozen (mu = 0) lane whose G must come back unchanged."""
+    X, sqn, G, alpha, L, U, gammas, i_idx = _setup_batched(l, d, B, dtype,
+                                                           seed=1)
+    rng = np.random.default_rng(2)
+    j_idx = jnp.asarray(rng.integers(0, l, B), jnp.int32)
+    mu = jnp.asarray(rng.uniform(-0.5, 0.5, B), dtype).at[0].set(0.0)
+    XQi = jnp.take(X, i_idx, axis=0)
+    XQj = jnp.take(X, j_idx, axis=0)
+    sqqi, sqqj = jnp.take(sqn, i_idx), jnp.take(sqn, j_idx)
+    lanes = jnp.arange(B)
+    alpha_new = jnp.clip(alpha.at[lanes, i_idx].add(mu)
+                         .at[lanes, j_idx].add(-mu), L, U)
+    refs = []
+    for b in range(B):
+        k_i = ref.rbf_row(X, sqn, XQi[b], gammas[b])
+        refs.append(ref.rbf_update_wss(X, sqn, G[b], k_i, XQj[b], mu[b],
+                                       alpha_new[b], L[b], U[b], gammas[b]))
+    tol = 1e-4 if dtype == jnp.float32 else 1e-11
+    for impl in ("jnp", "interpret"):
+        Gn, i_n, gi_n, gdn = ops.rbf_update_wss_batched(
+            X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj, mu, gammas,
+            impl=impl, block_l=128)
+        np.testing.assert_allclose(np.asarray(Gn),
+                                   np.stack([np.asarray(r[0]) for r in refs]),
+                                   rtol=tol, atol=tol)
+        assert [int(x) for x in i_n] == [int(r[1]) for r in refs], impl
+        np.testing.assert_allclose(np.asarray(gi_n),
+                                   [float(r[2]) for r in refs], rtol=tol)
+        np.testing.assert_allclose(np.asarray(gdn),
+                                   [float(r[3]) for r in refs], rtol=tol)
+        # the frozen lane: bitwise no-op on G
+        np.testing.assert_array_equal(np.asarray(Gn[0]), np.asarray(G[0]))
+
+
 @pytest.mark.parametrize("block_l", [128, 256, 512, 1024])
 def test_pass_a_block_size_sweep(block_l):
     """Block shape must not change results (padding/tiling invariance)."""
