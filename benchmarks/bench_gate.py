@@ -1,0 +1,97 @@
+"""CI perf gate: compare a fresh quick-profile ``BENCH_grid.json`` against
+the checked-in record and FAIL on a real speedup regression.
+
+    python -m benchmarks.bench_gate FRESH_JSON RECORD_JSON
+
+Gated metric: ``fused_batched_vs_sequential`` — the fused batched engine's
+speedup over the status-quo sequential loop.  It is a *same-machine ratio*
+(both contenders run interleaved on the same host in the same process), so
+it transfers across runner generations where absolute wall times do not.
+
+Noise policy:
+
+* the quick profile measures min-over-5-alternating-rounds per contender
+  (see ``benchmarks/grid_bench.py``), which sheds transient host stalls;
+* the gate tolerates a 25% drop below the record before failing
+  (``BENCH_GATE_TOLERANCE`` overrides, e.g. ``0.4`` on flakier hardware);
+* ``BENCH_GATE_SKIP=1`` turns the gate into a report-only run — the CI
+  workflow sets it when a PR carries the ``bench-noisy-runner`` label.
+
+A fresh speedup *above* the record prints a hint to refresh the record
+(``benchmarks/BENCH_grid_quick.json``) but never fails.
+"""
+
+import json
+import os
+import sys
+
+METRIC = "fused_batched_vs_sequential"
+DEFAULT_TOLERANCE = 0.25
+
+
+def _config_key(entry: dict):
+    c = entry["config"]
+    return (c["l"], c["k"], c["n_gamma"], entry["n_qp"])
+
+
+def gate(fresh_path: str, record_path: str) -> int:
+    tolerance = float(os.environ.get("BENCH_GATE_TOLERANCE",
+                                     DEFAULT_TOLERANCE))
+    skip = os.environ.get("BENCH_GATE_SKIP", "") not in ("", "0", "false")
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(record_path) as f:
+        record = json.load(f)
+
+    rec_by_key = {_config_key(e): e for e in record["configs"]}
+    checked = 0
+    failures = []
+    for entry in fresh["configs"]:
+        key = _config_key(entry)
+        rec = rec_by_key.get(key)
+        if rec is None or METRIC not in rec.get("speedups", {}):
+            print(f"bench_gate: no record for config {key} — skipping")
+            continue
+        got = entry.get("speedups", {}).get(METRIC)
+        if got is None:
+            # e.g. the quick profile dropped its sequential contender
+            print(f"bench_gate: fresh run lacks {METRIC} for config {key} "
+                  f"— skipping")
+            continue
+        want = rec["speedups"][METRIC]
+        floor = want * (1.0 - tolerance)
+        verdict = "OK" if got >= floor else "REGRESSION"
+        print(f"bench_gate: {METRIC} @ {key}: fresh {got:.2f}x vs "
+              f"record {want:.2f}x (floor {floor:.2f}x) -> {verdict}")
+        if got < floor:
+            failures.append(key)
+        elif got > want * (1.0 + tolerance):
+            print(f"bench_gate: note — fresh is >{tolerance:.0%} above the "
+                  f"record; consider refreshing {record_path}")
+        checked += 1
+
+    if checked == 0:
+        print("bench_gate: ERROR — no comparable configs between fresh "
+              "and record")
+        return 0 if skip else 1
+    if failures:
+        msg = (f"bench_gate: {len(failures)} config(s) regressed "
+               f">{tolerance:.0%} below the checked-in record")
+        if skip:
+            print(msg + " — IGNORED (BENCH_GATE_SKIP set, e.g. via the "
+                        "bench-noisy-runner label)")
+            return 0
+        print(msg)
+        return 1
+    print(f"bench_gate: all {checked} config(s) within tolerance")
+    return 0
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    sys.exit(gate(sys.argv[1], sys.argv[2]))
+
+
+if __name__ == "__main__":
+    main()

@@ -42,8 +42,10 @@ from repro.core.solver import SolverConfig, solve
 # config — 8 gammas x 3 classes = 24 heterogeneous lanes at l = 512.
 PROFILES = {
     "quick": [
+        # repeat=5: the quick profile gates CI (benchmarks/bench_gate.py),
+        # so the min-over-rounds needs enough rounds to shed host noise
         dict(l=96, d=16, k=3, n_gamma=4, g_range=(0.1, 1.0),
-             Cs=[1.0, 8.0], repeat=2, sequential=True),
+             Cs=[1.0, 8.0], repeat=5, sequential=True),
     ],
     "full": [
         dict(l=64, d=32, k=4, n_gamma=8, g_range=(0.05, 1.0),

@@ -44,7 +44,8 @@ import numpy as np
 
 from repro.core import qp as qp_mod
 from repro.core.solver import SolveResult, SolverConfig, solve
-from repro.core.solver_fused import FusedResult, solve_fused_batched
+from repro.core.solver_fused import (FusedResult, solve_fused_batched,
+                                     solve_fused_batched_qp)
 
 
 def sqdist(X: jax.Array) -> jax.Array:
@@ -104,9 +105,13 @@ def _solve_grid(X, Y, Cs, gammas, cfg: SolverConfig,
 # accelerator memory mode — no Gram at all).
 #
 # The fused engine does not track the per-step counters n_clipped /
-# n_reverted (genuinely untracked: they are zero-filled); n_free is instead
-# reported as the number of *free support vectors* at the optimum, computed
-# from the final alpha and the box bounds.
+# n_reverted — they are GENUINELY UNTRACKED, so the fused drivers fill
+# them with the -1 sentinel (UNTRACKED) instead of zeros: a zero would
+# read as "this never happened" to callers comparing engines.  n_free is
+# instead reported as the number of *free support vectors* at the
+# optimum, computed from the final alpha and the box bounds.
+
+UNTRACKED = -1  # sentinel for counters the fused iteration never materializes
 
 
 def _free_sv_count(alpha, L, U) -> jax.Array:
@@ -142,11 +147,12 @@ def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
     n_free = _free_sv_count(fr.alpha, jnp.minimum(0.0, YC),
                             jnp.maximum(0.0, YC))
     zero = jnp.zeros((nG, k, Cs.shape[0]), jnp.int32)
+    untracked = jnp.full((nG, k, Cs.shape[0]), UNTRACKED, jnp.int32)
     return SolveResult(
         alpha=fr.alpha, b=fr.b, G=fr.G, iterations=fr.iterations,
         objective=fr.objective, kkt_gap=fr.kkt_gap, converged=fr.converged,
         n_planning=fr.n_planning, n_free=n_free,
-        n_clipped=zero, n_reverted=zero,
+        n_clipped=untracked, n_reverted=untracked,
         trace=jnp.zeros((nG, k, Cs.shape[0], 1), X.dtype), n_trace=zero,
         steps_i=jnp.zeros((nG, k, Cs.shape[0], 1), jnp.int32),
         steps_j=jnp.zeros((nG, k, Cs.shape[0], 1), jnp.int32),
@@ -175,8 +181,9 @@ def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
     in-kernel lane freezing (jnp backend: Gram-bank gathers; pallas:
     X-tile row recompute, no Gram).  The fused engine requires
     ``cfg.algorithm in ("smo", "pasmo")``, ``plan_candidates == 1``,
-    WSS2 selection and no trace/step recording (asserted), and
-    zero-fills the step-type counters (see module notes).
+    WSS2 selection and no trace/step recording (asserted), and fills the
+    untracked step-type counters ``n_clipped``/``n_reverted`` with the
+    ``UNTRACKED`` (-1) sentinel (see module notes).
 
     With ``warm_start=True`` the vmapped engine solves the C-axis in
     ascending order (results are scattered back to input order), chaining
@@ -309,6 +316,7 @@ def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
         return jnp.asarray(arr.reshape((nG, k, nC) + arr.shape[1:]), dt)
 
     zero = jnp.zeros((nG, k, nC), jnp.int32)
+    untracked = jnp.full((nG, k, nC), UNTRACKED, jnp.int32)
     return SolveResult(
         alpha=shape(a_c), b=shape(out["b"]), G=shape(g_c),
         iterations=shape(out["iterations"], jnp.int32),
@@ -316,7 +324,7 @@ def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
         converged=shape(out["converged"], bool),
         n_planning=shape(out["n_planning"], jnp.int32),
         n_free=shape(n_free, jnp.int32),
-        n_clipped=zero, n_reverted=zero,
+        n_clipped=untracked, n_reverted=untracked,
         trace=jnp.zeros((nG, k, nC, 1), dtype), n_trace=zero,
         steps_i=jnp.zeros((nG, k, nC, 1), jnp.int32),
         steps_j=jnp.zeros((nG, k, nC, 1), jnp.int32),
@@ -343,8 +351,9 @@ def solve_grid_compacted(X, Y, Cs, gammas,
     layout (every (gamma, class, C) point is a lane; compaction stacks
     with the in-kernel freeze); there ``n_free`` is the
     free-support-vector count from the final ``alpha``/bounds while
-    ``n_clipped``/``n_reverted`` are genuinely untracked (zero) — the
-    fused iteration never materializes the step type.  The trace/step
+    ``n_clipped``/``n_reverted`` carry the ``UNTRACKED`` (-1) sentinel —
+    the fused iteration never materializes the step type, and a zero
+    would be indistinguishable from "never happened".  The trace/step
     recording buffers are placeholders in both modes (chunk resumes reset
     the O(1) recording state).
     """
@@ -429,6 +438,108 @@ def solve_grid_compacted(X, Y, Cs, gammas,
         steps_i=jnp.zeros((nG, k, nC, 1), jnp.int32),
         steps_j=jnp.zeros((nG, k, nC, 1), jnp.int32),
         steps_mu=jnp.zeros((nG, k, nC, 1), X.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Generalized-dual grids: ε-SVR and one-class lanes on the same fused engine
+# ---------------------------------------------------------------------------
+#
+# The fused engine is dual-generic (per-lane P/L/U), so a regression or
+# novelty-detection hyper-parameter grid flattens into the SAME flat
+# cold-start lane batch as the SVC grid: one while_loop, two batched kernel
+# passes per iteration, in-kernel lane freezing.  The ε-SVR lanes run the
+# doubled 2l-variable operator over the base X (rows tiled — no 2l x 2l
+# Gram anywhere); on the jnp backend both grids share the per-gamma *base*
+# Gram bank exactly like the SVC grid.
+
+
+def solve_grid_svr(X, y, Cs, epsilons, gammas,
+                   cfg: SolverConfig = SolverConfig(), *,
+                   impl: str = "auto", block_l: int = 1024) -> FusedResult:
+    """Solve the full ε-SVR (gamma, epsilon, C) grid as one fused lane batch.
+
+    ``X``: (l, d); ``y``: (l,) real targets; ``Cs``: (n_C,); ``epsilons``:
+    (n_eps,) tube widths; ``gammas``: (n_gamma,) (scalars are promoted).
+    Returns a :class:`~repro.core.solver_fused.FusedResult` whose leaves
+    have leading axes ``(n_gamma, n_eps, n_C)``; ``alpha`` is the doubled
+    (..., 2l) dual — fold with :func:`repro.core.qp.svr_fold` to (..., l)
+    coefficients, after which :func:`grid_decision` evaluates the whole
+    grid (pass the eps axis in the class slot).
+    """
+    from repro.kernels.ops import resolve_impl
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    dtype = X.dtype
+    l = y.shape[0]
+    Cs_j = jnp.asarray(np.asarray(Cs, np.float64).reshape(-1), dtype)
+    eps_j = jnp.asarray(np.asarray(epsilons, np.float64).reshape(-1), dtype)
+    gam_j = jnp.asarray(np.asarray(gammas, np.float64).reshape(-1), dtype)
+    nG, nE, nC = gam_j.shape[0], eps_j.shape[0], Cs_j.shape[0]
+    zl = jnp.zeros((nC, l), dtype)
+    # lane order (gamma, eps, C) row-major; P varies along eps, box along C
+    P_e = jnp.concatenate([y[None, :] - eps_j[:, None],
+                           y[None, :] + eps_j[:, None]], axis=1)  # (nE, 2l)
+    Pf = jnp.tile(jnp.repeat(P_e, nC, axis=0), (nG, 1))           # (B, 2l)
+    L_c = jnp.concatenate([zl, -Cs_j[:, None] + zl], axis=1)      # (nC, 2l)
+    U_c = jnp.concatenate([Cs_j[:, None] + zl, zl], axis=1)
+    Lf = jnp.tile(L_c, (nG * nE, 1))
+    Uf = jnp.tile(U_c, (nG * nE, 1))
+    gf = jnp.repeat(gam_j, nE * nC)
+    bank_kw = {}
+    if resolve_impl(impl) == "jnp":
+        bank_kw = dict(
+            gram=jnp.exp(-gam_j[:, None, None] * sqdist(X)),
+            gram_idx=jnp.repeat(jnp.arange(nG, dtype=jnp.int32), nE * nC))
+    out = solve_fused_batched_qp(X, Pf, Lf, Uf, gf, cfg, impl=impl,
+                                 block_l=block_l, doubled=True, **bank_kw)
+    return jax.tree.map(
+        lambda leaf: leaf.reshape((nG, nE, nC) + leaf.shape[1:]), out)
+
+
+def solve_grid_oneclass(X, nus, gammas, cfg: SolverConfig = SolverConfig(),
+                        *, impl: str = "auto",
+                        block_l: int = 1024) -> FusedResult:
+    """Solve the one-class (gamma, nu) grid as one fused lane batch.
+
+    Every lane is the ν dual (``p = 0``, box ``[0, 1/(nu l)]``, ``sum(a) =
+    1``) started from the LIBSVM feasible point with its closed-position
+    gradient ``G0 = -K alpha0`` (one matvec per lane, paid once before the
+    loop).  Returns a :class:`~repro.core.solver_fused.FusedResult` with
+    leading axes ``(n_gamma, n_nu)``; the decision offset is ``rho = -b``
+    (``decision(x) = k(x, SVs) @ alpha + b``).
+    """
+    from repro.kernels.ops import resolve_impl
+    X = jnp.asarray(X)
+    dtype = X.dtype
+    l = X.shape[0]
+    nus_np = np.asarray(nus, np.float64).reshape(-1)
+    gam_j = jnp.asarray(np.asarray(gammas, np.float64).reshape(-1), dtype)
+    nG, nN = gam_j.shape[0], len(nus_np)
+    A0 = jnp.stack([qp_mod.oneclass_alpha0(l, nu, dtype) for nu in nus_np])
+    U_n = jnp.stack([qp_mod.oneclass_qp(l, nu, dtype).bounds.upper
+                     for nu in nus_np])                           # (nN, l)
+    Pf = jnp.zeros((nG * nN, l), dtype)
+    Lf = jnp.zeros((nG * nN, l), dtype)
+    Uf = jnp.tile(U_n, (nG, 1))
+    gf = jnp.repeat(gam_j, nN)
+    alpha0 = jnp.tile(A0, (nG, 1))
+    bank_kw = {}
+    if resolve_impl(impl) == "jnp":
+        bank = jnp.exp(-gam_j[:, None, None] * sqdist(X))
+        G0 = -jnp.einsum("gij,nj->gni", bank, A0).reshape(nG * nN, l)
+        bank_kw = dict(
+            gram=bank,
+            gram_idx=jnp.repeat(jnp.arange(nG, dtype=jnp.int32), nN))
+    else:
+        # Gram-free init: one blocked RBF matvec per (gamma, nu) lane
+        G0 = -jax.vmap(lambda g: jax.vmap(
+            lambda a: qp_mod.make_rbf(X, g).matvec(a))(A0))(gam_j)
+        G0 = G0.reshape(nG * nN, l)
+    out = solve_fused_batched_qp(X, Pf, Lf, Uf, gf, cfg, impl=impl,
+                                 block_l=block_l, alpha0=alpha0, G0=G0,
+                                 **bank_kw)
+    return jax.tree.map(
+        lambda leaf: leaf.reshape((nG, nN) + leaf.shape[1:]), out)
 
 
 def grid_decision(Xq, X, gammas, alpha: jax.Array,

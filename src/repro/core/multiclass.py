@@ -71,13 +71,16 @@ def solve_ovr(kernel, Y: jax.Array, C,
 
     ``kernel`` is a single (unbatched) oracle shared across classes — it is
     mapped with ``in_axes=None``, so a precomputed Gram matrix is gathered,
-    never recomputed, per class.  ``Y`` is (k, l); ``C`` is scalar or (k,);
-    optional ``alpha0``/``G0`` are (k, l) warm starts.  Returns a
+    never recomputed, per class.  ``Y`` is (k, l); ``C`` is scalar, (k,)
+    per-class, or (k, l) per-sample budgets (class-weighted SVC); optional
+    ``alpha0``/``G0`` are (k, l) warm starts.  Returns a
     :class:`SolveResult` whose leaves carry a leading class axis.
     """
     Y = jnp.asarray(Y)
     k = Y.shape[0]
-    C = jnp.broadcast_to(jnp.asarray(C, Y.dtype), (k,))
+    C = jnp.asarray(C, Y.dtype)
+    if C.ndim < 2:
+        C = jnp.broadcast_to(C, (k,))
     if alpha0 is None:
         return jax.vmap(
             lambda y, c: solve(kernel, y, c, cfg),
@@ -99,8 +102,9 @@ def solve_ovr_fused(X, Y: jax.Array, C, gamma,
     ``precompute=True`` on the jnp backend the single shared Gram matrix
     is built once and rows become gathers (CPU throughput mode); otherwise
     rows are recomputed from ``X`` and no Gram is ever materialized.
-    ``C`` is scalar or (k,) per-class budgets; ``gamma`` is the shared RBF
-    width.  Returns a :class:`~repro.core.solver_fused.FusedResult` with a
+    ``C`` is scalar, (k,) per-class, or (k, l) per-sample budgets
+    (class-weighted SVC); ``gamma`` is the shared RBF width.  Returns a
+    :class:`~repro.core.solver_fused.FusedResult` with a
     leading class axis on every leaf.  Requires
     ``cfg.algorithm in ("smo", "pasmo")`` and ``plan_candidates == 1``.
     """

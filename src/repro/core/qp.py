@@ -1,18 +1,35 @@
-"""Dual SVM quadratic program: problem container and exact math.
+"""Dual quadratic programs: problem containers and exact math.
 
-The paper (Glasmachers, "The Planning-ahead SMO Algorithm") works with the
-*signed* dual formulation
+The paper (Glasmachers, "The Planning-ahead SMO Algorithm") states its
+analysis for the *general* SMO dual
 
-    max  f(a) = y^T a - 1/2 a^T K a
-    s.t. sum(a) = 0,   L_i <= a_i <= U_i,
-         L_i = min(0, y_i C),  U_i = max(0, y_i C)
+    max  f(a) = p^T a - 1/2 a^T Q a
+    s.t. sum(a) = const,   L_i <= a_i <= U_i
 
-where ``K`` is the plain (label-free) kernel Gram matrix and the gradient is
-``grad f(a) = y - K a``.  All step / gain algebra in :mod:`repro.core.step`
-and the working-set selection in :mod:`repro.core.wss` operate on this form.
+with gradient ``grad f(a) = p - Q a``.  :class:`DualQP` is that problem
+description — linear term ``p`` plus the per-coordinate box — and the
+step / gain algebra in :mod:`repro.core.step` and the working-set
+selection in :mod:`repro.core.wss` already operate on this form (they
+only ever see ``G``, ``L``, ``U``).  Equality-constraint signs are folded
+into the variables (the *signed* convention): every instance below
+substitutes ``a_i <- s_i a_i`` so the constraint is always ``sum(a) =
+const`` and the SMO direction is always ``e_i - e_j``; the signs survive
+only in the box bounds and in ``p``.
 
-Everything in this module is pure ``jnp`` (jit/vmap friendly) and is also the
-oracle used by the property tests.
+Instances (constructors below):
+
+* classification — ``p = y``, box ``[min(0, y_i C), max(0, y_i C)]``,
+  ``sum(a) = 0`` (the historical hard-coded case; per-sample ``C_i``
+  gives class-weighted SVC).
+* ε-SVR — 2l doubled variables ``a = (alpha+, -alpha-)`` sharing ONE
+  l x l Gram through :class:`DoubledKernel`: ``p = (y - eps, y + eps)``,
+  box ``([0, C], [-C, 0])``, ``sum(a) = 0``.  The 2l x 2l matrix is
+  never materialized — its rows are tiled base rows.
+* one-class / ν novelty detection — ``p = 0``, box ``[0, 1/(nu l)]``,
+  ``sum(a) = 1`` (feasible start from :func:`oneclass_alpha0`).
+
+Everything in this module is pure ``jnp`` (jit/vmap friendly) and is also
+the oracle used by the property tests.
 """
 
 from __future__ import annotations
@@ -23,6 +40,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # LIBSVM's guard for vanishing curvature (footnote 1 in the paper).
 TAU = 1e-12
@@ -38,20 +56,106 @@ class Bounds:
 
 
 def make_bounds(y: jax.Array, C) -> Bounds:
-    """Per-coordinate box bounds ``[min(0, y_i C), max(0, y_i C)]``."""
+    """Per-coordinate box bounds ``[min(0, y_i C), max(0, y_i C)]``.
+
+    ``C`` broadcasts: a scalar is the classic shared budget, an (l,)
+    vector gives per-sample budgets (class-weighted SVC).
+    """
     yC = y * C
     zero = jnp.zeros_like(yC)
     return Bounds(lower=jnp.minimum(zero, yC), upper=jnp.maximum(zero, yC))
 
 
-def dual_objective(alpha: jax.Array, y: jax.Array, K: jax.Array) -> jax.Array:
-    """``f(a) = y^T a - 1/2 a^T K a`` (eq. 1)."""
-    return jnp.dot(y, alpha) - 0.5 * jnp.dot(alpha, K @ alpha)
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DualQP:
+    """General SMO dual: ``max p^T a - 1/2 a^T Q a`` over ``bounds`` with
+    one equality constraint ``sum(a) = const`` (signs folded into the box;
+    the constant is fixed by the feasible starting point).
+
+    The kernel/Gram operator ``Q`` is NOT part of the container — it comes
+    from a kernel oracle (below), so one problem description works for a
+    precomputed Gram, on-the-fly RBF rows, or the doubled SVR operator.
+    """
+
+    p: jax.Array       # (n,) linear term
+    bounds: Bounds     # (n,) per-coordinate box
 
 
-def gradient(alpha: jax.Array, y: jax.Array, K: jax.Array) -> jax.Array:
-    """``grad f(a) = y - K a``."""
-    return y - K @ alpha
+def classification_qp(y: jax.Array, C) -> DualQP:
+    """The signed classification dual (eq. 1): ``p = y``, box from labels.
+
+    ``C`` may be a scalar or an (l,) per-sample vector (class weights).
+    """
+    return DualQP(p=y, bounds=make_bounds(y, C))
+
+
+def svr_qp(y: jax.Array, C, epsilon) -> DualQP:
+    """The ε-SVR dual in signed doubled form (2l variables).
+
+    With ``a = (alpha+, -alpha-)`` the usual ε-insensitive dual
+
+        max  y^T (a+ - a-) - eps sum(a+ + a-) - 1/2 (a+ - a-)^T K (a+ - a-)
+
+    becomes exactly the general form over the doubled operator
+    ``Q[k, k'] = K[k mod l, k' mod l]`` (see :class:`DoubledKernel`) with
+
+        p = (y - eps, y + eps),  box = ([0, C], [-C, 0]),  sum(a) = 0.
+
+    The regression coefficients are ``beta = a[:l] + a[l:]``
+    (:func:`svr_fold`).  Conjugate pairs ``(k, k + l)`` can never be
+    selected as a working set: ``G_k - G_{k+l} = -2 eps <= 0`` identically.
+    """
+    y = jnp.asarray(y)
+    C = jnp.broadcast_to(jnp.asarray(C, y.dtype), y.shape)
+    eps = jnp.asarray(epsilon, y.dtype)
+    zero = jnp.zeros_like(y)
+    return DualQP(
+        p=jnp.concatenate([y - eps, y + eps]),
+        bounds=Bounds(lower=jnp.concatenate([zero, -C]),
+                      upper=jnp.concatenate([C, zero])))
+
+
+def svr_fold(alpha: jax.Array) -> jax.Array:
+    """Fold a doubled SVR dual vector to coefficients ``beta = a+ - a-``."""
+    n = alpha.shape[-1] // 2
+    return alpha[..., :n] + alpha[..., n:]
+
+
+def oneclass_qp(n: int, nu, dtype=jnp.float64) -> DualQP:
+    """The one-class (ν novelty-detection) dual: ``p = 0``, box
+    ``[0, 1/(nu l)]``, equality ``sum(a) = 1``.
+
+    The zero vector is NOT feasible — start from :func:`oneclass_alpha0`
+    (and a matching ``G0 = -K alpha0``).
+    """
+    u = 1.0 / (jnp.asarray(nu, dtype) * n)
+    return DualQP(p=jnp.zeros((n,), dtype),
+                  bounds=Bounds(lower=jnp.zeros((n,), dtype),
+                                upper=jnp.full((n,), u, dtype)))
+
+
+def oneclass_alpha0(n: int, nu: float, dtype=jnp.float64) -> jax.Array:
+    """LIBSVM's feasible one-class start: the first ``floor(nu l)``
+    coordinates at the upper bound ``1/(nu l)``, one fractional remainder
+    coordinate, ``sum(a) = 1`` exactly."""
+    nl = float(nu) * n
+    m = int(np.floor(nl))
+    a0 = np.zeros(n)
+    a0[:m] = 1.0 / nl
+    if m < n:
+        a0[m] = (nl - m) / nl
+    return jnp.asarray(a0, dtype)
+
+
+def dual_objective(alpha: jax.Array, p: jax.Array, K: jax.Array) -> jax.Array:
+    """``f(a) = p^T a - 1/2 a^T Q a`` (general form; ``p = y`` in eq. 1)."""
+    return jnp.dot(p, alpha) - 0.5 * jnp.dot(alpha, K @ alpha)
+
+
+def gradient(alpha: jax.Array, p: jax.Array, K: jax.Array) -> jax.Array:
+    """``grad f(a) = p - Q a`` (``p = y`` in the classification instance)."""
+    return p - K @ alpha
 
 
 def up_mask(alpha: jax.Array, bounds: Bounds, tol: float = 0.0) -> jax.Array:
@@ -236,6 +340,42 @@ class LinearKernel:
 
     def matvec(self, v: jax.Array) -> jax.Array:
         return self.X @ (self.X.T @ v)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DoubledKernel:
+    """The ε-SVR doubled operator ``Q[k, k'] = K[k mod l, k' mod l]``.
+
+    In the signed substitution ``a = (alpha+, -alpha-)`` the sign pattern
+    of the classic ``(alpha+, alpha-)`` dual folds into the box, so all
+    four l x l blocks of the 2l x 2l operator equal the base Gram ``K`` —
+    a row of ``Q`` is the base row *tiled*, the diagonal is the base
+    diagonal tiled, and a matvec contracts the two halves first.  Nothing
+    of size 2l x 2l ever exists; ``base`` may itself be any oracle
+    (precomputed, stacked-bank, RBF-on-the-fly).
+    """
+
+    base: object  # any kernel oracle from this module (pytree)
+
+    @property
+    def n(self) -> int:
+        return 2 * self.base.n
+
+    def row(self, i: jax.Array) -> jax.Array:
+        r = self.base.row(i % self.base.n)
+        return jnp.concatenate([r, r])
+
+    def diag(self) -> jax.Array:
+        d = self.base.diag()
+        return jnp.concatenate([d, d])
+
+    def entry(self, i: jax.Array, j: jax.Array) -> jax.Array:
+        return self.base.entry(i % self.base.n, j % self.base.n)
+
+    def matvec(self, v: jax.Array) -> jax.Array:
+        m = self.base.matvec(v[: self.base.n] + v[self.base.n:])
+        return jnp.concatenate([m, m])
 
 
 def make_rbf(X: jax.Array, gamma) -> RBFKernel:

@@ -92,19 +92,31 @@ def _cand_gain(B, G, K, up, dn, exact=False, alpha=None, L=None, U=None):
     return 0.5 * l * l / q
 
 
-def solve_smo(K, y, C, eps=1e-3, max_iter=10_000_000, tie="last",
-              overshoot: float = 1.0, record_steps=False) -> RefResult:
-    """Algorithm 1 with WSS2 (eq. 3) — the LIBSVM 2.84 baseline.
+def solve_qp_smo(Q, p, L, U, alpha0=None, eps=1e-3, max_iter=10_000_000,
+                 tie="last", overshoot: float = 1.0,
+                 record_steps=False) -> RefResult:
+    """General-dual SMO oracle: ``max p.a - 1/2 a.Q a`` over ``[L, U]``
+    with the equality constraint fixed by ``alpha0`` (default 0).
 
-    ``overshoot`` != 1 gives the §7.3 heuristic (clip(overshoot * mu*)).
+    This is the dense trusted reference for EVERY instance of the general
+    dual — classification (``p = y``), ε-SVR (pass the materialized
+    2l x 2l doubled ``Q``; dense is fine here, it is the *oracle*, the
+    production engines never build it), one-class (``p = 0`` with a
+    feasible ``alpha0``).  ``overshoot`` != 1 gives the §7.3 heuristic
+    (clip(overshoot * mu*)).
     """
-    K = np.asarray(K, np.float64)
-    y = np.asarray(y, np.float64)
-    n = len(y)
-    L, U = _bounds(y, C)
-    alpha = np.zeros(n)
-    G = y.copy()
-    diag = np.diagonal(K).copy()
+    Q = np.asarray(Q, np.float64)
+    p = np.asarray(p, np.float64)
+    L = np.asarray(L, np.float64)
+    U = np.asarray(U, np.float64)
+    n = len(p)
+    if alpha0 is None:
+        alpha = np.zeros(n)
+        G = p.copy()
+    else:
+        alpha = np.asarray(alpha0, np.float64).copy()
+        G = p - Q @ alpha
+    diag = np.diagonal(Q).copy()
     n_free = n_clipped = 0
     steps: List[Tuple[int, int, float, bool]] = []
     t = 0
@@ -114,12 +126,12 @@ def solve_smo(K, y, C, eps=1e-3, max_iter=10_000_000, tie="last",
         g_up = np.max(np.where(up, G, -np.inf))
         g_dn = np.min(np.where(dn, G, np.inf))
         if g_up - g_dn <= eps:
-            return RefResult(alpha, t, _objective(alpha, y, K), g_up - g_dn,
+            return RefResult(alpha, t, _objective(alpha, p, Q), g_up - g_dn,
                              True, 0, n_free, n_clipped, 0,
                              steps=steps if record_steps else None)
-        i, j, _ = _select_wss2(G, K, diag, up, dn, tie)
+        i, j, _ = _select_wss2(G, Q, diag, up, dn, tie)
         l = G[i] - G[j]
-        q = max(K[i, i] - 2.0 * K[i, j] + K[j, j], TAU)
+        q = max(Q[i, i] - 2.0 * Q[i, j] + Q[j, j], TAU)
         lo, hi = _step_bounds(alpha[i], alpha[j], L[i], U[i], L[j], U[j])
         mu_star = overshoot * (l / q)
         mu = min(max(mu_star, lo), hi)
@@ -131,14 +143,43 @@ def solve_smo(K, y, C, eps=1e-3, max_iter=10_000_000, tie="last",
             steps.append((i, j, mu, False))
         alpha[i] += mu
         alpha[j] -= mu
-        G -= mu * (K[i] - K[j])
+        G -= mu * (Q[i] - Q[j])
         t += 1
     up = alpha < U
     dn = alpha > L
     gap = (np.max(np.where(up, G, -np.inf)) - np.min(np.where(dn, G, np.inf)))
-    return RefResult(alpha, t, _objective(alpha, y, K), gap, False,
+    return RefResult(alpha, t, _objective(alpha, p, Q), gap, False,
                      0, n_free, n_clipped, 0,
                      steps=steps if record_steps else None)
+
+
+def doubled_qp(K, y, C, epsilon):
+    """Materialize the ε-SVR doubled dual ``(Q, p, L, U)`` for the oracle.
+
+    Dense 2l x 2l — test/reference use only (the solvers tile base rows).
+    """
+    K = np.asarray(K, np.float64)
+    y = np.asarray(y, np.float64)
+    n = len(y)
+    Q = np.tile(K, (2, 2))
+    p = np.concatenate([y - epsilon, y + epsilon])
+    Cv = np.broadcast_to(np.asarray(C, np.float64), (n,))
+    L = np.concatenate([np.zeros(n), -Cv])
+    U = np.concatenate([Cv, np.zeros(n)])
+    return Q, p, L, U
+
+
+def solve_smo(K, y, C, eps=1e-3, max_iter=10_000_000, tie="last",
+              overshoot: float = 1.0, record_steps=False) -> RefResult:
+    """Algorithm 1 with WSS2 (eq. 3) — the LIBSVM 2.84 baseline.
+
+    The ``p = y`` classification instance of :func:`solve_qp_smo`.
+    ``overshoot`` != 1 gives the §7.3 heuristic (clip(overshoot * mu*)).
+    """
+    y = np.asarray(y, np.float64)
+    L, U = _bounds(y, C)
+    return solve_qp_smo(K, y, L, U, eps=eps, max_iter=max_iter, tie=tie,
+                        overshoot=overshoot, record_steps=record_steps)
 
 
 def solve_pasmo(K, y, C, eps=1e-3, max_iter=10_000_000, eta=0.9, tie="last",

@@ -16,6 +16,11 @@ The solver state is a flat pytree, so the whole solve is one
 once: one-vs-rest heads, C/gamma grids).  Kernel rows come from an oracle
 (:mod:`repro.core.qp`) so the same loop runs from a precomputed Gram matrix
 or from on-the-fly (Pallas-backed) row computation.
+
+The loop body operates on the *general* dual (:class:`repro.core.qp.DualQP`
+— linear term ``p``, arbitrary box): :func:`solve_qp` is the general entry
+point (ε-SVR via :class:`~repro.core.qp.DoubledKernel`, one-class via a
+feasible ``alpha0``), :func:`solve` the classification instance.
 """
 
 from __future__ import annotations
@@ -122,10 +127,10 @@ def _shrink_mask(G, alpha, bounds: Bounds):
     return ~inactive
 
 
-def _make_body(kernel, y, bounds: Bounds, diag, cfg: SolverConfig):
-    n = y.shape[0]
+def _make_body(kernel, p, bounds: Bounds, diag, cfg: SolverConfig):
+    n = p.shape[0]
     N = cfg.plan_candidates
-    dtype = y.dtype
+    dtype = p.dtype
     eps = jnp.asarray(cfg.eps, dtype)
     eta = cfg.eta
     planning_enabled = cfg.algorithm in ("pasmo", "pasmo_simple")
@@ -305,18 +310,21 @@ def _make_body(kernel, y, bounds: Bounds, diag, cfg: SolverConfig):
     return body
 
 
-def init_state(kernel, y, bounds: Bounds, cfg: SolverConfig,
+def init_state(kernel, p, bounds: Bounds, cfg: SolverConfig,
                alpha0: Optional[jax.Array] = None,
                G0: Optional[jax.Array] = None) -> SolverState:
-    n = y.shape[0]
-    dtype = y.dtype
+    n = p.shape[0]
+    dtype = p.dtype
     if alpha0 is None:
-        alpha0 = jnp.zeros_like(y)
-        G0 = y  # grad f(0) = y: no kernel evaluations (paper §2)
+        # grad f(0) = p: no kernel evaluations (paper §2).  NOTE: alpha = 0
+        # must be feasible for this default (true for classification/SVR;
+        # the one-class equality sum(a) = 1 needs an explicit alpha0).
+        alpha0 = jnp.zeros_like(p)
+        G0 = p
     elif G0 is None:
-        # Reconstruct grad f(a0) = y - K a0 through the oracle (one matvec).
+        # Reconstruct grad f(a0) = p - Q a0 through the oracle (one matvec).
         # Warm starts across a C-grid reuse the previous G instead (free).
-        G0 = y - kernel.matvec(alpha0)
+        G0 = p - kernel.matvec(alpha0)
     N = cfg.plan_candidates
     cap = cfg.trace_cap if cfg.record_trace else 1
     scap = cfg.step_cap if cfg.record_steps else 1
@@ -340,14 +348,14 @@ def init_state(kernel, y, bounds: Bounds, cfg: SolverConfig,
         steps_mu=jnp.zeros((scap,), dtype))
 
 
-def _finalize(s: SolverState, y, bounds: Bounds) -> SolveResult:
+def _finalize(s: SolverState, p, bounds: Bounds) -> SolveResult:
     up = qp_mod.up_mask(s.alpha, bounds)
     dn = qp_mod.down_mask(s.alpha, bounds)
     g_up = jnp.max(jnp.where(up, s.G, -jnp.inf))
     g_dn = jnp.min(jnp.where(dn, s.G, jnp.inf))
     b = 0.5 * (g_up + g_dn)
-    # f(a) = y.a - 1/2 a.K a = 1/2 (y.a + G.a)  since G = y - K a
-    objective = 0.5 * (jnp.dot(y, s.alpha) + jnp.dot(s.G, s.alpha))
+    # f(a) = p.a - 1/2 a.Q a = 1/2 (p.a + G.a)  since G = p - Q a
+    objective = 0.5 * (jnp.dot(p, s.alpha) + jnp.dot(s.G, s.alpha))
     return SolveResult(
         alpha=s.alpha, b=b, G=s.G, iterations=s.t, objective=objective,
         kkt_gap=s.gap, converged=s.done,
@@ -357,26 +365,46 @@ def _finalize(s: SolverState, y, bounds: Bounds) -> SolveResult:
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def solve(kernel, y: jax.Array, C, cfg: SolverConfig = SolverConfig(),
-          alpha0: Optional[jax.Array] = None,
-          G0: Optional[jax.Array] = None) -> SolveResult:
-    """Solve the dual SVM QP (eq. 1) with the configured algorithm.
+def solve_qp(kernel, qp: qp_mod.DualQP, cfg: SolverConfig = SolverConfig(),
+             alpha0: Optional[jax.Array] = None,
+             G0: Optional[jax.Array] = None) -> SolveResult:
+    """Solve a general :class:`~repro.core.qp.DualQP` (``max p.a - 1/2
+    a.Q a`` over a box with one equality constraint).
 
-    ``kernel`` is any oracle from :mod:`repro.core.qp` (pytree).  Returns a
-    :class:`SolveResult`.  jit-compiled; vmap over a batch of QPs with e.g.
-    ``jax.vmap(lambda K, y: solve(PrecomputedKernel(K), y, C, cfg))``.
+    ``kernel`` is any oracle from :mod:`repro.core.qp` (pytree) — for
+    ε-SVR wrap the base oracle in :class:`~repro.core.qp.DoubledKernel`.
+    Problems whose feasible set does not contain 0 (one-class) must pass a
+    feasible ``alpha0`` (``G0`` is reconstructed by one matvec if
+    omitted).  jit-compiled; ``qp`` is traced data, so heterogeneous
+    batches vmap over one compilation.
     """
-    y = jnp.asarray(y)
-    bounds = qp_mod.make_bounds(y, jnp.asarray(C, y.dtype))
-    diag = kernel.diag().astype(y.dtype)
-    body = _make_body(kernel, y, bounds, diag, cfg)
-    s0 = init_state(kernel, y, bounds, cfg, alpha0, G0)
+    p = jnp.asarray(qp.p)
+    bounds = qp.bounds
+    diag = kernel.diag().astype(p.dtype)
+    body = _make_body(kernel, p, bounds, diag, cfg)
+    s0 = init_state(kernel, p, bounds, cfg, alpha0, G0)
 
     def cond(s: SolverState):
         return (~s.done) & (s.t < cfg.max_iter)
 
     s = jax.lax.while_loop(cond, body, s0)
-    return _finalize(s, y, bounds)
+    return _finalize(s, p, bounds)
+
+
+def solve(kernel, y: jax.Array, C, cfg: SolverConfig = SolverConfig(),
+          alpha0: Optional[jax.Array] = None,
+          G0: Optional[jax.Array] = None) -> SolveResult:
+    """Solve the dual SVM classification QP (eq. 1): the ``p = y`` instance
+    of :func:`solve_qp`.
+
+    ``C`` is a scalar budget or an (l,) per-sample vector (class-weighted
+    SVC).  Returns a :class:`SolveResult`.  jit-compiled; vmap over a batch
+    of QPs with e.g.
+    ``jax.vmap(lambda K, y: solve(PrecomputedKernel(K), y, C, cfg))``.
+    """
+    y = jnp.asarray(y)
+    qp = qp_mod.classification_qp(y, jnp.asarray(C, y.dtype))
+    return solve_qp(kernel, qp, cfg, alpha0, G0)
 
 
 def solve_batched(Ks: jax.Array, ys: jax.Array, C,

@@ -17,8 +17,11 @@ Semantics are identical to ``solver.solve`` with an RBF oracle (same
 Algorithms 3/4/5); trajectories agree modulo floating-point reassociation.
 ``impl`` selects pallas/interpret/jnp exactly as in ``repro.kernels.ops``.
 
-:func:`solve_fused_batched` runs a whole *batch of lanes* — one lane per
-(C, gamma, labels) QP over shared X — through ONE ``lax.while_loop`` whose
+:func:`solve_fused_batched_qp` runs a whole *batch of lanes* — one lane
+per *general* dual QP (:mod:`repro.core.qp`: per-lane linear term ``P``
+and box ``L``/``U``; classification, ε-SVR with ``doubled=True`` lanes
+over a shared base ``X``, one-class via feasible warm starts) — through
+ONE ``lax.while_loop`` whose
 body is TWO batched kernel launches plus O(B) per-lane algebra.  The lane
 batching differs from the single-lane shape in one structural way: pass A
 returns only the selection, and pass B recomputes both rows k_i/k_j
@@ -268,18 +271,26 @@ def _take_lane(M, idx):
     return jnp.take_along_axis(M, idx[:, None], axis=1)[:, 0]
 
 
-@partial(jax.jit, static_argnames=("cfg", "impl", "block_l"))
-def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
-                        *, impl: str = "auto", block_l: int = 1024,
-                        alpha0=None, G0=None, gram=None,
-                        gram_idx=None) -> FusedResult:
-    """Solve a batch of B RBF QPs over shared ``X`` in ONE while_loop.
+@partial(jax.jit, static_argnames=("cfg", "impl", "block_l", "doubled"))
+def solve_fused_batched_qp(X, P, L, U, gamma,
+                           cfg: SolverConfig = SolverConfig(),
+                           *, impl: str = "auto", block_l: int = 1024,
+                           alpha0=None, G0=None, gram=None, gram_idx=None,
+                           doubled: bool = False) -> FusedResult:
+    """Solve a batch of B *general* dual QPs over shared ``X`` in ONE
+    while_loop: per-lane linear term ``P`` (B, n), per-coordinate box
+    ``L``/``U`` (B, n), per-lane RBF ``gamma`` (scalar or (B,)).
 
-    ``Y`` is (B, l) signed label vectors; ``C``/``gamma`` are scalars or
-    (B,) per-lane values (traced — heterogeneous batches share one
-    compilation).  Optional (B, l) ``alpha0``/``G0`` warm starts must come
-    as a pair (the closed-form C-path restart of :mod:`repro.core.grid`).
+    This is the general-dual core behind :func:`solve_fused_batched`
+    (classification), the ε-SVR lanes (``doubled=True``) and the one-class
+    lanes (``P = 0``, warm ``alpha0``/``G0`` since 0 is infeasible there).
 
+    ``doubled=True`` runs the 2l-variable ε-SVR operator: ``X`` stays the
+    base (l, d) matrix while the lane state is (B, 2l); kernel rows are
+    base rows tiled (:mod:`repro.kernels` ``dup``), Gram-bank entries
+    index ``k mod l`` — the 2l x 2l matrix never exists anywhere.
+
+    Optional (B, n) ``alpha0``/``G0`` warm starts must come as a pair.
     Per iteration the body launches the batched pass A (selection) and
     pass B (both-rows + update + stopping scan) kernels; all remaining
     algebra — steps, planning, Alg. 3 candidates — is O(B) vector math
@@ -293,14 +304,14 @@ def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
     Two row sources:
 
     * default — rows are recomputed from ``X`` inside the kernels (the
-      accelerator memory mode: O(B l) state, no Gram ever materialized;
+      accelerator memory mode: O(B n) state, no Gram ever materialized;
       ``impl`` picks pallas/interpret/jnp as in :mod:`repro.kernels.ops`).
-    * ``gram``/``gram_idx`` — a shared (n_stack, l, l) Gram bank plus the
-      per-lane stack index: rows become gathers and the exp work is paid
-      once per distinct gamma instead of per iteration.  This is the CPU
-      throughput mode (it mirrors the vmapped engine's memory layout) and
-      runs as pure jnp algebra (``impl`` is ignored).  Lanes sharing a
-      gamma index the same bank entry — no per-lane Gram copies.
+    * ``gram``/``gram_idx`` — a shared (n_stack, l, l) *base* Gram bank
+      plus the per-lane stack index: rows become gathers and the exp work
+      is paid once per distinct gamma instead of per iteration.  This is
+      the CPU throughput mode (it mirrors the vmapped engine's memory
+      layout) and runs as pure jnp algebra (``impl`` is ignored).  Lanes
+      sharing a gamma index the same bank entry — no per-lane Gram copies.
     """
     assert cfg.algorithm in ("smo", "pasmo")
     assert cfg.plan_candidates == 1
@@ -314,13 +325,14 @@ def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
         "the Gram bank needs the (gram, gram_idx) pair"
     bank = gram is not None
     X = jnp.asarray(X)
-    Y = jnp.asarray(Y)
-    dtype = Y.dtype
-    B, n = Y.shape
-    C = jnp.broadcast_to(jnp.asarray(C, dtype), (B,))
+    P = jnp.asarray(P)
+    dtype = P.dtype
+    B, n = P.shape
+    lb = X.shape[0]                       # base example count (n or n // 2)
+    assert n == (2 * lb if doubled else lb)
+    L = jnp.asarray(L, dtype)
+    U = jnp.asarray(U, dtype)
     gamma = jnp.broadcast_to(jnp.asarray(gamma, dtype), (B,))
-    L = jnp.minimum(0.0, Y * C[:, None])
-    U = jnp.maximum(0.0, Y * C[:, None])
     sqn = jnp.sum(X * X, axis=-1)
     eps = cfg.eps
     eta = cfg.eta
@@ -330,17 +342,25 @@ def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
         gram = jnp.asarray(gram)
         gidx = jnp.asarray(gram_idx, jnp.int32)
 
+    def base_idx(idx):
+        """Fold a doubled-coordinate index onto the base example axis."""
+        return idx % lb if doubled else idx
+
+    def bank_rows(g_of, idx):
+        """(m, n) bank row gather at (stacked) lane/coordinate indices."""
+        r = gram[g_of, base_idx(idx)]
+        return jnp.concatenate([r, r], axis=1) if doubled else r
+
     # The loop body is dispatch-bound on CPU (dozens of O(B) ops between the
-    # two passes), so the per-lane scalar algebra below leans on three
-    # fusions: (a) box bounds at an index come from ONE label gather
-    # (L = min(0, y C) is how L was built, so the values are bitwise
-    # identical), (b) paired gathers/entries stack their index vectors and
-    # gather once, and (c) the two alpha scatters merge into one.
+    # two passes), so the per-lane scalar algebra below leans on two
+    # fusions: (a) paired gathers/entries stack their index vectors and
+    # gather once, and (b) the two alpha scatters merge into one.
 
     def entry_pairs(a, b, reps):
         """Kernel entries for ``reps`` stacked (reps*B,) index pairs."""
         if bank:
-            return gram[jnp.tile(gidx, reps), a, b]
+            return gram[jnp.tile(gidx, reps), base_idx(a), base_idx(b)]
+        a, b = base_idx(a), base_idx(b)
         d2 = (jnp.take(sqn, a) + jnp.take(sqn, b)
               - 2.0 * jnp.sum(jnp.take(X, a, axis=0)
                               * jnp.take(X, b, axis=0), axis=-1))
@@ -351,13 +371,10 @@ def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
         idx2 = jnp.concatenate([lanes, lanes])
 
         def at_idx(idx):
-            """(alpha, G, L, U) at per-lane index ``idx``: three tiny (B,)
-            gathers; the box bounds are rebuilt in-register from the label
-            gather (bitwise identical to gathering L/U directly)."""
-            y_at = _take_lane(Y, idx)
-            yC = y_at * C
+            """(alpha, G, L, U) at per-lane coordinate ``idx`` — four tiny
+            (B,) gathers (the general box is data, not a label formula)."""
             return (_take_lane(alpha, idx), _take_lane(G, idx),
-                    jnp.minimum(0.0, yC), jnp.maximum(0.0, yC))
+                    _take_lane(L, idx), _take_lane(U, idx))
 
         active = ~s.done
         use_exact = jnp.asarray(planning) & (~s.p_smo) & (~s.prev_ratio_ok)
@@ -365,14 +382,14 @@ def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
         # ---- pass A: j-selection (k_i stays in VMEM / the bank) ------------
         a_i, _, L_i, U_i = at_idx(s.i)
         if bank:
-            k_cur = gram[gidx, s.i]
+            k_cur = bank_rows(gidx, s.i)
             j0, gain0 = ref_ops.row_wss_batched_from_k(
                 k_cur, G, alpha, L, U, a_i, L_i, U_i, s.g_i, s.i, use_exact)
         else:
             j0, gain0 = ops.rbf_row_wss_batched(
-                X, sqn, G, alpha, L, U, jnp.take(X, s.i, axis=0),
-                jnp.take(sqn, s.i), a_i, L_i, U_i, s.g_i, s.i, use_exact,
-                gamma, impl=impl, block_l=block_l)
+                X, sqn, G, alpha, L, U, jnp.take(X, base_idx(s.i), axis=0),
+                jnp.take(sqn, base_idx(s.i)), a_i, L_i, U_i, s.g_i, s.i,
+                use_exact, gamma, impl=impl, block_l=block_l, dup=doubled)
         a_j0, G_j0, L_j0, U_j0 = at_idx(j0)
 
         # ---- Alg. 3 extra candidate B^(t-2) (O(B d)) -----------------------
@@ -416,11 +433,11 @@ def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
         # when planning is off i_sel == s.i so pass A's row is reused
         if bank:
             if planning:
-                rows = gram[jnp.tile(gidx, 2),
-                            jnp.concatenate([i_sel, j_sel])]
+                rows = bank_rows(jnp.tile(gidx, 2),
+                                 jnp.concatenate([i_sel, j_sel]))
                 k_i, k_j = rows[:B], rows[B:]
             else:
-                k_i, k_j = k_cur, gram[gidx, j_sel]
+                k_i, k_j = k_cur, bank_rows(gidx, j_sel)
 
         # ---- O(B) step computation ----------------------------------------
         lw = g_i_sel - G_jsel
@@ -486,11 +503,12 @@ def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
                 ref_ops.update_wss_batched_from_rows(G, k_i, k_j, mu,
                                                      alpha_new, L, U)
         else:
+            bi, bj = base_idx(i_sel), base_idx(j_sel)
             G_new, i_next, g_i_next, g_dn = ops.rbf_update_wss_batched(
                 X, sqn, G, alpha_new, L, U,
-                jnp.take(X, i_sel, axis=0), jnp.take(sqn, i_sel),
-                jnp.take(X, j_sel, axis=0), jnp.take(sqn, j_sel),
-                mu, gamma, impl=impl, block_l=block_l)
+                jnp.take(X, bi, axis=0), jnp.take(sqn, bi),
+                jnp.take(X, bj, axis=0), jnp.take(sqn, bj),
+                mu, gamma, impl=impl, block_l=block_l, dup=doubled)
         gap = jnp.where(active, g_i_next - g_dn, s.gap)
         done = s.done | (gap <= eps)
 
@@ -512,8 +530,10 @@ def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
 
     # ---- init ---------------------------------------------------------------
     if alpha0 is None:
-        alpha0 = jnp.zeros_like(Y)
-        G0 = Y
+        # grad f(0) = P; alpha = 0 must be feasible (classification, SVR —
+        # NOT one-class, whose drivers always pass (alpha0, G0))
+        alpha0 = jnp.zeros_like(P)
+        G0 = P
     else:
         alpha0 = jnp.asarray(alpha0, dtype)
         G0 = jnp.asarray(G0, dtype)
@@ -540,6 +560,32 @@ def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
     g_dn = jnp.min(jnp.where(dn, s.G, jnp.inf), axis=1)
     return FusedResult(
         alpha=s.alpha, b=0.5 * (g_up + g_dn), G=s.G, iterations=s.iters,
-        objective=0.5 * (jnp.sum(Y * s.alpha, axis=1)
+        objective=0.5 * (jnp.sum(P * s.alpha, axis=1)
                          + jnp.sum(s.G * s.alpha, axis=1)),
         kkt_gap=s.gap, converged=s.done, n_planning=s.n_planning)
+
+
+def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
+                        *, impl: str = "auto", block_l: int = 1024,
+                        alpha0=None, G0=None, gram=None,
+                        gram_idx=None) -> FusedResult:
+    """Solve a batch of B RBF *classification* QPs over shared ``X`` in ONE
+    while_loop — the ``p = y`` instance of :func:`solve_fused_batched_qp`.
+
+    ``Y`` is (B, l) signed label vectors; ``gamma`` is a scalar or (B,);
+    ``C`` is a scalar, (B,) per-lane budgets, or (B, l) per-sample budgets
+    (class-weighted SVC) — all traced, so heterogeneous batches share one
+    compilation.  See :func:`solve_fused_batched_qp` for warm starts, the
+    Gram-bank row source, lane freezing and the result layout.
+    """
+    Y = jnp.asarray(Y)
+    dtype = Y.dtype
+    B = Y.shape[0]
+    C = jnp.asarray(C, dtype)
+    if C.ndim < 2:
+        C = jnp.broadcast_to(C, (B,))[:, None]
+    YC = Y * C
+    return solve_fused_batched_qp(
+        X, Y, jnp.minimum(0.0, YC), jnp.maximum(0.0, YC), gamma, cfg,
+        impl=impl, block_l=block_l, alpha0=alpha0, G0=G0, gram=gram,
+        gram_idx=gram_idx, doubled=False)

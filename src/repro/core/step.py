@@ -5,6 +5,12 @@ All functions are scalar jnp math (shape ()), usable under jit/vmap, and are
 exercised directly by the unit/property tests against finite differences and
 grid search.
 
+Everything here is stated for the *general* dual
+(:class:`repro.core.qp.DualQP`: arbitrary linear term ``p``, arbitrary box
+``[L, U]``) — the algebra only ever sees the gradient ``G = p - Q a`` and
+the per-coordinate bounds, so the same functions drive classification,
+ε-SVR (doubled operator) and one-class lanes unchanged.
+
 Notation follows the paper.  For a working set ``B = (i, j)`` and direction
 ``v_B = e_i - e_j``:
 

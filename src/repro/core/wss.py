@@ -12,6 +12,11 @@ All selectors are O(l), fully vectorized, mask-based (soft shrinking), and
 work under jit.  The j-reduction consumes one kernel row ``K_i`` — exactly
 the quantity the Pallas kernels in ``repro.kernels`` produce fused with the
 gradient update.
+
+Like :mod:`repro.core.step`, selection is dual-generic: it reads only
+``G``, the box masks and kernel entries, so the general
+:class:`repro.core.qp.DualQP` instances (ε-SVR doubled coordinates,
+one-class) select through the identical code path.
 """
 
 from __future__ import annotations

@@ -132,17 +132,24 @@ def _pad_b(a, bpad, value=0.0):
 
 def rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i,
                         g_i, i_idx, use_exact, gammas, *, impl: str = "auto",
-                        block_l: int = 1024):
+                        block_l: int = 1024, dup: bool = False):
     """Batched pass A: per-lane WSS2 selection, returns (j (B,), gain (B,)).
 
-    ``X``/``sqn`` are shared; ``G``/``alpha``/``L``/``U`` are (B, l); ``XQ``
+    ``X``/``sqn`` are shared; ``G``/``alpha``/``L``/``U`` are (B, n); ``XQ``
     is the (B, d) gathered query rows; the rest are (B,) per-lane scalars.
+    ``dup=True`` runs the doubled ε-SVR operator (n = 2l over base
+    ``X``/``sqn``): the jnp oracle computes the base (B, l) row and tiles
+    it; the Pallas path currently tiles ``X`` itself before launch (the
+    kernels stay structure-free — in-kernel row tiling is a TPU follow-up).
     """
     impl = resolve_impl(impl)
     if impl == "jnp":
         return ref_ops.rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq,
                                            a_i, L_i, U_i, g_i, i_idx,
-                                           use_exact, gammas)
+                                           use_exact, gammas, dup=dup)
+    if dup:
+        X = jnp.concatenate([X, X], axis=0)
+        sqn = jnp.concatenate([sqn, sqn])
     l, d = X.shape
     B = G.shape[0]
     lpad, dpad = pad_dims(l, d, block_l)
@@ -166,17 +173,22 @@ def rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i,
 
 def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
                            mu, gammas, *, impl: str = "auto",
-                           block_l: int = 1024):
-    """Batched pass B: returns (G_new (B, l), i_next, g_i_next, g_dn).
+                           block_l: int = 1024, dup: bool = False):
+    """Batched pass B: returns (G_new (B, n), i_next, g_i_next, g_dn).
 
     Recomputes both rows k_i/k_j against the shared X (no HBM round-trip
     for either); a lane with ``mu == 0`` leaves G bitwise unchanged.
+    ``dup`` selects the doubled ε-SVR operator exactly as in
+    :func:`rbf_row_wss_batched`.
     """
     impl = resolve_impl(impl)
     if impl == "jnp":
         return ref_ops.rbf_update_wss_batched(X, sqn, G, alpha_new, L, U,
                                               XQi, sqqi, XQj, sqqj, mu,
-                                              gammas)
+                                              gammas, dup=dup)
+    if dup:
+        X = jnp.concatenate([X, X], axis=0)
+        sqn = jnp.concatenate([sqn, sqn])
     l, d = X.shape
     B = G.shape[0]
     lpad, dpad = pad_dims(l, d, block_l)

@@ -12,6 +12,13 @@ the same pass, so G, alpha, L, U are read from HBM exactly once and the
 gains are never materialized to HBM.  Outputs: the kernel row k_i (pass B
 needs it), and per-block (max, argmax) pairs that the O(nblocks) epilogue
 reduces on-chip.
+
+The selection algebra is dual-generic: L/U are arbitrary per-coordinate
+boxes (classification, class-weighted, ε-SVR doubled, one-class lanes all
+look identical from here); only the RBF ``diag == 1`` identity is
+specialized.  The ε-SVR doubled operator reaches this kernel with a
+pre-tiled X (the ops wrapper's ``dup`` handling) — exploiting the tiled
+row structure *inside* the kernel is a real-TPU follow-up (ROADMAP).
 """
 
 from __future__ import annotations

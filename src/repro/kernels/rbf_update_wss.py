@@ -12,6 +12,10 @@ mask vectors — i.e. ~2*l*d + 7*l elements, vs ~2*l*d + 12*l for the naive
 separate row/update/argmax graph.  For small d (the paper's datasets have
 d <= 60) the fusion saves ~40% of HBM bytes; the structural win is fewer
 kernel launches and no HBM round-trip for gains/k_j.
+
+Like pass A, the update/stopping algebra is dual-generic (arbitrary L/U
+boxes); the ε-SVR doubled operator arrives as a pre-tiled X from the ops
+wrapper (``dup``) — in-kernel row tiling is a real-TPU follow-up.
 """
 
 from __future__ import annotations

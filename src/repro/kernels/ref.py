@@ -65,10 +65,18 @@ def rbf_update_wss(X, sqn, G, k_i, xq_j, mu, alpha_new, L, U, gamma):
 # Alg. 3 candidate swap the i-row without a data-dependent relaunch.
 
 
-def rbf_rows_batched(X, sqn, XQ, sqq, gammas):
-    """k(x_q^b, X) for a batch of query rows -> (B, l)."""
+def rbf_rows_batched(X, sqn, XQ, sqq, gammas, dup: bool = False):
+    """k(x_q^b, X) for a batch of query rows -> (B, l).
+
+    ``dup=True`` returns the *doubled-operator* rows (B, 2l) used by the
+    ε-SVR dual: row k of ``Q = [[K, K], [K, K]]`` is the base row tiled, so
+    the O(B l d) distance matmul runs against the base ``X`` only and the
+    2l half is a free broadcast — never a 2l-wide matmul, never a 2l x 2l
+    Gram.
+    """
     d2 = sqq[:, None] + sqn[None, :] - 2.0 * (XQ @ X.T)
-    return jnp.exp(-gammas[:, None] * jnp.maximum(d2, 0.0))
+    k = jnp.exp(-gammas[:, None] * jnp.maximum(d2, 0.0))
+    return jnp.concatenate([k, k], axis=1) if dup else k
 
 
 def row_wss_batched_from_k(k, G, alpha, L, U, a_i, L_i, U_i, g_i, i_idx,
@@ -95,13 +103,16 @@ def row_wss_batched_from_k(k, G, alpha, L, U, a_i, L_i, U_i, g_i, i_idx,
 
 
 def rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i,
-                        g_i, i_idx, use_exact, gammas):
+                        g_i, i_idx, use_exact, gammas, dup: bool = False):
     """Batched pass A oracle: WSS2 j-selection per lane.
 
-    ``G``/``alpha``/``L``/``U`` are (B, l); ``XQ`` is (B, d); the remaining
-    per-lane scalars are (B,).  Returns (j (B,) int32, gain_j (B,)).
+    ``G``/``alpha``/``L``/``U`` are (B, n); ``XQ`` is (B, d); the remaining
+    per-lane scalars are (B,).  With ``dup=True`` the lane state is doubled
+    (n = 2l, the ε-SVR dual) while ``X``/``sqn`` stay the base (l, d)/(l,)
+    — the selection algebra is box-general, so the only structural change
+    is the tiled row.  Returns (j (B,) int32, gain_j (B,)).
     """
-    k = rbf_rows_batched(X, sqn, XQ, sqq, gammas)
+    k = rbf_rows_batched(X, sqn, XQ, sqq, gammas, dup=dup)
     return row_wss_batched_from_k(k, G, alpha, L, U, a_i, L_i, U_i, g_i,
                                   i_idx, use_exact)
 
@@ -124,17 +135,18 @@ def update_wss_batched_from_rows(G, k_i, k_j, mu, alpha_new, L, U):
 
 
 def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
-                           mu, gammas):
+                           mu, gammas, dup: bool = False):
     """Batched pass B oracle: k_i/k_j recompute + update + next i + gap ends.
 
-    Both rows come from one stacked (2B, d) x (d, l) matmul.  Returns
-    (G_new (B, l), i_next (B,), g_i_next (B,), g_dn (B,)).
+    Both rows come from one stacked (2B, d) x (d, l) matmul (against the
+    base ``X`` even when ``dup=True`` doubles the lane state to n = 2l).
+    Returns (G_new (B, n), i_next (B,), g_i_next (B,), g_dn (B,)).
     """
     B = G.shape[0]
     Kr = rbf_rows_batched(X, sqn,
                           jnp.concatenate([XQi, XQj], axis=0),
                           jnp.concatenate([sqqi, sqqj]),
-                          jnp.concatenate([gammas, gammas]))
+                          jnp.concatenate([gammas, gammas]), dup=dup)
     return update_wss_batched_from_rows(G, Kr[:B], Kr[B:], mu, alpha_new,
                                         L, U)
 

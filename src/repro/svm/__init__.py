@@ -2,3 +2,5 @@ from repro.svm.data import (chessboard, gaussian_blobs, multiclass_blobs,
                             ring, xor_gaussians, DATASETS, make_dataset)
 from repro.svm.model import SVMModel, predict, decision_function, train_svm
 from repro.svm.svc import SVC
+from repro.svm.svr import SVR
+from repro.svm.oneclass import OneClassSVM

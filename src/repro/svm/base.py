@@ -1,0 +1,76 @@
+"""Shared plumbing for the sklearn-style facades (SVC / SVR / OneClassSVM).
+
+One copy of the solver-knob wiring, the ``gamma="scale"`` resolution, the
+fused-engine eligibility rule, and the batched query-Gram helper — the
+estimators differ only in which :class:`repro.core.qp.DualQP` instance
+they build and how they post-process the dual.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solver import SolverConfig
+from repro.kernels import ops
+
+
+class SVMEstimatorBase:
+    """Mixin holding the facade knobs shared by every estimator.
+
+    Subclasses set ``_fit_attr`` to the attribute whose presence marks a
+    fitted model and call :meth:`_init_common` from their ``__init__``.
+    """
+
+    _fit_attr = "alpha_"
+
+    def _init_common(self, *, algorithm: str, eps: float, max_iter: int,
+                     plan_candidates: int, impl: str, engine: str,
+                     precompute: bool, dtype) -> None:
+        if engine not in ("auto", "fused", "batched"):
+            raise ValueError(f"engine must be auto|fused|batched, "
+                             f"got {engine!r}")
+        self.algorithm = algorithm
+        self.eps = eps
+        self.max_iter = max_iter
+        self.plan_candidates = plan_candidates
+        self.impl = impl
+        self.engine = engine
+        self.precompute = precompute
+        # f64 when x64 is on (the paper-accuracy setting), else a clean f32
+        # fallback instead of per-call truncation warnings
+        self.dtype = dtype if dtype is not None else (
+            jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+
+    def _config(self) -> SolverConfig:
+        return SolverConfig(algorithm=self.algorithm, eps=self.eps,
+                            max_iter=self.max_iter,
+                            plan_candidates=self.plan_candidates)
+
+    def _resolve_gamma(self, X) -> float:
+        if self.gamma == "scale":
+            var = float(np.asarray(X).var())
+            return 1.0 / (X.shape[1] * var) if var > 0 else 1.0
+        return float(self.gamma)
+
+    def _resolve_engine(self) -> str:
+        if self.engine != "auto":
+            return self.engine
+        fusable = (self.algorithm in ("smo", "pasmo")
+                   and self.plan_candidates == 1)
+        return "fused" if fusable else "batched"
+
+    def _check_fitted(self):
+        if not hasattr(self, self._fit_attr):
+            raise RuntimeError(
+                f"{type(self).__name__} instance is not fitted yet")
+
+    def _query_gram(self, Xq):
+        """Query cross-Gram against the training set -> (Kq, squeeze)."""
+        Xq = jnp.asarray(Xq, self.dtype)
+        squeeze = Xq.ndim == 1
+        if squeeze:
+            Xq = Xq[None, :]
+        Kq = ops.gram(Xq, self.X_, gamma=self.gamma_, impl=self.impl)
+        return Kq.astype(self.dtype), squeeze

@@ -32,16 +32,20 @@ import numpy as np
 
 from repro.core import multiclass as mc
 from repro.core import qp as qp_mod
-from repro.core.solver import SolveResult, SolverConfig, solve
+from repro.core.solver import SolveResult, solve
 from repro.core.solver_fused import FusedResult
 from repro.kernels import ops
+from repro.svm.base import SVMEstimatorBase
 
 
-class SVC:
+class SVC(SVMEstimatorBase):
     """RBF support-vector classifier driven by the planning-ahead solver.
 
     Parameters mirror sklearn where they overlap: ``C`` (scalar, or a
-    per-class vector for one-vs-rest), ``gamma`` (float or ``"scale"``).
+    per-class vector for one-vs-rest), ``gamma`` (float or ``"scale"``),
+    ``class_weight`` (``None``, ``"balanced"``, or a ``{label: weight}``
+    dict — sample ``i`` of class ``c`` gets budget ``C * w_c``, i.e. a
+    per-coordinate box of the generalized dual; requires scalar ``C``).
     Solver knobs (``algorithm``, ``eps``, ``max_iter``, ``plan_candidates``)
     map onto :class:`repro.core.solver.SolverConfig`; ``impl`` selects the
     kernel backend (``"auto"`` = Pallas on TPU, jnp elsewhere) for both the
@@ -55,46 +59,33 @@ class SVC:
 
     def __init__(self, C: Union[float, np.ndarray] = 1.0,
                  gamma: Union[float, str] = "scale", *,
+                 class_weight: Union[dict, str, None] = None,
                  algorithm: str = "pasmo", eps: float = 1e-3,
                  max_iter: int = 1_000_000, plan_candidates: int = 1,
                  impl: str = "auto", engine: str = "auto",
                  precompute: bool = True, dtype=None):
-        if engine not in ("auto", "fused", "batched"):
-            raise ValueError(f"engine must be auto|fused|batched, "
-                             f"got {engine!r}")
+        if not (class_weight is None or class_weight == "balanced"
+                or isinstance(class_weight, dict)):
+            raise ValueError("class_weight must be None, 'balanced' or a "
+                             f"{{label: weight}} dict, got {class_weight!r}")
         self.C = C
+        self.class_weight = class_weight
         self.gamma = gamma
-        self.algorithm = algorithm
-        self.eps = eps
-        self.max_iter = max_iter
-        self.plan_candidates = plan_candidates
-        self.impl = impl
-        self.engine = engine
-        self.precompute = precompute
-        # f64 when x64 is on (the paper-accuracy setting), else a clean f32
-        # fallback instead of per-call truncation warnings
-        self.dtype = dtype if dtype is not None else (
-            jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+        self._init_common(algorithm=algorithm, eps=eps, max_iter=max_iter,
+                          plan_candidates=plan_candidates, impl=impl,
+                          engine=engine, precompute=precompute, dtype=dtype)
 
     # -- fitting ------------------------------------------------------------
 
-    def _config(self) -> SolverConfig:
-        return SolverConfig(algorithm=self.algorithm, eps=self.eps,
-                            max_iter=self.max_iter,
-                            plan_candidates=self.plan_candidates)
-
-    def _resolve_gamma(self, X) -> float:
-        if self.gamma == "scale":
-            var = float(np.asarray(X).var())
-            return 1.0 / (X.shape[1] * var) if var > 0 else 1.0
-        return float(self.gamma)
-
-    def _resolve_engine(self) -> str:
-        if self.engine != "auto":
-            return self.engine
-        fusable = (self.algorithm in ("smo", "pasmo")
-                   and self.plan_candidates == 1)
-        return "fused" if fusable else "batched"
+    def _sample_weights(self, y_idx: np.ndarray, k: int) -> np.ndarray:
+        """Per-sample class weights w_{y_i} (class_weight is not None)."""
+        if self.class_weight == "balanced":
+            counts = np.bincount(y_idx, minlength=k)
+            w = len(y_idx) / (k * np.maximum(counts, 1))
+        else:
+            w = np.array([float(self.class_weight.get(c, 1.0))
+                          for c in self.classes_])
+        return w[y_idx]
 
     def fit(self, X, y) -> "SVC":
         X = jnp.asarray(X, self.dtype)
@@ -110,6 +101,18 @@ class SVC:
         if k == 2 and np.asarray(self.C).size != 1:
             raise ValueError("per-class C requires more than two "
                              "classes (binary problems are one QP)")
+        if self.class_weight is not None:
+            # per-sample budgets C_i = C * w_{y_i}: a per-coordinate box of
+            # the generalized dual, shared by all one-vs-rest heads
+            if np.asarray(self.C).size != 1:
+                raise ValueError("class_weight requires a scalar C")
+            Csamp = jnp.asarray(
+                float(np.asarray(self.C).reshape(()))
+                * self._sample_weights(y_idx, k), self.dtype)
+            C_bin, C_ovr = Csamp, jnp.broadcast_to(Csamp, (k, len(y_idx)))
+        else:
+            C_bin = float(np.asarray(self.C).reshape(())) if k == 2 else None
+            C_ovr = jnp.asarray(self.C, self.dtype)
         if k == 2:
             yb = jnp.where(jnp.asarray(y_idx) == 1, 1.0, -1.0) \
                     .astype(self.dtype)
@@ -118,15 +121,14 @@ class SVC:
 
         if engine == "fused":
             if k == 2:
-                res = mc.solve_ovr_fused(X, yb[None, :],
-                                         float(np.asarray(self.C)
-                                               .reshape(())),
+                C_arg = (C_bin[None, :] if self.class_weight is not None
+                         else C_bin)
+                res = mc.solve_ovr_fused(X, yb[None, :], C_arg,
                                          self.gamma_, cfg, impl=self.impl,
                                          precompute=self.precompute)
                 res = jax.tree.map(lambda leaf: leaf[0], res)
             else:
-                res = mc.solve_ovr_fused(X, Y,
-                                         jnp.asarray(self.C, self.dtype),
+                res = mc.solve_ovr_fused(X, Y, C_ovr,
                                          self.gamma_, cfg, impl=self.impl,
                                          precompute=self.precompute)
         else:
@@ -136,11 +138,9 @@ class SVC:
             else:
                 kern = qp_mod.make_rbf(X, self.gamma_)
             if k == 2:
-                res = solve(kern, yb,
-                            float(np.asarray(self.C).reshape(())), cfg)
+                res = solve(kern, yb, C_bin, cfg)
             else:
-                res = mc.solve_ovr(kern, Y,
-                                   jnp.asarray(self.C, self.dtype), cfg)
+                res = mc.solve_ovr(kern, Y, C_ovr, cfg)
         self.fit_result_: Union[SolveResult, FusedResult] = res
         self.engine_ = engine
         self.alpha_ = res.alpha          # (l,) binary, (k, l) one-vs-rest
@@ -148,18 +148,6 @@ class SVC:
         return self
 
     # -- inference ----------------------------------------------------------
-
-    def _check_fitted(self):
-        if not hasattr(self, "alpha_"):
-            raise RuntimeError("SVC instance is not fitted yet")
-
-    def _query_gram(self, Xq):
-        Xq = jnp.asarray(Xq, self.dtype)
-        squeeze = Xq.ndim == 1
-        if squeeze:
-            Xq = Xq[None, :]
-        Kq = ops.gram(Xq, self.X_, gamma=self.gamma_, impl=self.impl)
-        return Kq.astype(self.dtype), squeeze
 
     def decision_function(self, Xq) -> jnp.ndarray:
         """Binary: (m,) signed margin (positive -> ``classes_[1]``).

@@ -1,0 +1,111 @@
+"""sklearn-style ``SVR`` facade: ε-insensitive regression on the PA-SMO core.
+
+The fit is ONE generalized dual QP (:func:`repro.core.qp.svr_qp`): 2l
+doubled variables sharing the base l x l Gram through the sign-folded
+operator — rows are tiled base rows, so no 2l x 2l matrix is ever
+materialized in either engine.  Engines mirror :class:`repro.svm.svc.SVC`:
+
+* ``"fused"``   — one lane of the fused two-pass batched solver with
+  ``doubled=True`` (:func:`repro.core.solver_fused.solve_fused_batched_qp`).
+* ``"batched"`` — the standard solver over a
+  :class:`~repro.core.qp.DoubledKernel` oracle (supports every
+  algorithm/ablation knob).
+
+Prediction reuses the SVC Gram machinery: ``f(x) = k(x, X) @ beta + b``
+with ``beta = alpha[:l] + alpha[l:]`` (:func:`repro.core.qp.svr_fold`).
+
+    >>> reg = SVR(C=10.0, epsilon=0.1, gamma=0.5).fit(X, y)
+    >>> reg.predict(Xq)
+"""
+
+from __future__ import annotations
+
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qp as qp_mod
+from repro.core.solver import solve_qp
+from repro.core.solver_fused import solve_fused_batched_qp
+from repro.kernels import ops
+from repro.svm.base import SVMEstimatorBase
+
+
+class SVR(SVMEstimatorBase):
+    """RBF ε-support-vector regression driven by the planning-ahead solver.
+
+    ``C`` is the box budget, ``epsilon`` the insensitive-tube half-width,
+    ``gamma`` a float or ``"scale"``; ``eps`` is the KKT stopping accuracy
+    (solver tolerance, NOT the tube).  ``impl``/``engine``/``precompute``
+    select backends exactly as in :class:`repro.svm.svc.SVC`.
+    """
+
+    _fit_attr = "beta_"
+
+    def __init__(self, C: float = 1.0, epsilon: float = 0.1,
+                 gamma: Union[float, str] = "scale", *,
+                 algorithm: str = "pasmo", eps: float = 1e-3,
+                 max_iter: int = 1_000_000, plan_candidates: int = 1,
+                 impl: str = "auto", engine: str = "auto",
+                 precompute: bool = True, dtype=None):
+        self.C = C
+        self.epsilon = epsilon
+        self.gamma = gamma
+        self._init_common(algorithm=algorithm, eps=eps, max_iter=max_iter,
+                          plan_candidates=plan_candidates, impl=impl,
+                          engine=engine, precompute=precompute, dtype=dtype)
+
+    def fit(self, X, y) -> "SVR":
+        X = jnp.asarray(X, self.dtype)
+        y = jnp.asarray(y, self.dtype)
+        self.gamma_ = self._resolve_gamma(X)
+        self.X_ = X
+        cfg = self._config()
+        engine = self._resolve_engine()
+        qp = qp_mod.svr_qp(y, float(self.C), float(self.epsilon))
+
+        if engine == "fused":
+            bank_kw = {}
+            if self.precompute and ops.resolve_impl(self.impl) == "jnp":
+                K = ops.gram(X, gamma=self.gamma_, impl=self.impl)
+                bank_kw = dict(gram=K[None].astype(self.dtype),
+                               gram_idx=jnp.zeros((1,), jnp.int32))
+            res = solve_fused_batched_qp(
+                X, qp.p[None], qp.bounds.lower[None], qp.bounds.upper[None],
+                self.gamma_, cfg, impl=self.impl, doubled=True, **bank_kw)
+            res = jax.tree.map(lambda leaf: leaf[0], res)
+        else:
+            if self.precompute:
+                K = ops.gram(X, gamma=self.gamma_, impl=self.impl)
+                base = qp_mod.PrecomputedKernel(K.astype(self.dtype))
+            else:
+                base = qp_mod.make_rbf(X, self.gamma_)
+            res = solve_qp(qp_mod.DoubledKernel(base), qp, cfg)
+        self.fit_result_ = res
+        self.engine_ = engine
+        self.alpha_ = res.alpha                    # (2l,) doubled dual
+        self.beta_ = qp_mod.svr_fold(res.alpha)    # (l,) coefficients
+        self.b_ = res.b
+        return self
+
+    def predict(self, Xq) -> jnp.ndarray:
+        self._check_fitted()
+        Kq, squeeze = self._query_gram(Xq)
+        f = Kq @ self.beta_ + self.b_
+        return f[0] if squeeze else f
+
+    def score(self, Xq, yq) -> float:
+        """Coefficient of determination R^2 (sklearn convention)."""
+        yq = np.asarray(yq, np.float64)
+        pred = np.asarray(self.predict(Xq), np.float64)
+        ss_res = float(np.sum((yq - pred) ** 2))
+        ss_tot = float(np.sum((yq - yq.mean()) ** 2))
+        return 1.0 - ss_res / ss_tot if ss_tot > 0 else 0.0
+
+    @property
+    def n_support_(self) -> int:
+        """Number of support vectors (nonzero folded coefficients)."""
+        self._check_fitted()
+        return int((np.abs(np.asarray(self.beta_)) > 1e-9).sum())

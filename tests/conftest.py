@@ -1,6 +1,19 @@
+import os
+
 import jax
 
 # The QP solver tests need f64 (chess-board uses C=1e6).  Model smoke tests
 # use explicit f32/bf16 dtypes, so the flag is harmless there.  The dry-run
 # device-count flag is intentionally NOT set here (smoke tests see 1 device).
 jax.config.update("jax_enable_x64", True)
+
+# Kernel-backend toggle for the fused-engine tests (the nightly CI interpret
+# leg): REPRO_IMPL=interpret re-runs them through the batched Pallas kernels
+# in interpret mode instead of the jnp oracle (REPRO_BLOCK_L tunes the block
+# size; small keeps interpret-mode padding cheap).  Default stays jnp — the
+# tier-1 fast path.  Tests import FUSED_KW and splat it into fused-engine
+# calls.
+FUSED_IMPL = os.environ.get("REPRO_IMPL", "jnp")
+FUSED_KW = {"impl": FUSED_IMPL}
+if FUSED_IMPL != "jnp":
+    FUSED_KW["block_l"] = int(os.environ.get("REPRO_BLOCK_L", "128"))

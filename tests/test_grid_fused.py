@@ -11,6 +11,7 @@ from repro.core import grid as grid_mod
 from repro.core import multiclass as mc
 from repro.core.solver import SolverConfig
 from repro.core.solver_fused import solve_fused_batched
+from conftest import FUSED_KW
 from repro.svm.data import multiclass_blobs, xor_gaussians
 
 CFG = SolverConfig(eps=1e-4, max_iter=200_000)
@@ -31,7 +32,7 @@ def test_fused_batched_matches_vmapped_grid_3class_2x2():
     Cs = np.array([1.0, 16.0])
     gammas = np.array([0.4, 1.2])
     vm = grid_mod.solve_grid(X, Y, Cs, gammas, CFG)
-    fb = grid_mod.solve_grid(X, Y, Cs, gammas, CFG, impl="jnp")
+    fb = grid_mod.solve_grid(X, Y, Cs, gammas, CFG, **FUSED_KW)
     assert fb.alpha.shape == vm.alpha.shape == (2, 3, 2, 80)
     np.testing.assert_array_equal(np.asarray(fb.converged),
                                   np.asarray(vm.converged))
@@ -39,10 +40,14 @@ def test_fused_batched_matches_vmapped_grid_3class_2x2():
     np.testing.assert_allclose(np.asarray(fb.objective),
                                np.asarray(vm.objective), rtol=1e-6)
     assert float(jnp.max(fb.kkt_gap)) <= CFG.eps + 1e-12
-    # the fused engine reports free-SV counts (n_clipped/n_reverted are
-    # untracked there, documented as zero)
+    # the fused engine reports free-SV counts; n_clipped/n_reverted are
+    # untracked there and must carry the explicit -1 sentinel (a zero
+    # would read as "never happened")
     assert int(jnp.sum(fb.n_free)) > 0
-    assert int(jnp.sum(fb.n_clipped)) == 0
+    np.testing.assert_array_equal(np.asarray(fb.n_clipped),
+                                  grid_mod.UNTRACKED)
+    np.testing.assert_array_equal(np.asarray(fb.n_reverted),
+                                  grid_mod.UNTRACKED)
 
 
 def test_fused_batched_interpret_backend_matches_jnp():
@@ -68,7 +73,7 @@ def test_compacted_drivers_parity_and_counters():
     vm = grid_mod.solve_grid(X, Y, Cs, gammas, CFG)
     comp = grid_mod.solve_grid_compacted(X, Y, Cs, gammas, CFG, chunk=64)
     compf = grid_mod.solve_grid_compacted(X, Y, Cs, gammas, CFG, chunk=64,
-                                          impl="jnp")
+                                          **FUSED_KW)
     for res in (comp, compf):
         assert res.alpha.shape == vm.alpha.shape
         assert bool(jnp.all(res.converged))
@@ -88,7 +93,10 @@ def test_compacted_drivers_parity_and_counters():
         np.asarray(vm.iterations),
         np.asarray(vm.n_free + vm.n_clipped + vm.n_planning))
     assert int(jnp.sum(compf.n_free)) > 0
-    assert int(jnp.sum(compf.n_clipped)) == 0
+    np.testing.assert_array_equal(np.asarray(compf.n_clipped),
+                                  grid_mod.UNTRACKED)
+    np.testing.assert_array_equal(np.asarray(compf.n_reverted),
+                                  grid_mod.UNTRACKED)
 
 
 def test_lane_freeze_converged_lane_state_is_bitwise_held():
@@ -103,7 +111,7 @@ def test_lane_freeze_converged_lane_state_is_bitwise_held():
     gamma = jnp.asarray([0.3, 0.5])
     cfg = SolverConfig(algorithm="pasmo", eps=1e-4, max_iter=100_000)
 
-    full = solve_fused_batched(X, Y, C, gamma, cfg, impl="jnp")
+    full = solve_fused_batched(X, Y, C, gamma, cfg, **FUSED_KW)
     assert bool(jnp.all(full.converged))
     t_easy, t_hard = int(full.iterations[0]), int(full.iterations[1])
     assert t_easy < t_hard / 3          # genuinely heterogeneous lanes
@@ -112,7 +120,7 @@ def test_lane_freeze_converged_lane_state_is_bitwise_held():
     # full run's bitwise, even though the hard lane kept iterating
     short = solve_fused_batched(
         X, Y, C, gamma, dataclasses.replace(cfg, max_iter=t_easy + 10),
-        impl="jnp")
+        **FUSED_KW)
     assert bool(short.converged[0]) and not bool(short.converged[1])
     np.testing.assert_array_equal(np.asarray(short.alpha[0]),
                                   np.asarray(full.alpha[0]))
@@ -131,7 +139,7 @@ def test_fused_batched_per_lane_C_gamma_heterogeneous():
     Y = jnp.stack([y, -y, y])
     C = jnp.asarray([10.0, 50.0, 2.0])
     gamma = jnp.asarray([0.5, 1.0, 0.25])
-    res = solve_fused_batched(X, Y, C, gamma, CFG, impl="jnp")
+    res = solve_fused_batched(X, Y, C, gamma, CFG, **FUSED_KW)
     assert bool(jnp.all(res.converged))
     # each lane respects its own box
     for b in range(3):
@@ -146,9 +154,9 @@ def test_fused_batched_warm_start_resume():
     X, y = xor_gaussians(64, seed=2)
     X = jnp.asarray(X)
     Y = jnp.stack([jnp.asarray(y)])
-    res = solve_fused_batched(X, Y, 10.0, 0.5, CFG, impl="jnp")
-    resumed = solve_fused_batched(X, Y, 10.0, 0.5, CFG, impl="jnp",
-                                  alpha0=res.alpha, G0=res.G)
+    res = solve_fused_batched(X, Y, 10.0, 0.5, CFG, **FUSED_KW)
+    resumed = solve_fused_batched(X, Y, 10.0, 0.5, CFG, alpha0=res.alpha,
+                                  G0=res.G, **FUSED_KW)
     assert int(resumed.iterations[0]) == 0
     np.testing.assert_allclose(float(resumed.objective[0]),
                                float(res.objective[0]), rtol=1e-12)

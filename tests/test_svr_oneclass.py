@@ -1,0 +1,222 @@
+"""Generalized-dual acceptance tests: ε-SVR and one-class SVM through the
+fused batched engine vs the dense ``core/reference.py`` general-QP oracle,
+fused-vs-batched engine parity per estimator, class-weighted SVC, and the
+(gamma, eps/nu, C) grid lanes."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from conftest import FUSED_KW
+
+from repro.core import grid as grid_mod
+from repro.core import qp as qp_mod
+from repro.core import reference
+from repro.core.solver import SolverConfig
+from repro.core.solver_fused import solve_fused_batched_qp
+from repro.kernels import ref as ref_ops
+from repro.svm import SVC, SVR, OneClassSVM
+
+CFG = SolverConfig(eps=1e-5, max_iter=200_000)
+
+
+def _svr_problem(l=40, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(l, d))
+    y = np.sinc(X[:, 0]) + 0.1 * rng.normal(size=l)
+    gamma, C, epsilon = 0.7, 5.0, 0.05
+    K = np.asarray(ref_ops.gram(jnp.asarray(X), gamma))
+    return jnp.asarray(X), jnp.asarray(y), gamma, C, epsilon, K
+
+
+def _oneclass_problem(l=60, d=2, seed=1, nu=0.3, gamma=0.5):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(l, d))
+    X[:5] += 4.0                       # planted outliers
+    K = np.asarray(ref_ops.gram(jnp.asarray(X), gamma))
+    return jnp.asarray(X), nu, gamma, K
+
+
+def test_doubled_kernel_oracle_matches_dense_tiled_gram():
+    """DoubledKernel rows/diag/entry/matvec == the materialized 2l x 2l
+    tile — without ever building it outside this test."""
+    X, y, gamma, C, epsilon, K = _svr_problem(l=12)
+    Qd = np.tile(K, (2, 2))
+    kern = qp_mod.DoubledKernel(qp_mod.PrecomputedKernel(jnp.asarray(K)))
+    assert kern.n == 24
+    np.testing.assert_allclose(np.asarray(qp_mod.materialize(kern)), Qd,
+                               rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(kern.diag()), np.diagonal(Qd))
+    v = np.random.default_rng(3).normal(size=24)
+    np.testing.assert_allclose(np.asarray(kern.matvec(jnp.asarray(v))),
+                               Qd @ v, rtol=1e-10)
+
+
+def test_svr_fused_matches_dense_reference_oracle():
+    """Acceptance: the fused-batched ε-SVR lane reaches the dense
+    general-QP oracle objective to 1e-6 (the engine tiles base rows; the
+    oracle gets the materialized doubled matrix)."""
+    X, y, gamma, C, epsilon, K = _svr_problem()
+    Q, p, L, U = reference.doubled_qp(K, y, C, epsilon)
+    ref = reference.solve_qp_smo(Q, p, L, U, eps=CFG.eps)
+    assert ref.converged
+
+    qp = qp_mod.svr_qp(y, C, epsilon)
+    res = solve_fused_batched_qp(
+        X, qp.p[None], qp.bounds.lower[None], qp.bounds.upper[None],
+        gamma, CFG, doubled=True, **FUSED_KW)
+    assert bool(res.converged[0])
+    np.testing.assert_allclose(float(res.objective[0]), ref.objective,
+                               rtol=1e-6)
+    # doubled-dual feasibility: box + sum-to-zero (the folded equality)
+    a = np.asarray(res.alpha[0])
+    assert np.all(a >= np.asarray(qp.bounds.lower) - 1e-9)
+    assert np.all(a <= np.asarray(qp.bounds.upper) + 1e-9)
+    assert abs(a.sum()) < 1e-8
+
+
+def test_svr_engine_parity_and_fit_quality():
+    """Facade parity: SVR(engine='fused') == SVR(engine='batched') to 1e-6
+    in objective and prediction; both actually fit the curve."""
+    rng = np.random.default_rng(0)
+    X = rng.uniform(-3, 3, size=(60, 1))
+    y = np.sinc(X[:, 0]) + 0.05 * rng.normal(size=60)
+    kw = dict(C=10.0, epsilon=0.05, gamma=1.0, eps=1e-5)
+    fused = SVR(engine="fused", **kw).fit(X, y)
+    batched = SVR(engine="batched", **kw).fit(X, y)
+    assert fused.engine_ == "fused" and batched.engine_ == "batched"
+    np.testing.assert_allclose(float(fused.fit_result_.objective),
+                               float(batched.fit_result_.objective),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(fused.predict(X)),
+                               np.asarray(batched.predict(X)), atol=1e-5)
+    assert fused.score(X, y) > 0.95
+    # the doubled dual never leaves the tube constraint structure:
+    # alpha+ and alpha- are never both active
+    ap = np.asarray(fused.alpha_[:60])
+    am = -np.asarray(fused.alpha_[60:])
+    assert float(np.max(np.minimum(ap, am))) <= 1e-9
+
+
+def test_oneclass_fused_matches_dense_reference_oracle():
+    """Acceptance: the fused one-class lane (p = 0, sum(a) = 1 via the
+    feasible LIBSVM start) matches the dense oracle objective to 1e-6."""
+    X, nu, gamma, K = _oneclass_problem()
+    l = X.shape[0]
+    qp = qp_mod.oneclass_qp(l, nu)
+    a0 = qp_mod.oneclass_alpha0(l, nu)
+    ref = reference.solve_qp_smo(
+        K, np.zeros(l), np.asarray(qp.bounds.lower),
+        np.asarray(qp.bounds.upper), alpha0=np.asarray(a0), eps=CFG.eps)
+    assert ref.converged
+
+    G0 = -(jnp.asarray(K) @ a0)
+    res = solve_fused_batched_qp(
+        X, qp.p[None], qp.bounds.lower[None], qp.bounds.upper[None],
+        gamma, CFG, alpha0=a0[None], G0=G0[None], **FUSED_KW)
+    assert bool(res.converged[0])
+    np.testing.assert_allclose(float(res.objective[0]), ref.objective,
+                               rtol=1e-6, atol=1e-10)
+    # equality constraint sum(a) = 1 is preserved by every pair step
+    np.testing.assert_allclose(float(jnp.sum(res.alpha[0])), 1.0,
+                               atol=1e-10)
+
+
+def test_oneclass_engine_parity_and_nu_semantics():
+    """Facade parity fused vs batched; the training-outlier fraction tracks
+    nu and the planted outliers score lowest."""
+    X, nu, gamma, K = _oneclass_problem(l=80, nu=0.15)
+    kw = dict(nu=0.15, gamma=gamma, eps=1e-5)
+    fused = OneClassSVM(engine="fused", **kw).fit(X)
+    batched = OneClassSVM(engine="batched", **kw).fit(X)
+    np.testing.assert_allclose(float(fused.fit_result_.objective),
+                               float(batched.fit_result_.objective),
+                               rtol=1e-6, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(fused.decision_function(X)),
+                               np.asarray(batched.decision_function(X)),
+                               atol=1e-6)
+    pred = fused.predict(X)
+    out_frac = float((pred < 0).mean())
+    assert abs(out_frac - 0.15) <= 0.1
+    # the planted far-away points score clearly below the bulk
+    dec = np.asarray(fused.decision_function(X))
+    assert dec[:5].mean() < dec[5:].mean()
+
+
+def test_svr_grid_fused_lanes_match_per_lane_facade():
+    """A (gamma, eps, C) SVR grid is one flat fused lane batch; every lane
+    equals the corresponding single-QP facade solve."""
+    rng = np.random.default_rng(2)
+    X = rng.uniform(-2, 2, size=(40, 2))
+    y = np.sinc(X[:, 0]) * np.cos(X[:, 1]) + 0.05 * rng.normal(size=40)
+    Cs, epss, gammas = [1.0, 10.0], [0.02, 0.2], [0.5, 1.5]
+    res = grid_mod.solve_grid_svr(X, y, Cs, epss, gammas, CFG, **FUSED_KW)
+    assert res.alpha.shape == (2, 2, 2, 80)
+    assert bool(jnp.all(res.converged))
+    for gi, g in enumerate(gammas):
+        for ei, e in enumerate(epss):
+            for ci, c in enumerate(Cs):
+                one = SVR(C=c, epsilon=e, gamma=g, eps=CFG.eps,
+                          engine="fused").fit(X, y)
+                np.testing.assert_allclose(
+                    float(res.objective[gi, ei, ci]),
+                    float(one.fit_result_.objective), rtol=1e-6)
+    # fold + shared decision machinery across the whole grid
+    beta = qp_mod.svr_fold(res.alpha)
+    dec = grid_mod.grid_decision(X[:7], X, gammas, beta, res.b)
+    assert dec.shape == (2, 2, 2, 7)
+
+
+def test_oneclass_grid_fused_lanes_match_per_lane_facade():
+    """A (gamma, nu) one-class grid is one flat fused lane batch."""
+    X, _, _, _ = _oneclass_problem(l=50)
+    nus, gammas = [0.2, 0.4], [0.5, 1.0]
+    res = grid_mod.solve_grid_oneclass(X, nus, gammas, CFG, **FUSED_KW)
+    assert res.alpha.shape == (2, 2, 50)
+    assert bool(jnp.all(res.converged))
+    np.testing.assert_allclose(np.asarray(jnp.sum(res.alpha, axis=-1)),
+                               1.0, atol=1e-10)
+    for gi, g in enumerate(gammas):
+        for ni, nu in enumerate(nus):
+            one = OneClassSVM(nu=nu, gamma=g, eps=CFG.eps,
+                              engine="fused").fit(X)
+            np.testing.assert_allclose(
+                float(res.objective[gi, ni]),
+                float(one.fit_result_.objective), rtol=1e-6, atol=1e-12)
+
+
+def test_svc_class_weight_box_and_engine_parity():
+    """Per-class weighted C: the per-sample box is respected bitwise in
+    both engines, the engines agree, and 'balanced' lifts minority recall
+    on an imbalanced blob."""
+    rng = np.random.default_rng(4)
+    X = np.vstack([rng.normal(size=(90, 2)),
+                   rng.normal(size=(10, 2)) + 1.5])
+    y = np.array([0] * 90 + [1] * 10)
+    plain = SVC(C=1.0, gamma=0.5, engine="fused").fit(X, y)
+    fused = SVC(C=1.0, gamma=0.5, class_weight="balanced",
+                engine="fused").fit(X, y)
+    batched = SVC(C=1.0, gamma=0.5, class_weight="balanced",
+                  engine="batched").fit(X, y)
+    np.testing.assert_allclose(float(fused.fit_result_.objective),
+                               float(batched.fit_result_.objective),
+                               rtol=1e-6)
+    w = fused._sample_weights(np.array([0] * 90 + [1] * 10), 2)
+    assert np.all(np.abs(np.asarray(fused.alpha_)) <= w + 1e-9)
+    assert np.any(np.abs(np.asarray(fused.alpha_)) > 1.0 + 1e-9), \
+        "the minority box must actually exceed the unweighted C"
+    rec_plain = float((plain.predict(X[90:]) == 1).mean())
+    rec_bal = float((fused.predict(X[90:]) == 1).mean())
+    assert rec_bal > rec_plain
+    # dict weights hit the same code path
+    d = SVC(C=1.0, gamma=0.5, class_weight={0: 1.0, 1: 9.0},
+            engine="fused").fit(X, y)
+    assert float((d.predict(X[90:]) == 1).mean()) >= rec_plain
+
+
+def test_svr_rejects_bad_engine_and_unfitted_predict():
+    with pytest.raises(ValueError):
+        SVR(engine="warp")
+    with pytest.raises(RuntimeError):
+        SVR().predict(np.zeros((2, 2)))
+    with pytest.raises(ValueError):
+        OneClassSVM(nu=0.0)
