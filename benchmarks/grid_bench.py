@@ -20,6 +20,15 @@ CPU jnp backend for a >= 24-lane heterogeneous grid at l ~ 512.  All
 timings are min-over-repeats measured in alternating rounds, so slow host
 windows (thread migration, cgroup throttling) hit every contender equally.
 
+Each profile also carries a **row-pass** micro-entry (ISSUE 5): the
+batched pass A + pass B kernel pair timed through the Pallas interpret
+backend with the doubled ε-SVR operator (state n = 2l) vs the plain
+operator at EQUAL base l.  Since the doubled mode computes the base row
+tile once per grid step and reads it per half in-kernel, its per-iteration
+cost must sit within ~1.2x of the base pass (``doubled_row_parity`` =
+t_base / t_doubled >= ~0.83) — the old pre-tiled-X launch paid ~2x (twice
+the blocks, twice the matmul width).  ``bench_gate.py`` gates this ratio.
+
 ``run(profile=..., json_path=...)`` also emits the machine-readable
 ``BENCH_grid.json`` perf-trajectory record (see ``benchmarks.run --quick``).
 """
@@ -36,6 +45,7 @@ from repro.core import grid as grid_mod
 from repro.core import multiclass as mc
 from repro.core import qp as qp_mod
 from repro.core.solver import SolverConfig, solve
+from repro.kernels import ops as kernel_ops
 
 # Each config: problem shape + which contenders to time.  "quick" is the CI
 # trajectory profile (small, <1 min); "full" ends with the acceptance
@@ -58,6 +68,13 @@ PROFILES = {
     ],
 }
 
+# Row-pass micro-entry per profile: pass A + B through the interpret
+# backend, doubled vs plain operator at equal base l (see module docs).
+ROW_PASS = {
+    "quick": dict(l=256, d=32, B=8, iters=6, repeat=3, block_l=128),
+    "full": dict(l=512, d=32, B=8, iters=6, repeat=3, block_l=128),
+}
+
 
 def _workload(l, d, k, n_gamma, g_range, Cs):
     from repro.svm.data import multiclass_blobs
@@ -78,6 +95,73 @@ def _sequential(X, Y, gammas, Cs, cfg):
                 outs.append(solve(kern, Y[c], float(C), cfg))
     jax.block_until_ready(outs[-1].alpha)
     return outs
+
+
+def _row_pass_state(l, d, B, dup, seed=0):
+    """Random-but-feasible lane state for one pass A + B iteration."""
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(l, d)))
+    sqn = jnp.sum(X * X, axis=-1)
+    C = 5.0
+    if dup:
+        zl = jnp.zeros((B, l))
+        L = jnp.concatenate([zl, zl - C], axis=1)
+        U = jnp.concatenate([zl + C, zl], axis=1)
+    else:
+        ys = jnp.asarray(np.sign(rng.normal(size=(B, l))))
+        L, U = jnp.minimum(0.0, ys * C), jnp.maximum(0.0, ys * C)
+    n = 2 * l if dup else l
+    alpha = jnp.clip(jnp.asarray(rng.uniform(-1, 1, (B, n))), L, U)
+    G = jnp.asarray(rng.normal(size=(B, n)))
+    gammas = jnp.asarray(rng.uniform(0.3, 1.0, B))
+    i_idx = jnp.asarray(rng.integers(0, n, B), jnp.int32)
+    j_idx = jnp.asarray(rng.integers(0, n, B), jnp.int32)
+    mu = jnp.asarray(rng.uniform(-0.3, 0.3, B))
+    return X, sqn, G, alpha, L, U, gammas, i_idx, j_idx, mu
+
+
+def _row_pass_iteration(state, dup, block_l):
+    """One fused-engine iteration worth of kernel work (pass A + pass B)
+    on the interpret backend — the structural proxy for the compiled
+    Pallas path (block count and matmul width match the TPU launch)."""
+    X, sqn, G, alpha, L, U, gammas, i_idx, j_idx, mu = state
+    l = X.shape[0]
+    bi = i_idx % l if dup else i_idx
+    bj = j_idx % l if dup else j_idx
+    lane = lambda M, idx: jnp.take_along_axis(M, idx[:, None], 1)[:, 0]
+    j, gain = kernel_ops.rbf_row_wss_batched(
+        X, sqn, G, alpha, L, U, jnp.take(X, bi, axis=0),
+        jnp.take(sqn, bi), lane(alpha, i_idx), lane(L, i_idx),
+        lane(U, i_idx), lane(G, i_idx), i_idx,
+        jnp.zeros((G.shape[0],), bool), gammas,
+        impl="interpret", block_l=block_l, dup=dup)
+    out = kernel_ops.rbf_update_wss_batched(
+        X, sqn, G, alpha, L, U, jnp.take(X, bi, axis=0),
+        jnp.take(sqn, bi), jnp.take(X, bj, axis=0), jnp.take(sqn, bj),
+        mu, gammas, impl="interpret", block_l=block_l, dup=dup)
+    jax.block_until_ready((j, out[0]))
+
+
+def _row_pass_bench(spec: dict) -> dict:
+    l, d, B = spec["l"], spec["d"], spec["B"]
+    iters, block_l = spec["iters"], spec["block_l"]
+    states = {"row_pass_base": (_row_pass_state(l, d, B, False), False),
+              "row_pass_doubled": (_row_pass_state(l, d, B, True), True)}
+    fns = {name: (lambda st=st, dup=dup: [
+        _row_pass_iteration(st, dup, block_l) for _ in range(iters)])
+        for name, (st, dup) in states.items()}
+    secs = _interleaved_min(fns, spec["repeat"])
+    return {
+        "config": {"l": l, "d": d, "k": 0, "n_gamma": 0, "g_range": (0, 0),
+                   "Cs": [], "repeat": spec["repeat"], "row_pass": True,
+                   "B": B, "iters": iters, "block_l": block_l},
+        "lanes": B,
+        "n_qp": B,
+        "eps": 0.0,
+        "seconds": secs,
+        "speedups": {"doubled_row_parity": (secs["row_pass_base"]
+                                            / secs["row_pass_doubled"])},
+    }
 
 
 def _interleaved_min(fns, repeat):
@@ -150,6 +234,7 @@ def run_bench(profile: str = "full") -> dict:
             "seconds": secs,
             "speedups": speedups,
         })
+    bench["configs"].append(_row_pass_bench(ROW_PASS[profile]))
     return bench
 
 

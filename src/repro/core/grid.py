@@ -99,17 +99,21 @@ def _solve_grid(X, Y, Cs, gammas, cfg: SolverConfig,
 # warm-start chain pays (all-C-lanes-at-once replaces the C chain, so the
 # scaled warm start does not apply here; lanes cold-start).
 #
-# On the CPU jnp backend the bank of per-gamma Gram matrices is built once
-# (same (n_gamma, l, l) memory as the vmapped engine) and rows become
-# gathers; on pallas/interpret the rows are recomputed from X tiles (the
-# accelerator memory mode — no Gram at all).
+# The row source is orthogonal to the backend (``precompute``): with a
+# Gram bank the per-gamma matrices are built once (same (n_gamma, l, l)
+# memory as the vmapped engine) and rows become gathers — on the jnp
+# backend as XLA-fused algebra, on pallas/interpret through the
+# rows-variant kernels; without a bank the rows are recomputed from X
+# tiles (the accelerator memory mode — no Gram at all).  The default
+# (``precompute=None``) banks exactly on the jnp backend.
 #
-# The fused engine does not track the per-step counters n_clipped /
-# n_reverted — they are GENUINELY UNTRACKED, so the fused drivers fill
-# them with the -1 sentinel (UNTRACKED) instead of zeros: a zero would
-# read as "this never happened" to callers comparing engines.  n_free is
-# instead reported as the number of *free support vectors* at the
-# optimum, computed from the final alpha and the box bounds.
+# The fused engine does not track the per-step counters n_free /
+# n_clipped / n_reverted — they are GENUINELY UNTRACKED, so the fused
+# drivers fill all three with the -1 sentinel (UNTRACKED) instead of
+# zeros: a zero would read as "this never happened" to callers comparing
+# engines.  The state counter every engine shares is n_free_sv — the
+# number of *free support vectors* at the optimum, computed from the
+# final alpha and the box bounds (see SolveResult).
 
 UNTRACKED = -1  # sentinel for counters the fused iteration never materializes
 
@@ -119,10 +123,17 @@ def _free_sv_count(alpha, L, U) -> jax.Array:
     return jnp.sum((alpha > L) & (alpha < U), axis=-1).astype(jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("cfg", "impl", "block_l"))
-def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
-                      impl: str, block_l: int) -> SolveResult:
+def _use_bank(impl: str, precompute) -> bool:
+    """Resolve the row-source policy: ``None`` banks exactly on jnp."""
     from repro.kernels.ops import resolve_impl
+    if precompute is None:
+        return resolve_impl(impl) == "jnp"
+    return bool(precompute)
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl", "block_l", "precompute"))
+def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
+                      impl: str, block_l: int, precompute) -> SolveResult:
     k, l = Y.shape
     nG = gammas.shape[0]
     nC = Cs.shape[0]
@@ -130,7 +141,7 @@ def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
     Yf = jnp.repeat(jnp.tile(Y, (nG, 1)), nC, axis=0)    # (B, l)
     gf = jnp.repeat(gammas, k * nC)                      # (B,)
     Cf = jnp.tile(Cs, nG * k)                            # (B,)
-    if resolve_impl(impl) == "jnp":
+    if _use_bank(impl, precompute):
         bank = jnp.exp(-gammas[:, None, None] * sqdist(X))
         bidx = jnp.repeat(jnp.arange(nG, dtype=jnp.int32), k * nC)
         out = solve_fused_batched(X, Yf, Cf, gf, cfg, impl=impl,
@@ -144,15 +155,15 @@ def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
 
     fr: FusedResult = jax.tree.map(to_grid, out)
     YC = Y[None, :, None, :] * Cs[None, None, :, None]
-    n_free = _free_sv_count(fr.alpha, jnp.minimum(0.0, YC),
-                            jnp.maximum(0.0, YC))
+    n_free_sv = _free_sv_count(fr.alpha, jnp.minimum(0.0, YC),
+                               jnp.maximum(0.0, YC))
     zero = jnp.zeros((nG, k, Cs.shape[0]), jnp.int32)
     untracked = jnp.full((nG, k, Cs.shape[0]), UNTRACKED, jnp.int32)
     return SolveResult(
         alpha=fr.alpha, b=fr.b, G=fr.G, iterations=fr.iterations,
         objective=fr.objective, kkt_gap=fr.kkt_gap, converged=fr.converged,
-        n_planning=fr.n_planning, n_free=n_free,
-        n_clipped=untracked, n_reverted=untracked,
+        n_planning=fr.n_planning, n_free=untracked,
+        n_clipped=untracked, n_reverted=untracked, n_free_sv=n_free_sv,
         trace=jnp.zeros((nG, k, Cs.shape[0], 1), X.dtype), n_trace=zero,
         steps_i=jnp.zeros((nG, k, Cs.shape[0], 1), jnp.int32),
         steps_j=jnp.zeros((nG, k, Cs.shape[0], 1), jnp.int32),
@@ -161,7 +172,8 @@ def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
 
 def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
                warm_start: bool = True, impl: str | None = None,
-               block_l: int = 1024) -> SolveResult:
+               block_l: int = 1024,
+               precompute: bool | None = None) -> SolveResult:
     """Solve the full (gamma, class, C) grid in ONE compiled call.
 
     ``X``: (l, d) shared inputs; ``Y``: (k, l) signed label vectors (a 1-D
@@ -178,12 +190,17 @@ def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
     (:func:`repro.core.solver_fused.solve_fused_batched`): the WHOLE
     (gamma, class, C) grid becomes one flat lane batch advanced by a
     single while_loop with two kernel launches per iteration and
-    in-kernel lane freezing (jnp backend: Gram-bank gathers; pallas:
-    X-tile row recompute, no Gram).  The fused engine requires
-    ``cfg.algorithm in ("smo", "pasmo")``, ``plan_candidates == 1``,
-    WSS2 selection and no trace/step recording (asserted), and fills the
-    untracked step-type counters ``n_clipped``/``n_reverted`` with the
-    ``UNTRACKED`` (-1) sentinel (see module notes).
+    in-kernel lane freezing.  ``precompute`` picks the row source:
+    ``True`` builds the shared per-gamma Gram bank (rows become gathers on
+    ANY backend — jnp algebra or the rows-variant Pallas kernels),
+    ``False`` recomputes rows from X tiles (no Gram ever materialized),
+    ``None`` (default) banks exactly on the jnp backend.  The fused
+    engine requires ``cfg.algorithm in ("smo", "pasmo")``,
+    ``plan_candidates == 1``, WSS2 selection and no trace/step recording
+    (asserted), and fills the untracked step-type counters
+    ``n_free``/``n_clipped``/``n_reverted`` with the ``UNTRACKED`` (-1)
+    sentinel while reporting the free-SV count in ``n_free_sv`` (see
+    module notes).
 
     With ``warm_start=True`` the vmapped engine solves the C-axis in
     ascending order (results are scattered back to input order), chaining
@@ -204,7 +221,8 @@ def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
     if impl is None:
         res = _solve_grid(X, Y, Cs_j, gammas_j, cfg, warm_start)
     else:
-        res = _solve_grid_fused(X, Y, Cs_j, gammas_j, cfg, impl, block_l)
+        res = _solve_grid_fused(X, Y, Cs_j, gammas_j, cfg, impl, block_l,
+                                precompute)
     if np.any(order != np.arange(len(Cs_np))):
         inv = np.argsort(order, kind="stable")
         res = jax.tree.map(lambda leaf: jnp.take(leaf, inv, axis=2), res)
@@ -253,7 +271,7 @@ _CHUNK_COUNTERS = ("iterations", "n_planning", "n_free", "n_clipped",
 
 def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
                           cfg: SolverConfig, chunk: int, impl: str,
-                          block_l: int) -> SolveResult:
+                          block_l: int, precompute) -> SolveResult:
     """Chunked driver over the fused engine, FLAT lane layout.
 
     Like :func:`_solve_grid_fused` every (gamma, class, C) grid point is
@@ -263,7 +281,6 @@ def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
     freeze: frozen lanes cost masked no-op work only until the next chunk
     boundary, after which they cost nothing.
     """
-    from repro.kernels.ops import resolve_impl
     k, l = Y.shape
     nG, nC = len(gammas_np), len(Cs_np)
     B = nG * k * nC
@@ -272,7 +289,7 @@ def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
     gam_lane = np.repeat(gammas_np, k * nC)
     C_lane = np.tile(Cs_np, nG * k)
     g_of_lane = np.repeat(np.arange(nG, dtype=np.int32), k * nC)
-    use_bank = resolve_impl(impl) == "jnp"
+    use_bank = _use_bank(impl, precompute)
     bank = (jnp.exp(-jnp.asarray(gammas_np, dtype)[:, None, None]
                     * sqdist(X)) if use_bank else None)
     # never exceed the caller's budget: the last chunk may be partial
@@ -308,7 +325,7 @@ def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
         if len(active) == 0:
             break
 
-    n_free = np.asarray(_free_sv_count(
+    n_free_sv = np.asarray(_free_sv_count(
         a_c, np.minimum(0.0, Yf * C_lane[:, None]),
         np.maximum(0.0, Yf * C_lane[:, None])))
 
@@ -323,8 +340,9 @@ def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
         objective=shape(out["objective"]), kkt_gap=shape(out["kkt_gap"]),
         converged=shape(out["converged"], bool),
         n_planning=shape(out["n_planning"], jnp.int32),
-        n_free=shape(n_free, jnp.int32),
+        n_free=untracked,
         n_clipped=untracked, n_reverted=untracked,
+        n_free_sv=shape(n_free_sv, jnp.int32),
         trace=jnp.zeros((nG, k, nC, 1), dtype), n_trace=zero,
         steps_i=jnp.zeros((nG, k, nC, 1), jnp.int32),
         steps_j=jnp.zeros((nG, k, nC, 1), jnp.int32),
@@ -334,7 +352,8 @@ def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
 def solve_grid_compacted(X, Y, Cs, gammas,
                          cfg: SolverConfig = SolverConfig(), *,
                          chunk: int = 96, impl: str | None = None,
-                         block_l: int = 1024) -> SolveResult:
+                         block_l: int = 1024,
+                         precompute: bool | None = None) -> SolveResult:
     """Host-driven variant of :func:`solve_grid`: same (gamma, class, C)
     result axes, but the batch is re-compacted every ``chunk`` iterations so
     converged lanes stop consuming wall time.  This is the CPU throughput
@@ -349,13 +368,15 @@ def solve_grid_compacted(X, Y, Cs, gammas,
     backend name routes chunks through
     :func:`~repro.core.solver_fused.solve_fused_batched` in the FLAT lane
     layout (every (gamma, class, C) point is a lane; compaction stacks
-    with the in-kernel freeze); there ``n_free`` is the
-    free-support-vector count from the final ``alpha``/bounds while
-    ``n_clipped``/``n_reverted`` carry the ``UNTRACKED`` (-1) sentinel —
-    the fused iteration never materializes the step type, and a zero
-    would be indistinguishable from "never happened".  The trace/step
-    recording buffers are placeholders in both modes (chunk resumes reset
-    the O(1) recording state).
+    with the in-kernel freeze; ``precompute`` picks the row source as in
+    :func:`solve_grid`); there the per-step counters
+    ``n_free``/``n_clipped``/``n_reverted`` carry the ``UNTRACKED`` (-1)
+    sentinel — the fused iteration never materializes the step type, and
+    a zero would be indistinguishable from "never happened".  Every mode
+    reports the free-support-vector count from the final
+    ``alpha``/bounds in ``n_free_sv``.  The trace/step recording buffers
+    are placeholders in both modes (chunk resumes reset the O(1)
+    recording state).
     """
     X = jnp.asarray(X)
     Y = jnp.asarray(Y)
@@ -366,7 +387,7 @@ def solve_grid_compacted(X, Y, Cs, gammas,
     gammas_np = np.asarray(gammas, np.float64).reshape(-1)
     if impl is not None:
         return _compacted_fused_flat(X, Y, Cs_np, gammas_np, cfg, chunk,
-                                     impl, block_l)
+                                     impl, block_l, precompute)
     order = np.argsort(Cs_np, kind="stable")
     nG, nC = len(gammas_np), len(Cs_np)
     B = nG * k
@@ -420,6 +441,10 @@ def solve_grid_compacted(X, Y, Cs, gammas,
             out[f][:, ci] = counts[f]
         alpha, G, C_prev = a_c, g_c, C
 
+    YC = np.asarray(Yf)[:, None, :] * Cs_np[None, :, None]   # (B, nC, l)
+    out["n_free_sv"] = np.asarray(_free_sv_count(
+        out["alpha"], np.minimum(0.0, YC), np.maximum(0.0, YC)))
+
     def shape(f, dtype=X.dtype):
         arr = out[f].reshape((nG, k, nC) + out[f].shape[2:])
         return jnp.asarray(arr, dtype)
@@ -434,6 +459,7 @@ def solve_grid_compacted(X, Y, Cs, gammas,
         n_free=shape("n_free", jnp.int32),
         n_clipped=shape("n_clipped", jnp.int32),
         n_reverted=shape("n_reverted", jnp.int32),
+        n_free_sv=shape("n_free_sv", jnp.int32),
         trace=jnp.zeros((nG, k, nC, 1), X.dtype), n_trace=zero,
         steps_i=jnp.zeros((nG, k, nC, 1), jnp.int32),
         steps_j=jnp.zeros((nG, k, nC, 1), jnp.int32),
@@ -455,18 +481,22 @@ def solve_grid_compacted(X, Y, Cs, gammas,
 
 def solve_grid_svr(X, y, Cs, epsilons, gammas,
                    cfg: SolverConfig = SolverConfig(), *,
-                   impl: str = "auto", block_l: int = 1024) -> FusedResult:
+                   impl: str = "auto", block_l: int = 1024,
+                   precompute: bool | None = None) -> FusedResult:
     """Solve the full ε-SVR (gamma, epsilon, C) grid as one fused lane batch.
 
     ``X``: (l, d); ``y``: (l,) real targets; ``Cs``: (n_C,); ``epsilons``:
     (n_eps,) tube widths; ``gammas``: (n_gamma,) (scalars are promoted).
+    Every lane runs the doubled 2l-variable operator over the *base* X —
+    rows stay l-wide on every backend (in-kernel half reads on
+    pallas/interpret, tiled base rows on jnp); ``precompute`` picks the
+    per-gamma *base* Gram bank exactly as in :func:`solve_grid`.
     Returns a :class:`~repro.core.solver_fused.FusedResult` whose leaves
     have leading axes ``(n_gamma, n_eps, n_C)``; ``alpha`` is the doubled
     (..., 2l) dual — fold with :func:`repro.core.qp.svr_fold` to (..., l)
     coefficients, after which :func:`grid_decision` evaluates the whole
     grid (pass the eps axis in the class slot).
     """
-    from repro.kernels.ops import resolve_impl
     X = jnp.asarray(X)
     y = jnp.asarray(y)
     dtype = X.dtype
@@ -486,7 +516,7 @@ def solve_grid_svr(X, y, Cs, epsilons, gammas,
     Uf = jnp.tile(U_c, (nG * nE, 1))
     gf = jnp.repeat(gam_j, nE * nC)
     bank_kw = {}
-    if resolve_impl(impl) == "jnp":
+    if _use_bank(impl, precompute):
         bank_kw = dict(
             gram=jnp.exp(-gam_j[:, None, None] * sqdist(X)),
             gram_idx=jnp.repeat(jnp.arange(nG, dtype=jnp.int32), nE * nC))
@@ -497,18 +527,19 @@ def solve_grid_svr(X, y, Cs, epsilons, gammas,
 
 
 def solve_grid_oneclass(X, nus, gammas, cfg: SolverConfig = SolverConfig(),
-                        *, impl: str = "auto",
-                        block_l: int = 1024) -> FusedResult:
+                        *, impl: str = "auto", block_l: int = 1024,
+                        precompute: bool | None = None) -> FusedResult:
     """Solve the one-class (gamma, nu) grid as one fused lane batch.
 
     Every lane is the ν dual (``p = 0``, box ``[0, 1/(nu l)]``, ``sum(a) =
     1``) started from the LIBSVM feasible point with its closed-position
     gradient ``G0 = -K alpha0`` (one matvec per lane, paid once before the
-    loop).  Returns a :class:`~repro.core.solver_fused.FusedResult` with
+    loop).  ``precompute`` picks the per-gamma Gram-bank row source as in
+    :func:`solve_grid`.  Returns a
+    :class:`~repro.core.solver_fused.FusedResult` with
     leading axes ``(n_gamma, n_nu)``; the decision offset is ``rho = -b``
     (``decision(x) = k(x, SVs) @ alpha + b``).
     """
-    from repro.kernels.ops import resolve_impl
     X = jnp.asarray(X)
     dtype = X.dtype
     l = X.shape[0]
@@ -524,7 +555,7 @@ def solve_grid_oneclass(X, nus, gammas, cfg: SolverConfig = SolverConfig(),
     gf = jnp.repeat(gam_j, nN)
     alpha0 = jnp.tile(A0, (nG, 1))
     bank_kw = {}
-    if resolve_impl(impl) == "jnp":
+    if _use_bank(impl, precompute):
         bank = jnp.exp(-gam_j[:, None, None] * sqdist(X))
         G0 = -jnp.einsum("gij,nj->gni", bank, A0).reshape(nG * nN, l)
         bank_kw = dict(

@@ -88,6 +88,17 @@ class SolverState(NamedTuple):
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SolveResult:
+    """Solver output.  Counter semantics are UNIFORM across engines:
+
+    ``n_free``/``n_clipped``/``n_reverted`` are *per-step* counters (how
+    many iterations took a free / clipped / reverted-to-SMO step); engines
+    that do not materialize the step type (the fused two-pass engine) fill
+    them with the ``repro.core.grid.UNTRACKED`` (-1) sentinel — never with
+    zeros.  ``n_free_sv`` is the *state* counter every engine can report:
+    the number of strictly-interior (free) support vectors at the returned
+    ``alpha``.
+    """
+
     alpha: jax.Array
     b: jax.Array              # bias term for prediction
     G: jax.Array
@@ -99,6 +110,7 @@ class SolveResult:
     n_free: jax.Array
     n_clipped: jax.Array
     n_reverted: jax.Array
+    n_free_sv: jax.Array
     trace: jax.Array
     n_trace: jax.Array
     steps_i: jax.Array
@@ -356,11 +368,14 @@ def _finalize(s: SolverState, p, bounds: Bounds) -> SolveResult:
     b = 0.5 * (g_up + g_dn)
     # f(a) = p.a - 1/2 a.Q a = 1/2 (p.a + G.a)  since G = p - Q a
     objective = 0.5 * (jnp.dot(p, s.alpha) + jnp.dot(s.G, s.alpha))
+    n_free_sv = jnp.sum((s.alpha > bounds.lower)
+                        & (s.alpha < bounds.upper)).astype(jnp.int32)
     return SolveResult(
         alpha=s.alpha, b=b, G=s.G, iterations=s.t, objective=objective,
         kkt_gap=s.gap, converged=s.done,
         n_planning=s.n_planning, n_free=s.n_free, n_clipped=s.n_clipped,
-        n_reverted=s.n_reverted, trace=s.trace, n_trace=s.n_trace,
+        n_reverted=s.n_reverted, n_free_sv=n_free_sv,
+        trace=s.trace, n_trace=s.n_trace,
         steps_i=s.steps_i, steps_j=s.steps_j, steps_mu=s.steps_mu)
 
 

@@ -46,7 +46,7 @@ from repro.core import step as step_mod
 from repro.core.qp import TAU
 from repro.core.solver import SolverConfig
 from repro.kernels import ops
-from repro.kernels import ref as ref_ops
+from repro.kernels import row_source
 
 
 @jax.tree_util.register_dataclass
@@ -301,16 +301,20 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
     leading lane axis; ``iterations`` counts per-lane iterations *until
     that lane converged*.
 
-    Two row sources:
+    Two row sources (:mod:`repro.kernels.row_source`):
 
     * default — rows are recomputed from ``X`` inside the kernels (the
       accelerator memory mode: O(B n) state, no Gram ever materialized;
-      ``impl`` picks pallas/interpret/jnp as in :mod:`repro.kernels.ops`).
+      ``impl`` picks pallas/interpret/jnp as in :mod:`repro.kernels.ops`;
+      with ``doubled=True`` the kernels read the base row tile once per
+      variable half — the matmuls never widen past l).
     * ``gram``/``gram_idx`` — a shared (n_stack, l, l) *base* Gram bank
       plus the per-lane stack index: rows become gathers and the exp work
       is paid once per distinct gamma instead of per iteration.  This is
       the CPU throughput mode (it mirrors the vmapped engine's memory
-      layout) and runs as pure jnp algebra (``impl`` is ignored).  Lanes
+      layout); ``impl`` applies here too — ``"jnp"`` runs the selection /
+      update algebra as XLA-fused jnp, ``"interpret"``/``"pallas"`` route
+      the gathered rows through the rows-variant Pallas kernels.  Lanes
       sharing a gamma index the same bank entry — no per-lane Gram copies.
     """
     assert cfg.algorithm in ("smo", "pasmo")
@@ -332,39 +336,19 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
     assert n == (2 * lb if doubled else lb)
     L = jnp.asarray(L, dtype)
     U = jnp.asarray(U, dtype)
-    gamma = jnp.broadcast_to(jnp.asarray(gamma, dtype), (B,))
-    sqn = jnp.sum(X * X, axis=-1)
     eps = cfg.eps
     eta = cfg.eta
     planning = cfg.algorithm == "pasmo"
     lanes = jnp.arange(B)
     if bank:
-        gram = jnp.asarray(gram)
-        gidx = jnp.asarray(gram_idx, jnp.int32)
-
-    def base_idx(idx):
-        """Fold a doubled-coordinate index onto the base example axis."""
-        return idx % lb if doubled else idx
-
-    def bank_rows(g_of, idx):
-        """(m, n) bank row gather at (stacked) lane/coordinate indices."""
-        r = gram[g_of, base_idx(idx)]
-        return jnp.concatenate([r, r], axis=1) if doubled else r
+        src = row_source.bank_source(gram, gram_idx, gamma, dup=doubled)
+    else:
+        src = row_source.rbf_source(X, gamma, B, dup=doubled)
 
     # The loop body is dispatch-bound on CPU (dozens of O(B) ops between the
     # two passes), so the per-lane scalar algebra below leans on two
     # fusions: (a) paired gathers/entries stack their index vectors and
     # gather once, and (b) the two alpha scatters merge into one.
-
-    def entry_pairs(a, b, reps):
-        """Kernel entries for ``reps`` stacked (reps*B,) index pairs."""
-        if bank:
-            return gram[jnp.tile(gidx, reps), base_idx(a), base_idx(b)]
-        a, b = base_idx(a), base_idx(b)
-        d2 = (jnp.take(sqn, a) + jnp.take(sqn, b)
-              - 2.0 * jnp.sum(jnp.take(X, a, axis=0)
-                              * jnp.take(X, b, axis=0), axis=-1))
-        return jnp.exp(-jnp.tile(gamma, reps) * jnp.maximum(d2, 0.0))
 
     def body(s: _BatchState) -> _BatchState:
         alpha, G = s.alpha, s.G
@@ -381,23 +365,17 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
 
         # ---- pass A: j-selection (k_i stays in VMEM / the bank) ------------
         a_i, _, L_i, U_i = at_idx(s.i)
-        if bank:
-            k_cur = bank_rows(gidx, s.i)
-            j0, gain0 = ref_ops.row_wss_batched_from_k(
-                k_cur, G, alpha, L, U, a_i, L_i, U_i, s.g_i, s.i, use_exact)
-        else:
-            j0, gain0 = ops.rbf_row_wss_batched(
-                X, sqn, G, alpha, L, U, jnp.take(X, base_idx(s.i), axis=0),
-                jnp.take(sqn, base_idx(s.i)), a_i, L_i, U_i, s.g_i, s.i,
-                use_exact, gamma, impl=impl, block_l=block_l, dup=doubled)
+        j0, gain0 = ops.source_row_wss(src, G, alpha, L, U, s.i, a_i, L_i,
+                                       U_i, s.g_i, use_exact, impl=impl,
+                                       block_l=block_l)
         a_j0, G_j0, L_j0, U_j0 = at_idx(j0)
 
         # ---- Alg. 3 extra candidate B^(t-2) (O(B d)) -----------------------
         if planning:
             # both "historic" entries in one stacked lookup:
             # K(qi, qj) for the candidate, K(pi, pj) for planning's Q22
-            e2 = entry_pairs(jnp.concatenate([s.qi, s.pi]),
-                             jnp.concatenate([s.qj, s.pj]), 2)
+            e2 = src.entry_pairs(jnp.concatenate([s.qi, s.pi]),
+                                 jnp.concatenate([s.qj, s.pj]), 2)
             K_qq, K_pp = e2[:B], e2[B:]
             a_qi, G_qi, L_qi, U_qi = at_idx(s.qi)
             a_qj, G_qj, L_qj, U_qj = at_idx(s.qj)
@@ -429,20 +407,9 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
             a_isel, L_isel, U_isel = a_i, L_i, U_i
             a_jsel, G_jsel, L_jsel, U_jsel = a_j0, G_j0, L_j0, U_j0
 
-        # in bank mode both working-set rows come from ONE stacked gather;
-        # when planning is off i_sel == s.i so pass A's row is reused
-        if bank:
-            if planning:
-                rows = bank_rows(jnp.tile(gidx, 2),
-                                 jnp.concatenate([i_sel, j_sel]))
-                k_i, k_j = rows[:B], rows[B:]
-            else:
-                k_i, k_j = k_cur, bank_rows(gidx, j_sel)
-
         # ---- O(B) step computation ----------------------------------------
         lw = g_i_sel - G_jsel
-        K_ij = (_take_lane(k_i, j_sel) if bank
-                else entry_pairs(i_sel, j_sel, 1))
+        K_ij = src.entry_pairs(i_sel, j_sel, 1)
         q11 = jnp.maximum(2.0 - 2.0 * K_ij, TAU)
         sb = step_mod.step_bounds(a_isel, a_jsel, L_isel, U_isel,
                                   L_jsel, U_jsel)
@@ -457,19 +424,10 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
             a_pj, G_pj, L_pj, U_pj = at_idx(s.pj)
             w2 = G_pi - G_pj
             q22 = jnp.maximum(2.0 - 2.0 * K_pp, TAU)
-            if bank:
-                # k_i[pi], k_j[pi] and k_i[pj], k_j[pj] — two stacked
-                # lookups on the (2B, l) row block instead of four
-                kp = jnp.take_along_axis(
-                    rows, jnp.tile(s.pi, 2)[:, None], axis=1)[:, 0]
-                kq = jnp.take_along_axis(
-                    rows, jnp.tile(s.pj, 2)[:, None], axis=1)[:, 0]
-                q12 = kp[:B] - kq[:B] - kp[B:] + kq[B:]
-            else:
-                e4 = entry_pairs(
-                    jnp.concatenate([i_sel, i_sel, j_sel, j_sel]),
-                    jnp.concatenate([s.pi, s.pj, s.pi, s.pj]), 4)
-                q12 = e4[:B] - e4[B:2 * B] - e4[2 * B:3 * B] + e4[3 * B:]
+            e4 = src.entry_pairs(
+                jnp.concatenate([i_sel, i_sel, j_sel, j_sel]),
+                jnp.concatenate([s.pi, s.pj, s.pi, s.pj]), 4)
+            q12 = e4[:B] - e4[B:2 * B] - e4[2 * B:3 * B] + e4[3 * B:]
             terms = step_mod.PlanningTerms(w1=lw, w2=w2, Q11=q11, Q22=q22,
                                            Q12=q12)
             mu1, okdet = step_mod.planning_step(terms)
@@ -498,17 +456,9 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
             jnp.concatenate([mu, -mu]))
 
         # ---- pass B: k_i/k_j + update + next i + gap -----------------------
-        if bank:
-            G_new, i_next, g_i_next, g_dn = \
-                ref_ops.update_wss_batched_from_rows(G, k_i, k_j, mu,
-                                                     alpha_new, L, U)
-        else:
-            bi, bj = base_idx(i_sel), base_idx(j_sel)
-            G_new, i_next, g_i_next, g_dn = ops.rbf_update_wss_batched(
-                X, sqn, G, alpha_new, L, U,
-                jnp.take(X, bi, axis=0), jnp.take(sqn, bi),
-                jnp.take(X, bj, axis=0), jnp.take(sqn, bj),
-                mu, gamma, impl=impl, block_l=block_l, dup=doubled)
+        G_new, i_next, g_i_next, g_dn = ops.source_update_wss(
+            src, G, alpha_new, L, U, i_sel, j_sel, mu, impl=impl,
+            block_l=block_l)
         gap = jnp.where(active, g_i_next - g_dn, s.gap)
         done = s.done | (gap <= eps)
 

@@ -10,6 +10,14 @@
 All wrappers pad the example dimension to the block multiple with *inert*
 rows (L = U = 0 so they can never be selected; see sharded.py for the same
 trick) and the feature dimension to a lane multiple for the MXU.
+
+The batched wrappers dispatch over a row-source axis as well (see
+:mod:`repro.kernels.row_source`): rows recomputed from shared X tiles
+(plain or the doubled ε-SVR operator — lane state stacked as (H, B, lpad)
+variable halves so the base row tile is computed once and read H times
+in-kernel) or gathered from a shared base Gram bank.  Integer working-set
+indices travel through dedicated int32 inputs, never through the data
+dtype (a float32 round-trip is lossy beyond l = 2^24).
 """
 
 from __future__ import annotations
@@ -23,9 +31,12 @@ import jax.numpy as jnp
 from repro.kernels import ref as ref_ops
 from repro.kernels.gram_block import gram_pallas
 from repro.kernels.rbf_row_wss import (rbf_row_wss_batched_pallas,
-                                       rbf_row_wss_pallas)
+                                       rbf_row_wss_pallas,
+                                       row_wss_batched_rows_pallas)
 from repro.kernels.rbf_update_wss import (rbf_update_wss_batched_pallas,
-                                          rbf_update_wss_pallas)
+                                          rbf_update_wss_pallas,
+                                          update_wss_batched_rows_pallas)
+from repro.kernels.row_source import RowSource
 
 NEG_INF = -jnp.inf
 
@@ -58,6 +69,16 @@ def pad_dims(l: int, d: int, block_l: int) -> Tuple[int, int]:
     return lpad, dpad
 
 
+def _iscal(i_idx, n: int):
+    """Pack integer per-lane indices into the int32 side channel (n, 1).
+
+    Indices must NEVER round-trip through the data dtype: float32 has a
+    24-bit significand, so ``jnp.asarray(i, jnp.float32)`` silently
+    corrupts indices beyond 2^24 — a real bound for large-l training sets.
+    """
+    return jnp.asarray(i_idx, jnp.int32).reshape(n, 1)
+
+
 def rbf_row_wss(X, sqn, G, alpha, L, U, xq, a_i, L_i, U_i, g_i, i_idx,
                 use_exact, gamma, *, impl: str = "auto",
                 block_l: int = 1024):
@@ -71,12 +92,11 @@ def rbf_row_wss(X, sqn, G, alpha, L, U, xq, a_i, L_i, U_i, g_i, i_idx,
     dtype = X.dtype
     scal = jnp.stack([jnp.dot(xq, xq), a_i, L_i, U_i, g_i,
                       jnp.asarray(gamma, dtype),
-                      use_exact.astype(dtype),
-                      jnp.asarray(i_idx, dtype)]).reshape(1, 8).astype(dtype)
+                      use_exact.astype(dtype)]).reshape(1, 7).astype(dtype)
     k, bmax, barg = rbf_row_wss_pallas(
         _pad_d(_pad_l(X, lpad), dpad), _pad_l(sqn, lpad), _pad_l(G, lpad),
         _pad_l(alpha, lpad), _pad_l(L, lpad), _pad_l(U, lpad),
-        _pad_d(xq, dpad), scal,
+        _pad_d(xq, dpad), scal, _iscal(i_idx, 1),
         block_l=block_l, interpret=(impl == "interpret"))
     w = jnp.argmax(bmax)
     return k[:l], jnp.take(barg, w), jnp.take(bmax, w)
@@ -111,6 +131,12 @@ def rbf_update_wss(X, sqn, G, k_i, alpha_new, L, U, xq_j, mu, gamma,
 # padded to a sublane multiple (8) with *inert* lanes: L = U = alpha = 0
 # rows can never be selected in pass A, and mu = 0 makes pass B a no-op, so
 # padded lanes never influence the epilogue reductions.
+#
+# The doubled ε-SVR operator (dup=True, lane state n = 2l) is carried as an
+# (2, bpad, lpad) half stack: the kernels compute the base row tile once
+# per grid step and apply it to both halves via index arithmetic, so the
+# matmul width, the VMEM X tile, and the padded HBM traffic all stay those
+# of the base problem (the old launch path pre-tiled X to 2l).
 
 _LANE = 8
 
@@ -130,44 +156,70 @@ def _pad_b(a, bpad, value=0.0):
     return jnp.pad(a, widths, constant_values=value)
 
 
+def _first_max(bmax, barg):
+    """Cross-block reduction matching ``jnp.argmax`` tie-breaking.
+
+    Picks the LOWEST global index among blocks attaining the max.  A plain
+    argmax over blocks is only order-correct while per-block winners are
+    monotone in global index — the doubled half stack breaks that (half 1
+    of block b carries larger indices than half 0 of block b+1), so a
+    bitwise gain tie could otherwise select a different (valid but
+    oracle-divergent) coordinate.  Returns (idx (B,), max (B,)).
+    """
+    best = jnp.max(bmax, axis=1, keepdims=True)
+    sentinel = jnp.iinfo(jnp.int32).max
+    cand = jnp.where(bmax == best, barg, sentinel)
+    return jnp.min(cand, axis=1), best[:, 0]
+
+
+def _stack_halves(a, H: int, bpad: int, lpad: int, value=0.0):
+    """(B, H*l) lane state -> (H, bpad, lpad) inert-padded half stack."""
+    l = a.shape[1] // H
+    return jnp.stack([_pad_bl(a[:, h * l:(h + 1) * l], bpad, lpad, value)
+                      for h in range(H)], axis=0)
+
+
+def _unstack_halves(a, B: int, l: int):
+    """(H, bpad, lpad) kernel output -> (B, H*l) lane state."""
+    return jnp.concatenate([a[h, :B, :l] for h in range(a.shape[0])],
+                           axis=1)
+
+
 def rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i,
                         g_i, i_idx, use_exact, gammas, *, impl: str = "auto",
                         block_l: int = 1024, dup: bool = False):
     """Batched pass A: per-lane WSS2 selection, returns (j (B,), gain (B,)).
 
     ``X``/``sqn`` are shared; ``G``/``alpha``/``L``/``U`` are (B, n); ``XQ``
-    is the (B, d) gathered query rows; the rest are (B,) per-lane scalars.
-    ``dup=True`` runs the doubled ε-SVR operator (n = 2l over base
-    ``X``/``sqn``): the jnp oracle computes the base (B, l) row and tiles
-    it; the Pallas path currently tiles ``X`` itself before launch (the
-    kernels stay structure-free — in-kernel row tiling is a TPU follow-up).
+    is the (B, d) gathered *base* query rows; the rest are (B,) per-lane
+    scalars.  ``dup=True`` runs the doubled ε-SVR operator (n = 2l over
+    base ``X``/``sqn``): the jnp oracle computes the base (B, l) row and
+    tiles it; the Pallas path stacks the lane state into (2, B, lpad)
+    halves and the kernel reads the base row tile twice — the matmul never
+    widens past l.
     """
     impl = resolve_impl(impl)
     if impl == "jnp":
         return ref_ops.rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq,
                                            a_i, L_i, U_i, g_i, i_idx,
                                            use_exact, gammas, dup=dup)
-    if dup:
-        X = jnp.concatenate([X, X], axis=0)
-        sqn = jnp.concatenate([sqn, sqn])
     l, d = X.shape
+    H = 2 if dup else 1
     B = G.shape[0]
     lpad, dpad = pad_dims(l, d, block_l)
     bpad = pad_lanes(B)
     dtype = X.dtype
-    scal = jnp.stack([sqq, a_i, L_i, U_i, g_i,
-                      jnp.broadcast_to(gammas, (B,)),
-                      use_exact.astype(dtype),
-                      i_idx.astype(dtype)], axis=1).astype(dtype)
+    scal = jnp.stack([sqq, jnp.broadcast_to(gammas, (B,)),
+                      a_i, L_i, U_i, g_i,
+                      use_exact.astype(dtype)], axis=1).astype(dtype)
     bmax, barg = rbf_row_wss_batched_pallas(
         _pad_d(_pad_l(X, lpad), dpad), _pad_l(sqn, lpad),
-        _pad_bl(G, bpad, lpad), _pad_bl(alpha, bpad, lpad),
-        _pad_bl(L, bpad, lpad), _pad_bl(U, bpad, lpad),
+        _stack_halves(G, H, bpad, lpad), _stack_halves(alpha, H, bpad, lpad),
+        _stack_halves(L, H, bpad, lpad), _stack_halves(U, H, bpad, lpad),
         _pad_b(_pad_d(XQ, dpad), bpad), _pad_b(scal, bpad),
-        block_l=block_l, interpret=(impl == "interpret"))
-    w = jnp.argmax(bmax, axis=1)
-    j = jnp.take_along_axis(barg, w[:, None], axis=1)[:, 0]
-    gain = jnp.take_along_axis(bmax, w[:, None], axis=1)[:, 0]
+        _pad_b(_iscal(i_idx, B), bpad),
+        block_l=block_l, interpret=(impl == "interpret"), base_l=l)
+    j, gain = _first_max(bmax, barg)
     return j[:B], gain[:B]
 
 
@@ -176,20 +228,18 @@ def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
                            block_l: int = 1024, dup: bool = False):
     """Batched pass B: returns (G_new (B, n), i_next, g_i_next, g_dn).
 
-    Recomputes both rows k_i/k_j against the shared X (no HBM round-trip
-    for either); a lane with ``mu == 0`` leaves G bitwise unchanged.
-    ``dup`` selects the doubled ε-SVR operator exactly as in
-    :func:`rbf_row_wss_batched`.
+    Recomputes both *base* rows k_i/k_j against the shared X (no HBM
+    round-trip for either); a lane with ``mu == 0`` leaves G bitwise
+    unchanged.  ``dup`` selects the doubled ε-SVR operator exactly as in
+    :func:`rbf_row_wss_batched` (in-kernel half reads, l-wide matmuls).
     """
     impl = resolve_impl(impl)
     if impl == "jnp":
         return ref_ops.rbf_update_wss_batched(X, sqn, G, alpha_new, L, U,
                                               XQi, sqqi, XQj, sqqj, mu,
                                               gammas, dup=dup)
-    if dup:
-        X = jnp.concatenate([X, X], axis=0)
-        sqn = jnp.concatenate([sqn, sqn])
     l, d = X.shape
+    H = 2 if dup else 1
     B = G.shape[0]
     lpad, dpad = pad_dims(l, d, block_l)
     bpad = pad_lanes(B)
@@ -198,16 +248,117 @@ def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
                       jnp.broadcast_to(gammas, (B,))], axis=1).astype(dtype)
     G_new, bmax, barg, bmin = rbf_update_wss_batched_pallas(
         _pad_d(_pad_l(X, lpad), dpad), _pad_l(sqn, lpad),
-        _pad_bl(G, bpad, lpad), _pad_bl(alpha_new, bpad, lpad),
-        _pad_bl(L, bpad, lpad), _pad_bl(U, bpad, lpad),
+        _stack_halves(G, H, bpad, lpad),
+        _stack_halves(alpha_new, H, bpad, lpad),
+        _stack_halves(L, H, bpad, lpad), _stack_halves(U, H, bpad, lpad),
         _pad_b(_pad_d(XQi, dpad), bpad), _pad_b(_pad_d(XQj, dpad), bpad),
         _pad_b(scal, bpad),
-        block_l=block_l, interpret=(impl == "interpret"))
-    w = jnp.argmax(bmax, axis=1)
-    i_next = jnp.take_along_axis(barg, w[:, None], axis=1)[:, 0]
-    g_i_next = jnp.take_along_axis(bmax, w[:, None], axis=1)[:, 0]
-    return (G_new[:B, :l], i_next[:B], g_i_next[:B],
+        block_l=block_l, interpret=(impl == "interpret"), base_l=l)
+    i_next, g_i_next = _first_max(bmax, barg)
+    return (_unstack_halves(G_new, B, l), i_next[:B], g_i_next[:B],
             jnp.min(bmin, axis=1)[:B])
+
+
+def row_wss_batched_rows(KR, G, alpha, L, U, a_i, L_i, U_i, g_i, i_idx,
+                         use_exact, *, impl: str = "auto",
+                         block_l: int = 1024, dup: bool = False):
+    """Batched pass A from pre-gathered *base* rows ``KR`` (B, l) — the
+    Gram-bank row source.  Same contract as :func:`rbf_row_wss_batched`;
+    the jnp path tiles the rows for the doubled operator, the Pallas path
+    reads the row tile once per half in-kernel."""
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        k = ref_ops.tile_rows(KR) if dup else KR
+        return ref_ops.row_wss_batched_from_k(k, G, alpha, L, U, a_i, L_i,
+                                              U_i, g_i, i_idx, use_exact)
+    B, l = KR.shape
+    H = 2 if dup else 1
+    lpad = pad_dims(l, 1, block_l)[0]
+    bpad = pad_lanes(B)
+    dtype = KR.dtype
+    scal = jnp.stack([a_i, L_i, U_i, g_i,
+                      use_exact.astype(dtype)], axis=1).astype(dtype)
+    bmax, barg = row_wss_batched_rows_pallas(
+        _pad_bl(KR, bpad, lpad), _stack_halves(G, H, bpad, lpad),
+        _stack_halves(alpha, H, bpad, lpad),
+        _stack_halves(L, H, bpad, lpad), _stack_halves(U, H, bpad, lpad),
+        _pad_b(scal, bpad), _pad_b(_iscal(i_idx, B), bpad),
+        block_l=block_l, interpret=(impl == "interpret"), base_l=l)
+    j, gain = _first_max(bmax, barg)
+    return j[:B], gain[:B]
+
+
+def update_wss_batched_rows(KRi, KRj, G, alpha_new, L, U, mu, *,
+                            impl: str = "auto", block_l: int = 1024,
+                            dup: bool = False):
+    """Batched pass B from pre-gathered *base* rows — the Gram-bank row
+    source.  Same contract as :func:`rbf_update_wss_batched`."""
+    impl = resolve_impl(impl)
+    if impl == "jnp":
+        ki = ref_ops.tile_rows(KRi) if dup else KRi
+        kj = ref_ops.tile_rows(KRj) if dup else KRj
+        return ref_ops.update_wss_batched_from_rows(G, ki, kj, mu,
+                                                    alpha_new, L, U)
+    B, l = KRi.shape
+    H = 2 if dup else 1
+    lpad = pad_dims(l, 1, block_l)[0]
+    bpad = pad_lanes(B)
+    dtype = KRi.dtype
+    scal = jnp.broadcast_to(mu, (B,)).astype(dtype)[:, None]
+    G_new, bmax, barg, bmin = update_wss_batched_rows_pallas(
+        _pad_bl(KRi, bpad, lpad), _pad_bl(KRj, bpad, lpad),
+        _stack_halves(G, H, bpad, lpad),
+        _stack_halves(alpha_new, H, bpad, lpad),
+        _stack_halves(L, H, bpad, lpad), _stack_halves(U, H, bpad, lpad),
+        _pad_b(scal, bpad),
+        block_l=block_l, interpret=(impl == "interpret"), base_l=l)
+    i_next, g_i_next = _first_max(bmax, barg)
+    return (_unstack_halves(G_new, B, l), i_next[:B], g_i_next[:B],
+            jnp.min(bmin, axis=1)[:B])
+
+
+# ---------------------------------------------------------------------------
+# RowSource dispatchers: one call site per pass, any supplier x backend
+# ---------------------------------------------------------------------------
+
+
+def source_row_wss(src: RowSource, G, alpha, L, U, i_idx, a_i, L_i, U_i,
+                   g_i, use_exact, *, impl: str = "auto",
+                   block_l: int = 1024):
+    """Batched pass A against any :class:`~repro.kernels.row_source.RowSource`.
+
+    Returns (j (B,), gain (B,)) — the per-lane WSS2 selection.
+    """
+    if src.is_bank:
+        KR = src.query(i_idx).astype(G.dtype)
+        return row_wss_batched_rows(KR, G, alpha, L, U, a_i, L_i, U_i, g_i,
+                                    i_idx, use_exact, impl=impl,
+                                    block_l=block_l, dup=src.dup)
+    XQ, sqq = src.query(i_idx)
+    return rbf_row_wss_batched(src.X, src.sqn, G, alpha, L, U, XQ, sqq,
+                               a_i, L_i, U_i, g_i, i_idx, use_exact,
+                               src.gammas, impl=impl, block_l=block_l,
+                               dup=src.dup)
+
+
+def source_update_wss(src: RowSource, G, alpha_new, L, U, i_idx, j_idx, mu,
+                      *, impl: str = "auto", block_l: int = 1024):
+    """Batched pass B against any :class:`~repro.kernels.row_source.RowSource`.
+
+    Returns (G_new (B, n), i_next (B,), g_i_next (B,), g_dn (B,)).
+    """
+    B = G.shape[0]
+    stacked = jnp.concatenate([i_idx, j_idx])
+    if src.is_bank:
+        rows = src.query(stacked).astype(G.dtype)   # ONE (2B, l) gather
+        return update_wss_batched_rows(rows[:B], rows[B:], G, alpha_new,
+                                       L, U, mu, impl=impl,
+                                       block_l=block_l, dup=src.dup)
+    XQ, sqq = src.query(stacked)
+    return rbf_update_wss_batched(src.X, src.sqn, G, alpha_new, L, U,
+                                  XQ[:B], sqq[:B], XQ[B:], sqq[B:], mu,
+                                  src.gammas, impl=impl, block_l=block_l,
+                                  dup=src.dup)
 
 
 def gram(X1, X2=None, gamma=1.0, *, impl: str = "auto",

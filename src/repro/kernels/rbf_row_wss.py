@@ -16,9 +16,22 @@ reduces on-chip.
 The selection algebra is dual-generic: L/U are arbitrary per-coordinate
 boxes (classification, class-weighted, ε-SVR doubled, one-class lanes all
 look identical from here); only the RBF ``diag == 1`` identity is
-specialized.  The ε-SVR doubled operator reaches this kernel with a
-pre-tiled X (the ops wrapper's ``dup`` handling) — exploiting the tiled
-row structure *inside* the kernel is a real-TPU follow-up (ROADMAP).
+specialized.  Row sources (see :mod:`repro.kernels.row_source`):
+
+* **rbf** — the (B, d) x (d, BL) matmul against the shared X tile;
+* **doubled rbf** (``H = 2`` state halves) — the ε-SVR operator: the lane
+  state arrives as an (2, B, lpad) stack of the two variable halves, the
+  base row tile is computed ONCE per grid step and the selection algebra
+  reads it twice via half-offset index arithmetic — the matmul stays
+  l-wide (no pre-tiled X, half the VMEM X footprint and HBM traffic of
+  the old ops-layer ``concatenate([X, X])`` launch);
+* **rows** — pre-gathered base kernel rows (Gram-bank mode): no X at all,
+  the tile is a (B, BL) slab of the gathered row block (also honouring
+  the doubled half structure).
+
+Working-set indices travel through a dedicated int32 channel (``iscal``),
+never through the data dtype — exact for any l (a float32 round-trip is
+lossy beyond 2^24).
 """
 
 from __future__ import annotations
@@ -32,10 +45,10 @@ from jax.experimental import pallas as pl
 TAU = 1e-12
 
 
-def _kernel(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, alpha_ref, L_ref, U_ref,
-            k_out, bmax_out, barg_out, *, block_l: int):
+def _kernel(xq_ref, scal_ref, iscal_ref, X_ref, sqn_ref, G_ref, alpha_ref,
+            L_ref, U_ref, k_out, bmax_out, barg_out, *, block_l: int):
     b = pl.program_id(0)
-    # scalars: [sqq, a_i, L_i, U_i, g_i, gamma, use_exact, i_idx]
+    # scalars: [sqq, a_i, L_i, U_i, g_i, gamma, use_exact]; int: [i_idx]
     sqq = scal_ref[0, 0]
     a_i = scal_ref[0, 1]
     L_i = scal_ref[0, 2]
@@ -43,7 +56,7 @@ def _kernel(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, alpha_ref, L_ref, U_ref,
     g_i = scal_ref[0, 4]
     gamma = scal_ref[0, 5]
     use_exact = scal_ref[0, 6] > 0.5
-    i_idx = scal_ref[0, 7].astype(jnp.int32)
+    i_idx = iscal_ref[0, 0]
 
     x = X_ref[...]                      # (BL, d)
     q = xq_ref[...]                     # (1, d)
@@ -75,9 +88,56 @@ def _kernel(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, alpha_ref, L_ref, U_ref,
     barg_out[0, 0] = b * block_l + arg
 
 
-def _kernel_batched(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, alpha_ref,
-                    L_ref, U_ref, bmax_out, barg_out, *, block_l: int):
-    """Lane-batched pass A: every lane shares the (BL, d) X tile.
+def _select_from_k(k, G, alpha, L, U, scal, i_idx, b, *, block_l: int,
+                   base_l: int):
+    """Shared WSS2 selection algebra over the (H, B, BL) state halves.
+
+    ``k`` is the (B, BL) *base* kernel-row tile; the doubled ε-SVR operator
+    (H = 2) reads it once per half — row k of Q = [[K, K], [K, K]] is the
+    base row tiled, so the duplication is index arithmetic, not a second
+    matmul.  The global coordinate of half h is ``h * base_l + offset``
+    (``base_l`` is the TRUE base example count — padded tails are inert).
+    Returns the per-block (best (B, 1), arg (B, 1) int32) pair.
+    """
+    H = G.shape[0]
+    # per-lane scalars: [a_i, L_i, U_i, g_i, use_exact] columns of scal
+    a_i = scal[:, 0:1]
+    L_i = scal[:, 1:2]
+    U_i = scal[:, 2:3]
+    g_i = scal[:, 3:4]
+    use_exact = scal[:, 4:5] > 0.5
+    q_vec = jnp.maximum(2.0 - 2.0 * k, TAU)      # RBF diag == 1
+    best = None
+    barg = None
+    for h in range(H):
+        Gh, ah, Lh, Uh = G[h], alpha[h], L[h], U[h]
+        l_vec = g_i - Gh
+        g_tilde = 0.5 * l_vec * l_vec / q_vec
+        lo = jnp.maximum(L_i - a_i, ah - Uh)
+        hi = jnp.minimum(U_i - a_i, ah - Lh)
+        mu_c = jnp.clip(l_vec / q_vec, lo, hi)
+        g_exact = l_vec * mu_c - 0.5 * q_vec * mu_c * mu_c
+        gains = jnp.where(use_exact, g_exact, g_tilde)
+        gidx = (h * base_l + b * block_l
+                + jax.lax.broadcasted_iota(jnp.int32, k.shape, 1))
+        mask = (ah > Lh) & (l_vec > 0) & (gidx != i_idx)
+        vals = jnp.where(mask, gains, -jnp.inf)
+        arg = jnp.argmax(vals, axis=1).astype(jnp.int32)
+        m = jnp.max(vals, axis=1)
+        g_arg = h * base_l + b * block_l + arg
+        if best is None:
+            best, barg = m, g_arg
+        else:
+            barg = jnp.where(m > best, g_arg, barg)
+            best = jnp.maximum(m, best)
+    return best[:, None], barg[:, None]
+
+
+def _kernel_batched(xq_ref, scal_ref, iscal_ref, X_ref, sqn_ref, G_ref,
+                    alpha_ref, L_ref, U_ref, bmax_out, barg_out,
+                    *, block_l: int, base_l: int):
+    """Lane-batched pass A (rbf row source): every lane shares the (BL, d)
+    X tile.
 
     The B query rows hit the tile as ONE (B, d) x (d, BL) MXU matmul; the
     per-lane gain algebra and masked argmax run on the VPU over (B, BL)
@@ -86,15 +146,8 @@ def _kernel_batched(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, alpha_ref,
     round-trip of (B, l) and for launch-free Alg. 3 candidate swaps.
     """
     b = pl.program_id(0)
-    # per-lane scalars: [sqq, a_i, L_i, U_i, g_i, gamma, use_exact, i_idx]
     sqq = scal_ref[:, 0:1]
-    a_i = scal_ref[:, 1:2]
-    L_i = scal_ref[:, 2:3]
-    U_i = scal_ref[:, 3:4]
-    g_i = scal_ref[:, 4:5]
-    gamma = scal_ref[:, 5:6]
-    use_exact = scal_ref[:, 6:7] > 0.5
-    i_idx = scal_ref[:, 7:8].astype(jnp.int32)
+    gamma = scal_ref[:, 1:2]
 
     x = X_ref[...]                      # (BL, d) shared tile
     q = xq_ref[...]                     # (B, d) per-lane query rows
@@ -104,58 +157,61 @@ def _kernel_batched(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, alpha_ref,
     d2 = sqq + sqn_ref[...] - 2.0 * prod                    # (B, BL)
     k = jnp.exp(-gamma * jnp.maximum(d2, 0.0))
 
-    G = G_ref[...]
-    alpha = alpha_ref[...]
-    L = L_ref[...]
-    U = U_ref[...]
-    l_vec = g_i - G
-    q_vec = jnp.maximum(2.0 - 2.0 * k, TAU)      # RBF diag == 1
-    g_tilde = 0.5 * l_vec * l_vec / q_vec
-    lo = jnp.maximum(L_i - a_i, alpha - U)
-    hi = jnp.minimum(U_i - a_i, alpha - L)
-    mu_c = jnp.clip(l_vec / q_vec, lo, hi)
-    g_exact = l_vec * mu_c - 0.5 * q_vec * mu_c * mu_c
-    gains = jnp.where(use_exact, g_exact, g_tilde)
-
-    nb_lanes = G.shape[0]
-    gidx = (b * block_l
-            + jax.lax.broadcasted_iota(jnp.int32, (nb_lanes, block_l), 1))
-    mask = (alpha > L) & (l_vec > 0) & (gidx != i_idx)
-    vals = jnp.where(mask, gains, -jnp.inf)
-    arg = jnp.argmax(vals, axis=1).astype(jnp.int32)
-    bmax_out[...] = jnp.max(vals, axis=1, keepdims=True)
-    barg_out[...] = (b * block_l + arg)[:, None]
+    bmax, barg = _select_from_k(
+        k, G_ref[...], alpha_ref[...], L_ref[...], U_ref[...],
+        scal_ref[:, 2:], iscal_ref[...], b, block_l=block_l, base_l=base_l)
+    bmax_out[...] = bmax
+    barg_out[...] = barg
 
 
-@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def _kernel_batched_rows(kr_ref, scal_ref, iscal_ref, G_ref, alpha_ref,
+                         L_ref, U_ref, bmax_out, barg_out,
+                         *, block_l: int, base_l: int):
+    """Lane-batched pass A (rows source): the kernel-row tile arrives
+    pre-gathered (Gram-bank mode) — same selection algebra, no matmul."""
+    b = pl.program_id(0)
+    bmax, barg = _select_from_k(
+        kr_ref[...], G_ref[...], alpha_ref[...], L_ref[...], U_ref[...],
+        scal_ref[...], iscal_ref[...], b, block_l=block_l, base_l=base_l)
+    bmax_out[...] = bmax
+    barg_out[...] = barg
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_l", "interpret", "base_l"))
 def rbf_row_wss_batched_pallas(X, sqn, G, alpha, L, U, XQ, scalars,
-                               *, block_l: int = 1024,
-                               interpret: bool = False):
-    """Launch lane-batched pass A.  ``G``/``alpha``/``L``/``U`` are (B, lpad)
-    with the lane dimension padded to a sublane multiple by the ops wrapper;
-    ``XQ`` is (B, d); ``scalars`` is the packed (B, 8) array
-    [sqq, a_i, L_i, U_i, g_i, gamma, use_exact, i_idx] per lane.
+                               iscalars, *, block_l: int = 1024,
+                               interpret: bool = False, base_l: int = 0):
+    """Launch lane-batched pass A.  ``G``/``alpha``/``L``/``U`` are
+    (H, B, lpad) stacks of the variable halves (H = 1 plain, H = 2 the
+    doubled ε-SVR operator) with both trailing dims padded by the ops
+    wrapper; ``XQ`` is (B, d) *base* query rows; ``scalars`` is the packed
+    (B, 7) float array [sqq, gamma, a_i, L_i, U_i, g_i, use_exact] and
+    ``iscalars`` the (B, 1) int32 channel [i_idx] (global doubled index).
+    ``base_l`` is the true base example count (half-1 coordinates are
+    ``base_l + offset``).
 
     Returns (block_max (B, nb), block_arg (B, nb)).
     """
-    lpad, d = X.shape
-    B = G.shape[0]
+    H, B, lpad = G.shape
+    d = X.shape[1]
     assert lpad % block_l == 0, (lpad, block_l)
     nb = lpad // block_l
     dtype = X.dtype
 
-    lane_spec = pl.BlockSpec((B, block_l), lambda b: (0, b))
+    lane_spec = pl.BlockSpec((H, B, block_l), lambda b: (0, 0, b))
     blk_spec = pl.BlockSpec((B, 1), lambda b: (0, b))
     out_shapes = (
         jax.ShapeDtypeStruct((B, nb), dtype),        # block max
         jax.ShapeDtypeStruct((B, nb), jnp.int32),    # block arg
     )
     bmax, barg = pl.pallas_call(
-        functools.partial(_kernel_batched, block_l=block_l),
+        functools.partial(_kernel_batched, block_l=block_l, base_l=base_l),
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((B, d), lambda b: (0, 0)),          # XQ
-            pl.BlockSpec((B, 8), lambda b: (0, 0)),          # scalars
+            pl.BlockSpec((B, 7), lambda b: (0, 0)),          # scalars
+            pl.BlockSpec((B, 1), lambda b: (0, 0)),          # iscalars
             pl.BlockSpec((block_l, d), lambda b: (b, 0)),    # X
             pl.BlockSpec((1, block_l), lambda b: (0, b)),    # sqn
             lane_spec, lane_spec, lane_spec, lane_spec,
@@ -163,17 +219,57 @@ def rbf_row_wss_batched_pallas(X, sqn, G, alpha, L, U, XQ, scalars,
         out_specs=[blk_spec, blk_spec],
         out_shape=out_shapes,
         interpret=interpret,
-    )(XQ, scalars, X, sqn.reshape(1, lpad), G, alpha, L, U)
+    )(XQ, scalars, iscalars, X, sqn.reshape(1, lpad), G, alpha, L, U)
+    return bmax, barg
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_l", "interpret", "base_l"))
+def row_wss_batched_rows_pallas(KR, G, alpha, L, U, scalars, iscalars,
+                                *, block_l: int = 1024,
+                                interpret: bool = False, base_l: int = 0):
+    """Launch lane-batched pass A from pre-gathered base rows ``KR``
+    (B, lpad) — the Gram-bank row source.  ``scalars`` is the packed
+    (B, 5) float array [a_i, L_i, U_i, g_i, use_exact]; the state stack
+    and ``iscalars``/``base_l`` are as in
+    :func:`rbf_row_wss_batched_pallas`.  Returns (block_max, block_arg).
+    """
+    H, B, lpad = G.shape
+    assert lpad % block_l == 0, (lpad, block_l)
+    nb = lpad // block_l
+    dtype = KR.dtype
+
+    lane_spec = pl.BlockSpec((H, B, block_l), lambda b: (0, 0, b))
+    blk_spec = pl.BlockSpec((B, 1), lambda b: (0, b))
+    out_shapes = (
+        jax.ShapeDtypeStruct((B, nb), dtype),
+        jax.ShapeDtypeStruct((B, nb), jnp.int32),
+    )
+    bmax, barg = pl.pallas_call(
+        functools.partial(_kernel_batched_rows, block_l=block_l,
+                          base_l=base_l),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((B, block_l), lambda b: (0, b)),    # KR
+            pl.BlockSpec((B, 5), lambda b: (0, 0)),          # scalars
+            pl.BlockSpec((B, 1), lambda b: (0, 0)),          # iscalars
+            lane_spec, lane_spec, lane_spec, lane_spec,
+        ],
+        out_specs=[blk_spec, blk_spec],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(KR, scalars, iscalars, G, alpha, L, U)
     return bmax, barg
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block_l", "interpret"))
-def rbf_row_wss_pallas(X, sqn, G, alpha, L, U, xq, scalars,
+def rbf_row_wss_pallas(X, sqn, G, alpha, L, U, xq, scalars, iscalars,
                        *, block_l: int = 1024, interpret: bool = False):
     """Launch pass A.  All vector inputs must be padded to a multiple of
     ``block_l`` (the ops wrapper does this).  ``scalars`` is the packed
-    (1, 8) f32 array [sqq, a_i, L_i, U_i, g_i, gamma, use_exact, i_idx].
+    (1, 7) float array [sqq, a_i, L_i, U_i, g_i, gamma, use_exact];
+    ``iscalars`` the (1, 1) int32 channel [i_idx].
 
     Returns (k_i (l,), block_max (nb,), block_arg (nb,)).
     """
@@ -194,7 +290,8 @@ def rbf_row_wss_pallas(X, sqn, G, alpha, L, U, xq, scalars,
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((1, d), lambda b: (0, 0)),          # xq
-            pl.BlockSpec((1, 8), lambda b: (0, 0)),          # scalars
+            pl.BlockSpec((1, 7), lambda b: (0, 0)),          # scalars
+            pl.BlockSpec((1, 1), lambda b: (0, 0)),          # iscalars
             pl.BlockSpec((block_l, d), lambda b: (b, 0)),    # X
             vec_spec, vec_spec, vec_spec, vec_spec, vec_spec,
         ],
@@ -205,6 +302,6 @@ def rbf_row_wss_pallas(X, sqn, G, alpha, L, U, xq, scalars,
         ],
         out_shape=out_shapes,
         interpret=interpret,
-    )(xq.reshape(1, d), scalars, X, row2(sqn), row2(G), row2(alpha),
-      row2(L), row2(U))
+    )(xq.reshape(1, d), scalars, iscalars, X, row2(sqn), row2(G),
+      row2(alpha), row2(L), row2(U))
     return k[0], bmax[0], barg[0]

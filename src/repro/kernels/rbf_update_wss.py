@@ -14,8 +14,12 @@ d <= 60) the fusion saves ~40% of HBM bytes; the structural win is fewer
 kernel launches and no HBM round-trip for gains/k_j.
 
 Like pass A, the update/stopping algebra is dual-generic (arbitrary L/U
-boxes); the ε-SVR doubled operator arrives as a pre-tiled X from the ops
-wrapper (``dup``) — in-kernel row tiling is a real-TPU follow-up.
+boxes) and row-source-generic: the batched kernels take the lane state as
+an (H, B, lpad) stack of variable halves.  With H = 2 (the ε-SVR doubled
+operator) both base rows k_i / k_j are computed ONCE per grid step from
+the base (BL, d) X tile and applied to each half via index arithmetic —
+the matmuls stay l-wide, replacing the old pre-tiled-X launch.  The rows
+variant consumes pre-gathered base rows instead (Gram-bank mode).
 """
 
 from __future__ import annotations
@@ -56,12 +60,44 @@ def _kernel(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, ki_ref, alpha_ref,
     bmin_out[0, 0] = jnp.min(jnp.where(dn, G_new, jnp.inf))
 
 
+def _update_from_rows(k_i, k_j, G, alpha, L, U, mu, b, *, block_l: int,
+                      base_l: int):
+    """Shared pass-B algebra over the (H, B, BL) state halves.
+
+    ``k_i``/``k_j`` are the (B, BL) *base* row tiles — the doubled ε-SVR
+    operator (H = 2) applies them to each half in turn, so the duplicated
+    row is index arithmetic, never a second matmul or a wider tile.  A lane
+    with ``mu == 0`` leaves every half of G bitwise unchanged (the
+    in-kernel lane freeze).  Returns
+    (G_new (H, B, BL), bmax (B, 1), barg (B, 1) int32, bmin (B, 1)).
+    """
+    H = G.shape[0]
+    G_new = G - mu[None] * (k_i - k_j)[None]
+    best = barg = bmin = None
+    for h in range(H):
+        up = alpha[h] < U[h]
+        dn = alpha[h] > L[h]
+        vals_up = jnp.where(up, G_new[h], -jnp.inf)
+        arg = jnp.argmax(vals_up, axis=1).astype(jnp.int32)
+        m = jnp.max(vals_up, axis=1)
+        g_arg = h * base_l + b * block_l + arg
+        mn = jnp.min(jnp.where(dn, G_new[h], jnp.inf), axis=1)
+        if best is None:
+            best, barg, bmin = m, g_arg, mn
+        else:
+            barg = jnp.where(m > best, g_arg, barg)
+            best = jnp.maximum(m, best)
+            bmin = jnp.minimum(bmin, mn)
+    return G_new, best[:, None], barg[:, None], bmin[:, None]
+
+
 def _kernel_batched(xqi_ref, xqj_ref, scal_ref, X_ref, sqn_ref, G_ref,
                     alpha_ref, L_ref, U_ref, G_out, bmax_out, barg_out,
-                    bmin_out, *, block_l: int):
-    """Lane-batched pass B: recompute BOTH rows k_i, k_j against the shared
-    X tile (two (B, d) x (d, BL) matmuls), update G in-register, and emit
-    the per-lane next-i argmax plus both KKT gap endpoints.
+                    bmin_out, *, block_l: int, base_l: int):
+    """Lane-batched pass B (rbf source): recompute BOTH base rows k_i, k_j
+    against the shared X tile (two (B, d) x (d, BL) matmuls), update every
+    state half in-register, and emit the per-lane next-i argmax plus both
+    KKT gap endpoints.
 
     Neither row ever touches HBM.  A lane with ``mu == 0`` writes G back
     bitwise unchanged — that is the in-kernel lane freeze: converged lanes
@@ -84,43 +120,57 @@ def _kernel_batched(xqi_ref, xqj_ref, scal_ref, X_ref, sqn_ref, G_ref,
     k_i = jnp.exp(-gamma * jnp.maximum(sqq_i + sqn - 2.0 * prod_i, 0.0))
     k_j = jnp.exp(-gamma * jnp.maximum(sqq_j + sqn - 2.0 * prod_j, 0.0))
 
-    G_new = G_ref[...] - mu * (k_i - k_j)
+    G_new, bmax, barg, bmin = _update_from_rows(
+        k_i, k_j, G_ref[...], alpha_ref[...], L_ref[...], U_ref[...], mu,
+        b, block_l=block_l, base_l=base_l)
     G_out[...] = G_new.astype(G_out.dtype)
-
-    alpha = alpha_ref[...]
-    up = alpha < U_ref[...]
-    dn = alpha > L_ref[...]
-    vals_up = jnp.where(up, G_new, -jnp.inf)
-    arg = jnp.argmax(vals_up, axis=1).astype(jnp.int32)
-    bmax_out[...] = jnp.max(vals_up, axis=1, keepdims=True)
-    barg_out[...] = (b * block_l + arg)[:, None]
-    bmin_out[...] = jnp.min(jnp.where(dn, G_new, jnp.inf), axis=1,
-                            keepdims=True)
+    bmax_out[...] = bmax
+    barg_out[...] = barg
+    bmin_out[...] = bmin
 
 
-@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def _kernel_batched_rows(kri_ref, krj_ref, scal_ref, G_ref, alpha_ref,
+                         L_ref, U_ref, G_out, bmax_out, barg_out, bmin_out,
+                         *, block_l: int, base_l: int):
+    """Lane-batched pass B (rows source): both base row tiles arrive
+    pre-gathered (Gram-bank mode) — same update algebra, no matmuls."""
+    b = pl.program_id(0)
+    mu = scal_ref[:, 0:1]
+    G_new, bmax, barg, bmin = _update_from_rows(
+        kri_ref[...], krj_ref[...], G_ref[...], alpha_ref[...], L_ref[...],
+        U_ref[...], mu, b, block_l=block_l, base_l=base_l)
+    G_out[...] = G_new.astype(G_out.dtype)
+    bmax_out[...] = bmax
+    barg_out[...] = barg
+    bmin_out[...] = bmin
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_l", "interpret", "base_l"))
 def rbf_update_wss_batched_pallas(X, sqn, G, alpha_new, L, U, XQi, XQj,
                                   scalars, *, block_l: int = 1024,
-                                  interpret: bool = False):
-    """Launch lane-batched pass B.  ``scalars`` is the packed (B, 4) array
+                                  interpret: bool = False, base_l: int = 0):
+    """Launch lane-batched pass B.  The state leaves are (H, B, lpad) half
+    stacks (H = 2 for the doubled ε-SVR operator); ``XQi``/``XQj`` are the
+    (B, d) *base* query rows and ``scalars`` the packed (B, 4) array
     [sqq_i, sqq_j, mu, gamma] per lane.  Returns
-    (G_new (B, lpad), bmax_up (B, nb), barg_up (B, nb), bmin_dn (B, nb))."""
-    lpad, d = X.shape
-    B = G.shape[0]
+    (G_new (H, B, lpad), bmax_up (B, nb), barg_up (B, nb), bmin_dn (B, nb))."""
+    H, B, lpad = G.shape
+    d = X.shape[1]
     assert lpad % block_l == 0, (lpad, block_l)
     nb = lpad // block_l
     dtype = X.dtype
 
-    lane_spec = pl.BlockSpec((B, block_l), lambda b: (0, b))
+    lane_spec = pl.BlockSpec((H, B, block_l), lambda b: (0, 0, b))
     blk_spec = pl.BlockSpec((B, 1), lambda b: (0, b))
     out_shapes = (
-        jax.ShapeDtypeStruct((B, lpad), dtype),
+        jax.ShapeDtypeStruct((H, B, lpad), dtype),
         jax.ShapeDtypeStruct((B, nb), dtype),
         jax.ShapeDtypeStruct((B, nb), jnp.int32),
         jax.ShapeDtypeStruct((B, nb), dtype),
     )
     G_new, bmax, barg, bmin = pl.pallas_call(
-        functools.partial(_kernel_batched, block_l=block_l),
+        functools.partial(_kernel_batched, block_l=block_l, base_l=base_l),
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((B, d), lambda b: (0, 0)),          # XQi
@@ -134,6 +184,46 @@ def rbf_update_wss_batched_pallas(X, sqn, G, alpha_new, L, U, XQi, XQj,
         out_shape=out_shapes,
         interpret=interpret,
     )(XQi, XQj, scalars, X, sqn.reshape(1, lpad), G, alpha_new, L, U)
+    return G_new, bmax, barg, bmin
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_l", "interpret", "base_l"))
+def update_wss_batched_rows_pallas(KRi, KRj, G, alpha_new, L, U, scalars,
+                                   *, block_l: int = 1024,
+                                   interpret: bool = False, base_l: int = 0):
+    """Launch lane-batched pass B from pre-gathered base rows ``KRi``/``KRj``
+    (B, lpad) — the Gram-bank row source.  ``scalars`` is the packed (B, 1)
+    array [mu]; state stack and ``base_l`` as in
+    :func:`rbf_update_wss_batched_pallas`."""
+    H, B, lpad = G.shape
+    assert lpad % block_l == 0, (lpad, block_l)
+    nb = lpad // block_l
+    dtype = KRi.dtype
+
+    lane_spec = pl.BlockSpec((H, B, block_l), lambda b: (0, 0, b))
+    row_spec = pl.BlockSpec((B, block_l), lambda b: (0, b))
+    blk_spec = pl.BlockSpec((B, 1), lambda b: (0, b))
+    out_shapes = (
+        jax.ShapeDtypeStruct((H, B, lpad), dtype),
+        jax.ShapeDtypeStruct((B, nb), dtype),
+        jax.ShapeDtypeStruct((B, nb), jnp.int32),
+        jax.ShapeDtypeStruct((B, nb), dtype),
+    )
+    G_new, bmax, barg, bmin = pl.pallas_call(
+        functools.partial(_kernel_batched_rows, block_l=block_l,
+                          base_l=base_l),
+        grid=(nb,),
+        in_specs=[
+            row_spec,                                        # KRi
+            row_spec,                                        # KRj
+            pl.BlockSpec((B, 1), lambda b: (0, 0)),          # scalars
+            lane_spec, lane_spec, lane_spec, lane_spec,
+        ],
+        out_specs=[lane_spec, blk_spec, blk_spec, blk_spec],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(KRi, KRj, scalars, G, alpha_new, L, U)
     return G_new, bmax, barg, bmin
 
 

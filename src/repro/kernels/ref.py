@@ -65,18 +65,26 @@ def rbf_update_wss(X, sqn, G, k_i, xq_j, mu, alpha_new, L, U, gamma):
 # Alg. 3 candidate swap the i-row without a data-dependent relaunch.
 
 
+def tile_rows(k):
+    """Doubled-operator row tiling: (B, l) base rows -> (B, 2l).
+
+    Row k of ``Q = [[K, K], [K, K]]`` is the base row tiled — the jnp
+    oracle's counterpart of the Pallas kernels' in-kernel half reads.
+    """
+    return jnp.concatenate([k, k], axis=1)
+
+
 def rbf_rows_batched(X, sqn, XQ, sqq, gammas, dup: bool = False):
     """k(x_q^b, X) for a batch of query rows -> (B, l).
 
     ``dup=True`` returns the *doubled-operator* rows (B, 2l) used by the
-    ε-SVR dual: row k of ``Q = [[K, K], [K, K]]`` is the base row tiled, so
-    the O(B l d) distance matmul runs against the base ``X`` only and the
-    2l half is a free broadcast — never a 2l-wide matmul, never a 2l x 2l
-    Gram.
+    ε-SVR dual (:func:`tile_rows`): the O(B l d) distance matmul runs
+    against the base ``X`` only and the 2l half is a free broadcast —
+    never a 2l-wide matmul, never a 2l x 2l Gram.
     """
     d2 = sqq[:, None] + sqn[None, :] - 2.0 * (XQ @ X.T)
     k = jnp.exp(-gammas[:, None] * jnp.maximum(d2, 0.0))
-    return jnp.concatenate([k, k], axis=1) if dup else k
+    return tile_rows(k) if dup else k
 
 
 def row_wss_batched_from_k(k, G, alpha, L, U, a_i, L_i, U_i, g_i, i_idx,

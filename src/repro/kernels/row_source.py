@@ -1,0 +1,121 @@
+"""RowSource: the one abstraction for how pass A/B obtain kernel rows.
+
+The fused two-pass engine needs, per iteration, the kernel rows of the two
+working-set coordinates plus a handful of O(1) entries.  Three structurally
+different suppliers exist:
+
+* **rbf** — rows are recomputed from the shared ``X`` (the accelerator
+  memory mode: no Gram is ever materialized);
+* **rbf, doubled** — the ε-SVR operator: the lane state has 2l variables
+  but row k of ``Q = [[K, K], [K, K]]`` is the *base* row tiled, so every
+  row/entry folds its index onto the base axis (``k mod l``) and the O(l d)
+  work never doubles;
+* **bank** — a shared ``(n_stack, l, l)`` base Gram bank plus a per-lane
+  stack index: rows become gathers and the exp work is paid once per
+  distinct gamma instead of per iteration (the CPU throughput mode — and,
+  via the rows-variant Pallas kernels, available on the
+  ``interpret``/``pallas`` backends too).
+
+A :class:`RowSource` is a pytree (jit-transparent; ``dup`` is static) and
+is consumed by the dispatchers in :mod:`repro.kernels.ops`
+(:func:`~repro.kernels.ops.source_row_wss` /
+:func:`~repro.kernels.ops.source_update_wss`) — one call site in the
+solver regardless of supplier or backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("X", "sqn", "gammas", "gram", "gram_idx"),
+    meta_fields=("dup",))
+@dataclasses.dataclass(frozen=True)
+class RowSource:
+    """Where pass A/B kernel rows come from (see module docstring).
+
+    Exactly one of (``X``, ``sqn``) / (``gram``, ``gram_idx``) supplies the
+    rows; ``gammas`` is the (B,) per-lane RBF width (used by the rbf
+    supplier and by :meth:`entry_pairs`).  ``dup`` marks the doubled ε-SVR
+    operator: lane state indices live in [0, 2l) and fold onto the base
+    example axis through :meth:`base_idx`.
+    """
+
+    X: Optional[jax.Array] = None          # (l, d) base inputs
+    sqn: Optional[jax.Array] = None        # (l,) squared norms
+    gammas: Optional[jax.Array] = None     # (B,) per-lane RBF widths
+    gram: Optional[jax.Array] = None       # (n_stack, l, l) base Gram bank
+    gram_idx: Optional[jax.Array] = None   # (B,) lane -> stack entry
+    dup: bool = False
+
+    # -- static structure ---------------------------------------------------
+
+    @property
+    def is_bank(self) -> bool:
+        return self.gram is not None
+
+    @property
+    def base_l(self) -> int:
+        """True base example count (never the padded or doubled length)."""
+        return (self.gram.shape[-1] if self.is_bank else self.X.shape[0])
+
+    @property
+    def n(self) -> int:
+        """Lane-state width: 2l for the doubled operator, else l."""
+        return self.base_l * (2 if self.dup else 1)
+
+    # -- index folding / gathers --------------------------------------------
+
+    def base_idx(self, idx):
+        """Fold a (possibly doubled) coordinate index onto the base axis."""
+        return idx % self.base_l if self.dup else idx
+
+    def query(self, idx):
+        """Per-lane pass inputs at (stacked) coordinate indices ``idx``.
+
+        Bank: the gathered (m, l) *base* rows.  Rbf: the (m, d) base query
+        rows plus their squared norms.  Tiling for the doubled operator
+        happens downstream (in-kernel, or in the jnp oracle) — never here.
+        """
+        b = self.base_idx(idx)
+        if self.is_bank:
+            reps = idx.shape[0] // self.gram_idx.shape[0]
+            return self.gram[jnp.tile(self.gram_idx, reps), b]
+        return jnp.take(self.X, b, axis=0), jnp.take(self.sqn, b)
+
+    def entry_pairs(self, a, b, reps: int):
+        """O(1) kernel entries for ``reps`` stacked (reps*B,) index pairs."""
+        if self.is_bank:
+            return self.gram[jnp.tile(self.gram_idx, reps),
+                             self.base_idx(a), self.base_idx(b)]
+        a, b = self.base_idx(a), self.base_idx(b)
+        d2 = (jnp.take(self.sqn, a) + jnp.take(self.sqn, b)
+              - 2.0 * jnp.sum(jnp.take(self.X, a, axis=0)
+                              * jnp.take(self.X, b, axis=0), axis=-1))
+        return jnp.exp(-jnp.tile(self.gammas, reps) * jnp.maximum(d2, 0.0))
+
+
+def rbf_source(X, gammas, B: int, *, dup: bool = False) -> RowSource:
+    """Row source recomputing rows from the shared ``X`` (l, d)."""
+    X = jnp.asarray(X)
+    gammas = jnp.broadcast_to(jnp.asarray(gammas, X.dtype), (B,))
+    return RowSource(X=X, sqn=jnp.sum(X * X, axis=-1), gammas=gammas,
+                     dup=dup)
+
+
+def bank_source(gram, gram_idx, gammas=None, *, dup: bool = False
+                ) -> RowSource:
+    """Row source gathering rows from a shared base Gram bank."""
+    gram = jnp.asarray(gram)
+    gram_idx = jnp.asarray(gram_idx, jnp.int32)
+    if gammas is not None:
+        gammas = jnp.broadcast_to(jnp.asarray(gammas, gram.dtype),
+                                  gram_idx.shape)
+    return RowSource(gram=gram, gram_idx=gram_idx, gammas=gammas, dup=dup)

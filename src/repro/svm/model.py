@@ -41,7 +41,11 @@ def decision_function(model: SVMModel, Xq: jax.Array) -> jax.Array:
 
 
 def predict(model: SVMModel, Xq: jax.Array) -> jax.Array:
-    return jnp.sign(decision_function(model, Xq))
+    """±1 labels; an exactly-zero margin maps to +1 (the ``df >= 0``
+    convention shared with ``SVC.predict`` — ``jnp.sign`` would emit the
+    invalid label 0 for a query on the separating surface)."""
+    h = decision_function(model, Xq)
+    return jnp.where(h >= 0, 1.0, -1.0).astype(h.dtype)
 
 
 def train_svm(X, y, C, gamma, cfg: SolverConfig = SolverConfig(),

@@ -40,14 +40,15 @@ def test_fused_batched_matches_vmapped_grid_3class_2x2():
     np.testing.assert_allclose(np.asarray(fb.objective),
                                np.asarray(vm.objective), rtol=1e-6)
     assert float(jnp.max(fb.kkt_gap)) <= CFG.eps + 1e-12
-    # the fused engine reports free-SV counts; n_clipped/n_reverted are
-    # untracked there and must carry the explicit -1 sentinel (a zero
-    # would read as "never happened")
-    assert int(jnp.sum(fb.n_free)) > 0
-    np.testing.assert_array_equal(np.asarray(fb.n_clipped),
-                                  grid_mod.UNTRACKED)
-    np.testing.assert_array_equal(np.asarray(fb.n_reverted),
-                                  grid_mod.UNTRACKED)
+    # UNIFIED counter semantics: n_free (like n_clipped/n_reverted) is a
+    # per-STEP counter, untracked on fused paths — it must carry the
+    # explicit -1 sentinel there (a zero would read as "never happened");
+    # the state counter every engine reports is n_free_sv
+    for c in (fb.n_free, fb.n_clipped, fb.n_reverted):
+        np.testing.assert_array_equal(np.asarray(c), grid_mod.UNTRACKED)
+    assert int(jnp.sum(fb.n_free_sv)) > 0
+    assert int(jnp.sum(vm.n_free_sv)) > 0
+    assert int(jnp.sum(vm.n_free)) > 0          # classic engine: per-step
 
 
 def test_fused_batched_interpret_backend_matches_jnp():
@@ -83,7 +84,8 @@ def test_compacted_drivers_parity_and_counters():
     # chunk resumes reset the O(1) planning history, so trajectories (and
     # exact counts) can drift — but the classic driver's counters must be
     # tracked (non-zero wherever the vmapped engine's are) and internally
-    # consistent; the fused driver reports free-SV counts instead
+    # consistent; the fused driver carries the UNTRACKED sentinel on all
+    # three per-step counters and reports the free-SV state count instead
     assert int(jnp.sum(comp.n_free)) > 0
     assert int(jnp.sum(comp.n_clipped)) > 0
     np.testing.assert_array_equal(
@@ -92,11 +94,10 @@ def test_compacted_drivers_parity_and_counters():
     np.testing.assert_array_equal(
         np.asarray(vm.iterations),
         np.asarray(vm.n_free + vm.n_clipped + vm.n_planning))
-    assert int(jnp.sum(compf.n_free)) > 0
-    np.testing.assert_array_equal(np.asarray(compf.n_clipped),
-                                  grid_mod.UNTRACKED)
-    np.testing.assert_array_equal(np.asarray(compf.n_reverted),
-                                  grid_mod.UNTRACKED)
+    for c in (compf.n_free, compf.n_clipped, compf.n_reverted):
+        np.testing.assert_array_equal(np.asarray(c), grid_mod.UNTRACKED)
+    assert int(jnp.sum(compf.n_free_sv)) > 0
+    assert int(jnp.sum(comp.n_free_sv)) > 0
 
 
 def test_lane_freeze_converged_lane_state_is_bitwise_held():

@@ -181,6 +181,147 @@ def test_pass_b_batched_matches_single_lane(l, d, B, dtype):
         np.testing.assert_array_equal(np.asarray(Gn[0]), np.asarray(G[0]))
 
 
+def _setup_doubled(l, d, B, dtype, seed=0):
+    """Doubled ε-SVR lane state (n = 2l) over a base (l, d) X."""
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(l, d)), dtype)
+    sqn = jnp.sum(X * X, axis=-1)
+    C = 5.0
+    zl = jnp.zeros((B, l), dtype)
+    L = jnp.concatenate([zl, zl - C], axis=1)
+    U = jnp.concatenate([zl + C, zl], axis=1)
+    alpha = jnp.clip(jnp.asarray(rng.uniform(-1, 1, (B, 2 * l)), dtype), L, U)
+    G = jnp.asarray(rng.normal(size=(B, 2 * l)), dtype)
+    gammas = jnp.asarray(rng.uniform(0.2, 1.5, B), dtype)
+    i_idx = jnp.asarray(rng.integers(0, 2 * l, B), jnp.int32)
+    return X, sqn, G, alpha, L, U, gammas, i_idx
+
+
+@pytest.mark.parametrize("l,d,B", [(64, 2, 3), (300, 17, 5)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pass_a_doubled_in_kernel_matches_jnp_oracle(l, d, B, dtype):
+    """Tentpole parity: the in-kernel doubled row mode (interpret) — base
+    row tile computed once, read per half — equals the jnp oracle that
+    tiles the base (B, l) row, including half-1 working-set indices."""
+    X, sqn, G, alpha, L, U, gammas, i_idx = _setup_doubled(l, d, B, dtype)
+    bi = i_idx % l
+    XQ, sqq = jnp.take(X, bi, axis=0), jnp.take(sqn, bi)
+    a_i, L_i, U_i = _lane(alpha, i_idx), _lane(L, i_idx), _lane(U, i_idx)
+    g_i = _lane(G, i_idx)
+    use_exact = jnp.asarray([b % 2 == 0 for b in range(B)])
+    args = (X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i, g_i, i_idx,
+            use_exact, gammas)
+    j_ref, gain_ref = ops.rbf_row_wss_batched(*args, impl="jnp", dup=True)
+    j_pl, gain_pl = ops.rbf_row_wss_batched(*args, impl="interpret",
+                                            block_l=128, dup=True)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-11
+    assert [int(x) for x in j_pl] == [int(x) for x in j_ref]
+    np.testing.assert_allclose(np.asarray(gain_pl), np.asarray(gain_ref),
+                               rtol=tol)
+    # at least one lane must have selected a half-1 coordinate for the
+    # half-offset index arithmetic to be exercised
+    assert any(int(x) >= l for x in j_ref) or any(int(x) >= l for x in i_idx)
+
+
+@pytest.mark.parametrize("l,d,B", [(64, 2, 3), (300, 17, 5)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pass_b_doubled_in_kernel_matches_jnp_oracle(l, d, B, dtype):
+    """Tentpole parity for pass B in doubled mode, incl. the bitwise
+    mu = 0 lane freeze across BOTH state halves."""
+    X, sqn, G, alpha, L, U, gammas, i_idx = _setup_doubled(l, d, B, dtype,
+                                                           seed=1)
+    rng = np.random.default_rng(2)
+    j_idx = jnp.asarray(rng.integers(0, 2 * l, B), jnp.int32)
+    mu = jnp.asarray(rng.uniform(-0.4, 0.4, B), dtype).at[0].set(0.0)
+    lanes = jnp.arange(B)
+    alpha_new = jnp.clip(alpha.at[lanes, i_idx].add(mu)
+                         .at[lanes, j_idx].add(-mu), L, U)
+    bi, bj = i_idx % l, j_idx % l
+    args = (X, sqn, G, alpha_new, L, U,
+            jnp.take(X, bi, axis=0), jnp.take(sqn, bi),
+            jnp.take(X, bj, axis=0), jnp.take(sqn, bj), mu, gammas)
+    ref_out = ops.rbf_update_wss_batched(*args, impl="jnp", dup=True)
+    pl_out = ops.rbf_update_wss_batched(*args, impl="interpret",
+                                        block_l=128, dup=True)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-11
+    np.testing.assert_allclose(np.asarray(pl_out[0]), np.asarray(ref_out[0]),
+                               rtol=tol, atol=tol)
+    assert [int(x) for x in pl_out[1]] == [int(x) for x in ref_out[1]]
+    np.testing.assert_allclose(np.asarray(pl_out[2]), np.asarray(ref_out[2]),
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(pl_out[3]), np.asarray(ref_out[3]),
+                               rtol=tol)
+    np.testing.assert_array_equal(np.asarray(pl_out[0][0]), np.asarray(G[0]))
+
+
+@pytest.mark.parametrize("dup", [False, True])
+def test_rows_source_kernels_match_jnp(dup):
+    """Gram-bank row source: the rows-variant Pallas kernels (interpret)
+    equal the jnp from-rows oracle, plain and doubled."""
+    l, d, B = 72, 4, 3
+    dtype = jnp.float64
+    if dup:
+        X, sqn, G, alpha, L, U, gammas, i_idx = _setup_doubled(
+            l, d, B, dtype, seed=3)
+    else:
+        X, sqn, G, alpha, L, U, gammas, i_idx = _setup_batched(
+            l, d, B, dtype, seed=3)
+    bank = jnp.stack([ref.gram(X, g) for g in np.asarray(gammas)])
+    gidx = jnp.arange(B, dtype=jnp.int32)
+    bi = i_idx % l if dup else i_idx
+    KR = bank[gidx, bi]
+    a_i, L_i, U_i = _lane(alpha, i_idx), _lane(L, i_idx), _lane(U, i_idx)
+    g_i = _lane(G, i_idx)
+    use_exact = jnp.asarray([True, False, True])
+    aargs = (KR, G, alpha, L, U, a_i, L_i, U_i, g_i, i_idx, use_exact)
+    j_ref, gain_ref = ops.row_wss_batched_rows(*aargs, impl="jnp", dup=dup)
+    j_pl, gain_pl = ops.row_wss_batched_rows(*aargs, impl="interpret",
+                                             block_l=128, dup=dup)
+    assert [int(x) for x in j_pl] == [int(x) for x in j_ref]
+    np.testing.assert_allclose(np.asarray(gain_pl), np.asarray(gain_ref),
+                               rtol=1e-11)
+    rng = np.random.default_rng(4)
+    n = G.shape[1]
+    j_idx = jnp.asarray(rng.integers(0, n, B), jnp.int32)
+    mu = jnp.asarray(rng.uniform(-0.3, 0.3, B)).at[1].set(0.0)
+    lanes = jnp.arange(B)
+    alpha_new = jnp.clip(alpha.at[lanes, i_idx].add(mu)
+                         .at[lanes, j_idx].add(-mu), L, U)
+    KRj = bank[gidx, j_idx % l if dup else j_idx]
+    bargs = (KR, KRj, G, alpha_new, L, U, mu)
+    r_ref = ops.update_wss_batched_rows(*bargs, impl="jnp", dup=dup)
+    r_pl = ops.update_wss_batched_rows(*bargs, impl="interpret",
+                                       block_l=128, dup=dup)
+    for a, b in zip(r_pl, r_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-11, atol=1e-12)
+    np.testing.assert_array_equal(np.asarray(r_pl[0][1]), np.asarray(G[1]))
+
+
+def test_index_channel_is_exact_beyond_float32_significand():
+    """Satellite regression: working-set indices travel through the int32
+    side channel, never the data dtype — a float32 round-trip corrupts
+    indices beyond 2^24 (the old scal packing did exactly that)."""
+    big = 2 ** 24 + 1
+    # the failure mode being guarded against:
+    assert int(jnp.asarray(big, jnp.float32).astype(jnp.int32)) != big
+    # the int channel is exact:
+    np.testing.assert_array_equal(np.asarray(ops._iscal([big], 1)), [[big]])
+    assert ops._iscal([big], 1).dtype == jnp.int32
+    # behavioral: f32 data with the i-exclusion still selects exactly —
+    # index 5 WOULD win the gain argmax (k(x_i, x_i) = 1 makes its q
+    # collapse to TAU and l_vec = 50 > 0 there) if the != i_idx mask ever
+    # mis-compared, so the selection below is decided by the int channel
+    X, sqn, G, alpha, L, U, gamma = _setup(130, 3, jnp.float32, seed=7)
+    alpha = alpha.at[5].set(0.5 * (L[5] + U[5]))   # strictly inside the box
+    g_i = G[5] + 50.0
+    args = (X, sqn, G, alpha, L, U, X[5], alpha[5], L[5], U[5], g_i,
+            jnp.asarray(5, jnp.int32), jnp.asarray(False), gamma)
+    _, j_ref, _ = ref.rbf_row_wss(*args)
+    _, j_pl, _ = ops.rbf_row_wss(*args, impl="interpret", block_l=128)
+    assert int(j_pl) == int(j_ref) != 5
+
+
 @pytest.mark.parametrize("block_l", [128, 256, 512, 1024])
 def test_pass_a_block_size_sweep(block_l):
     """Block shape must not change results (padding/tiling invariance)."""

@@ -1,0 +1,69 @@
+"""Zero-margin predict regression: a query point ON the separating surface
+must get a valid label from every facade (the ``df >= 0`` convention).
+
+``jnp.sign(0.0) == 0.0``, so a sign-based predict emits the invalid label
+0 for any query whose decision value is exactly zero — easy to construct
+(and to hit in the wild with symmetric data).  The tests build models whose
+decision value at the query is an EXACT floating-point zero: two support
+vectors equidistant from the query with opposite duals, so the two kernel
+terms cancel bitwise.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.svm import SVC, OneClassSVM
+from repro.svm.model import SVMModel, decision_function, predict
+from repro.svm.probes import SVMProbe, predict_probe
+
+
+def _surface_model():
+    """k(x, 0) - k(x, 2) + 0 == exact 0.0 at x = 1."""
+    return SVMModel(X=jnp.asarray([[0.0], [2.0]]),
+                    alpha=jnp.asarray([1.0, -1.0]),
+                    b=jnp.asarray(0.0), gamma=jnp.asarray(0.5))
+
+
+def test_svm_model_predict_zero_margin_is_plus_one():
+    m = _surface_model()
+    xq = jnp.asarray([[1.0]])
+    assert float(decision_function(m, xq)[0]) == 0.0     # exact surface hit
+    lab = np.asarray(predict(m, xq))
+    assert lab[0] == 1.0                                 # NOT sign(0) == 0
+    # off-surface queries keep their signs
+    labs = np.asarray(predict(m, jnp.asarray([[-0.5], [2.5]])))
+    np.testing.assert_array_equal(labs, [1.0, -1.0])
+
+
+def test_svc_predict_zero_margin_returns_a_class():
+    clf = SVC(C=1.0, gamma=0.5)
+    clf.classes_ = np.array([-3, 7])                     # arbitrary labels
+    clf.X_ = jnp.asarray([[0.0], [2.0]], clf.dtype)
+    clf.alpha_ = jnp.asarray([1.0, -1.0], clf.dtype)
+    clf.b_ = jnp.asarray(0.0, clf.dtype)
+    clf.gamma_ = 0.5
+    xq = np.array([[1.0]])
+    assert float(clf.decision_function(xq)[0]) == 0.0
+    assert clf.predict(xq)[0] == 7                       # df >= 0 -> classes_[1]
+
+
+def test_oneclass_predict_zero_margin_is_inlier():
+    det = OneClassSVM(nu=0.5, gamma=0.5)
+    det.X_ = jnp.asarray([[0.0], [2.0]], det.dtype)
+    det.alpha_ = jnp.asarray([1.0, -1.0], det.dtype)
+    det.b_ = jnp.asarray(0.0, det.dtype)
+    det.gamma_ = 0.5
+    xq = np.array([[1.0]])
+    assert float(det.decision_function(xq)[0]) == 0.0
+    assert det.predict(xq)[0] == 1                       # +1, never 0
+
+
+def test_probe_predict_tie_returns_valid_class():
+    """OVR probes argmax scores — an exact tie still yields a real class
+    index (the audit counterpart of the sign-based bug)."""
+    X = jnp.asarray(np.random.default_rng(0).normal(size=(4, 3)))
+    alphas = jnp.asarray(np.tile([[0.3, -0.1, 0.2, -0.4]], (2, 1)))
+    probe = SVMProbe(X=X, alphas=alphas, biases=jnp.zeros(2), gamma=0.5,
+                     iterations=jnp.zeros(2, jnp.int32))
+    pred = np.asarray(predict_probe(probe, X))           # scores tie per row
+    assert set(pred.tolist()) <= {0, 1}

@@ -184,6 +184,56 @@ def test_oneclass_grid_fused_lanes_match_per_lane_facade():
                 float(one.fit_result_.objective), rtol=1e-6, atol=1e-12)
 
 
+def test_svr_grid_interpret_in_kernel_doubled_matches_jnp():
+    """Tier-1 acceptance for the in-kernel doubled row mode: a small
+    (gamma, eps, C) SVR grid through ``impl="interpret"`` (Pallas kernels,
+    base (lpad, dpad) X tile, half-offset reads — never a pre-tiled X)
+    reaches the jnp-engine objectives to 1e-6 on every lane."""
+    rng = np.random.default_rng(5)
+    X = rng.uniform(-2, 2, size=(32, 2))
+    y = np.sinc(X[:, 0]) + 0.05 * rng.normal(size=32)
+    Cs, epss, gammas = [1.0, 10.0], [0.05], [0.8]
+    r_jnp = grid_mod.solve_grid_svr(X, y, Cs, epss, gammas, CFG, impl="jnp")
+    r_int = grid_mod.solve_grid_svr(X, y, Cs, epss, gammas, CFG,
+                                    impl="interpret", block_l=128)
+    assert bool(jnp.all(r_int.converged))
+    np.testing.assert_allclose(np.asarray(r_int.objective),
+                               np.asarray(r_jnp.objective), rtol=1e-6)
+    # the folded dual agrees to KKT-tolerance level (trajectories differ
+    # by floating-point reassociation; the dual is only eps-determined)
+    np.testing.assert_allclose(np.asarray(qp_mod.svr_fold(r_int.alpha)),
+                               np.asarray(qp_mod.svr_fold(r_jnp.alpha)),
+                               atol=1e-3)
+
+
+def test_gram_bank_row_source_runs_on_interpret_backend():
+    """The Gram-bank row source is no longer jnp-only: with
+    ``precompute=True`` the bank gathers feed the rows-variant Pallas
+    kernels (interpret), for both the plain SVC grid and the doubled SVR
+    grid, matching the jnp bank path to 1e-6."""
+    rng = np.random.default_rng(6)
+    X = rng.normal(size=(30, 2))
+    y = np.sign(X[:, 0] * X[:, 1]) + (X[:, 0] * 0 + 0)   # XOR-ish labels
+    y[y == 0] = 1.0
+    r_jnp = grid_mod.solve_grid(X, y[None, :], [1.0, 8.0], [0.6], CFG,
+                                impl="jnp", precompute=True)
+    r_int = grid_mod.solve_grid(X, y[None, :], [1.0, 8.0], [0.6], CFG,
+                                impl="interpret", block_l=128,
+                                precompute=True)
+    assert bool(jnp.all(r_int.converged))
+    np.testing.assert_allclose(np.asarray(r_int.objective),
+                               np.asarray(r_jnp.objective), rtol=1e-6)
+    ys = np.sinc(X[:, 0])
+    s_jnp = grid_mod.solve_grid_svr(X, ys, [5.0], [0.05], [0.6], CFG,
+                                    impl="jnp", precompute=True)
+    s_int = grid_mod.solve_grid_svr(X, ys, [5.0], [0.05], [0.6], CFG,
+                                    impl="interpret", block_l=128,
+                                    precompute=True)
+    assert bool(jnp.all(s_int.converged))
+    np.testing.assert_allclose(np.asarray(s_int.objective),
+                               np.asarray(s_jnp.objective), rtol=1e-6)
+
+
 def test_svc_class_weight_box_and_engine_parity():
     """Per-class weighted C: the per-sample box is respected bitwise in
     both engines, the engines agree, and 'balanced' lifts minority recall
