@@ -13,6 +13,9 @@ generations where absolute wall times do not):
   at equal base l (interpret backend): guards the in-kernel doubled ε-SVR
   row mode staying within ~1.2x of the plain pass (the halved-matmul win —
   a regression toward the old pre-tiled-X 2x shows up here).
+* ``shrinking_speedup`` — t_off / t_on for the chunked fused driver with
+  the active-set shrinking + row-compaction knob on a skewed-straggler
+  grid (bar: >= 1.3x; guards the shrink/unshrink cycle staying a net win).
 
 Noise policy:
 
@@ -31,7 +34,8 @@ import json
 import os
 import sys
 
-METRICS = ("fused_batched_vs_sequential", "doubled_row_parity")
+METRICS = ("fused_batched_vs_sequential", "doubled_row_parity",
+           "shrinking_speedup")
 DEFAULT_TOLERANCE = 0.25
 
 

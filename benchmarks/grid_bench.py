@@ -29,6 +29,14 @@ cost must sit within ~1.2x of the base pass (``doubled_row_parity`` =
 t_base / t_doubled >= ~0.83) — the old pre-tiled-X launch paid ~2x (twice
 the blocks, twice the matmul width).  ``bench_gate.py`` gates this ratio.
 
+Each profile further carries a **shrinking** entry (ISSUE 6): the chunked
+fused driver (``solve_grid_compacted`` over the fused engine, which owns
+the hard row-compaction path) timed with ``shrinking=True`` vs ``False``
+on a skewed-straggler grid — a large-l, mostly-separable problem whose
+big-C lanes iterate long on a small free set, so the active-set mask plus
+physical row compaction shed most of the kernel width.
+``shrinking_speedup`` = t_off / t_on is recorded and gated (bar: >= 1.3x).
+
 ``run(profile=..., json_path=...)`` also emits the machine-readable
 ``BENCH_grid.json`` perf-trajectory record (see ``benchmarks.run --quick``).
 """
@@ -73,6 +81,20 @@ PROFILES = {
 ROW_PASS = {
     "quick": dict(l=256, d=32, B=8, iters=6, repeat=3, block_l=128),
     "full": dict(l=512, d=32, B=8, iters=6, repeat=3, block_l=128),
+}
+
+# Shrinking entry per profile: the chunked fused driver on a large-l
+# skewed-straggler grid, shrinking knob on vs off (see module docs).  Kept
+# out of PROFILES so the quick gate never times the vmapped engine at this
+# l — only the two chunked contenders run.
+SHRINK = {
+    # d=2 blobs at the default separation with a big-C straggler lane:
+    # ~9-18k iterations concentrated on ~50 free SVs of l rows, so the
+    # active-set mask + physical row compaction shed most kernel width
+    "quick": dict(l=512, d=2, k=2, n_gamma=2, g_range=(0.3, 1.0),
+                  Cs=[1.0, 256.0], repeat=3, chunk=256, eps=1e-5),
+    "full": dict(l=1024, d=2, k=2, n_gamma=2, g_range=(0.3, 1.0),
+                 Cs=[1.0, 256.0], repeat=3, chunk=256, eps=1e-5),
 }
 
 
@@ -164,6 +186,43 @@ def _row_pass_bench(spec: dict) -> dict:
     }
 
 
+def _shrink_bench(spec: dict) -> dict:
+    l, d, k, ng = spec["l"], spec["d"], spec["k"], spec["n_gamma"]
+    X, Y, gammas, Cs = _workload(l, d, k, ng, spec["g_range"], spec["Cs"])
+    cfg = SolverConfig(eps=spec["eps"])
+    lanes = ng * k
+    n_qp = lanes * len(Cs)
+    kw = dict(chunk=spec["chunk"], impl="jnp")
+    on = grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg,
+                                       shrinking=True, **kw)
+    off = grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg, **kw)
+    assert bool(jnp.all(on.converged)) and bool(jnp.all(off.converged))
+    np.testing.assert_allclose(np.asarray(on.objective),
+                               np.asarray(off.objective),
+                               rtol=1e-4, atol=1e-6)
+    fns = {
+        "chunked_fused_shrink_off": lambda: jax.block_until_ready(
+            grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg,
+                                          **kw).alpha),
+        "chunked_fused_shrink_on": lambda: jax.block_until_ready(
+            grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg,
+                                          shrinking=True, **kw).alpha),
+    }
+    secs = _interleaved_min(fns, spec["repeat"])
+    return {
+        "config": {"l": l, "d": d, "k": k, "n_gamma": ng,
+                   "g_range": spec["g_range"], "Cs": list(spec["Cs"]),
+                   "repeat": spec["repeat"], "shrink": True,
+                   "chunk": spec["chunk"]},
+        "lanes": lanes,
+        "n_qp": n_qp,
+        "eps": spec["eps"],
+        "seconds": secs,
+        "speedups": {"shrinking_speedup": (secs["chunked_fused_shrink_off"]
+                                           / secs["chunked_fused_shrink_on"])},
+    }
+
+
 def _interleaved_min(fns, repeat):
     """min wall time per contender, measured in alternating rounds."""
     for fn in fns.values():
@@ -235,6 +294,7 @@ def run_bench(profile: str = "full") -> dict:
             "speedups": speedups,
         })
     bench["configs"].append(_row_pass_bench(ROW_PASS[profile]))
+    bench["configs"].append(_shrink_bench(SHRINK[profile]))
     return bench
 
 

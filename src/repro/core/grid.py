@@ -43,9 +43,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import qp as qp_mod
-from repro.core.solver import SolveResult, SolverConfig, solve
+from repro.core.solver import (SolveResult, SolverConfig, resolve_shrink_cfg,
+                               solve)
 from repro.core.solver_fused import (FusedResult, solve_fused_batched,
-                                     solve_fused_batched_qp)
+                                     solve_fused_batched_qp,
+                                     solve_fused_chunked_qp)
 
 
 def sqdist(X: jax.Array) -> jax.Array:
@@ -131,9 +133,11 @@ def _use_bank(impl: str, precompute) -> bool:
     return bool(precompute)
 
 
-@partial(jax.jit, static_argnames=("cfg", "impl", "block_l", "precompute"))
+@partial(jax.jit, static_argnames=("cfg", "impl", "block_l", "precompute",
+                                   "shrinking"))
 def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
-                      impl: str, block_l: int, precompute) -> SolveResult:
+                      impl: str, block_l: int, precompute,
+                      shrinking: bool = False) -> SolveResult:
     k, l = Y.shape
     nG = gammas.shape[0]
     nC = Cs.shape[0]
@@ -145,10 +149,11 @@ def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
         bank = jnp.exp(-gammas[:, None, None] * sqdist(X))
         bidx = jnp.repeat(jnp.arange(nG, dtype=jnp.int32), k * nC)
         out = solve_fused_batched(X, Yf, Cf, gf, cfg, impl=impl,
-                                  block_l=block_l, gram=bank, gram_idx=bidx)
+                                  block_l=block_l, gram=bank, gram_idx=bidx,
+                                  shrinking=shrinking)
     else:
         out = solve_fused_batched(X, Yf, Cf, gf, cfg, impl=impl,
-                                  block_l=block_l)
+                                  block_l=block_l, shrinking=shrinking)
 
     def to_grid(leaf):                                   # (B, ...) leaves
         return leaf.reshape((nG, k, nC) + leaf.shape[1:])
@@ -172,8 +177,8 @@ def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
 
 def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
                warm_start: bool = True, impl: str | None = None,
-               block_l: int = 1024,
-               precompute: bool | None = None) -> SolveResult:
+               block_l: int = 1024, precompute: bool | None = None,
+               shrinking: bool = False) -> SolveResult:
     """Solve the full (gamma, class, C) grid in ONE compiled call.
 
     ``X``: (l, d) shared inputs; ``Y``: (k, l) signed label vectors (a 1-D
@@ -208,6 +213,15 @@ def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
     independent cold starts — same optima, more iterations (used by the
     parity tests).  The fused engine runs all C lanes concurrently from
     cold starts, so ``warm_start`` has no effect there.
+
+    ``shrinking=True`` turns on active-set shrinking in either engine:
+    the fused engine masks bound-pinned variables out of its scans
+    in-loop (soft shrinking, see
+    :func:`~repro.core.solver_fused.solve_fused_batched_qp`); the vmapped
+    engine enables its periodic ``cfg.shrink_every`` shrink-and-verify
+    cycle.  Optima are unchanged either way (full KKT re-check before any
+    lane converges); for the physical row-compaction speedup use
+    :func:`solve_grid_compacted`.
     """
     X = jnp.asarray(X)
     Y = jnp.asarray(Y)
@@ -219,10 +233,12 @@ def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
     Cs_j = jnp.asarray(Cs_np[order], X.dtype)
     gammas_j = jnp.asarray(gammas_np, X.dtype)
     if impl is None:
-        res = _solve_grid(X, Y, Cs_j, gammas_j, cfg, warm_start)
+        res = _solve_grid(X, Y, Cs_j, gammas_j,
+                          resolve_shrink_cfg(cfg, True) if shrinking
+                          else cfg, warm_start)
     else:
         res = _solve_grid_fused(X, Y, Cs_j, gammas_j, cfg, impl, block_l,
-                                precompute)
+                                precompute, shrinking)
     if np.any(order != np.arange(len(Cs_np))):
         inv = np.argsort(order, kind="stable")
         res = jax.tree.map(lambda leaf: jnp.take(leaf, inv, axis=2), res)
@@ -271,78 +287,54 @@ _CHUNK_COUNTERS = ("iterations", "n_planning", "n_free", "n_clipped",
 
 def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
                           cfg: SolverConfig, chunk: int, impl: str,
-                          block_l: int, precompute) -> SolveResult:
+                          block_l: int, precompute,
+                          shrinking: bool) -> SolveResult:
     """Chunked driver over the fused engine, FLAT lane layout.
 
     Like :func:`_solve_grid_fused` every (gamma, class, C) grid point is
-    its own cold-started lane — there is no C chain to scan — and between
-    chunks the host drops converged lanes (power-of-two bucketing keeps
-    the compile count logarithmic).  Compaction stacks with the in-kernel
-    freeze: frozen lanes cost masked no-op work only until the next chunk
-    boundary, after which they cost nothing.
+    its own cold-started lane — there is no C chain to scan.  The whole
+    lane/row compaction loop lives in
+    :func:`~repro.core.solver_fused.solve_fused_chunked_qp`: between
+    chunks the host drops converged lanes and (with ``shrinking=True``)
+    physically gathers the surviving base rows, so later chunks launch
+    their kernels over the live prefix only.  Compaction stacks with the
+    in-kernel freeze: frozen lanes cost masked no-op work only until the
+    next chunk boundary, after which they cost nothing.
     """
     k, l = Y.shape
     nG, nC = len(gammas_np), len(Cs_np)
-    B = nG * k * nC
     dtype = X.dtype
     Yf = np.repeat(np.tile(np.asarray(Y, np.float64), (nG, 1)), nC, axis=0)
     gam_lane = np.repeat(gammas_np, k * nC)
     C_lane = np.tile(Cs_np, nG * k)
-    g_of_lane = np.repeat(np.arange(nG, dtype=np.int32), k * nC)
-    use_bank = _use_bank(impl, precompute)
-    bank = (jnp.exp(-jnp.asarray(gammas_np, dtype)[:, None, None]
-                    * sqdist(X)) if use_bank else None)
-    # never exceed the caller's budget: the last chunk may be partial
-    ccfg = dataclasses.replace(cfg, max_iter=min(chunk, cfg.max_iter))
+    YC = Yf * C_lane[:, None]
+    bank_kw = {}
+    if _use_bank(impl, precompute):
+        bank_kw = dict(
+            gram=jnp.exp(-jnp.asarray(gammas_np, dtype)[:, None, None]
+                         * sqdist(X)),
+            gram_idx=np.repeat(np.arange(nG, dtype=np.int32), k * nC))
+    fr = solve_fused_chunked_qp(
+        X, Yf, np.minimum(0.0, YC), np.maximum(0.0, YC), gam_lane, cfg,
+        impl=impl, block_l=block_l, chunk=chunk, shrinking=shrinking,
+        **bank_kw)
+    n_free_sv = _free_sv_count(fr.alpha,
+                               jnp.asarray(np.minimum(0.0, YC), dtype),
+                               jnp.asarray(np.maximum(0.0, YC), dtype))
 
-    a_c = np.zeros((B, l))
-    g_c = Yf.copy()
-    out = {f: np.zeros((B,)) for f in
-           ("b", "objective", "kkt_gap", "converged", "iterations",
-            "n_planning")}
-    active = np.arange(B)
-    for _ in range(max(1, -(-cfg.max_iter // chunk))):
-        bsz = _bucket(len(active))
-        idx = np.concatenate([active,
-                              np.repeat(active[:1], bsz - len(active))])
-        bank_kw = (dict(gram=bank, gram_idx=jnp.asarray(g_of_lane[idx]))
-                   if use_bank else {})
-        res = solve_fused_batched(
-            X, jnp.asarray(Yf[idx], dtype), jnp.asarray(C_lane[idx], dtype),
-            jnp.asarray(gam_lane[idx], dtype), ccfg, impl=impl,
-            block_l=block_l, alpha0=jnp.asarray(a_c[idx], dtype),
-            G0=jnp.asarray(g_c[idx], dtype), **bank_kw)
-        n = len(active)
-        a_c[active] = np.asarray(res.alpha)[:n]
-        g_c[active] = np.asarray(res.G)[:n]
-        out["iterations"][active] += np.asarray(res.iterations)[:n]
-        out["n_planning"][active] += np.asarray(res.n_planning)[:n]
-        done = np.asarray(res.converged)[:n]
-        for f in ("b", "objective", "kkt_gap"):
-            out[f][active] = np.asarray(getattr(res, f))[:n]
-        out["converged"][active] = done
-        active = active[~done]
-        if len(active) == 0:
-            break
-
-    n_free_sv = np.asarray(_free_sv_count(
-        a_c, np.minimum(0.0, Yf * C_lane[:, None]),
-        np.maximum(0.0, Yf * C_lane[:, None])))
-
-    def shape(arr, dt=dtype):
-        return jnp.asarray(arr.reshape((nG, k, nC) + arr.shape[1:]), dt)
+    def shape(leaf):
+        return leaf.reshape((nG, k, nC) + leaf.shape[1:])
 
     zero = jnp.zeros((nG, k, nC), jnp.int32)
     untracked = jnp.full((nG, k, nC), UNTRACKED, jnp.int32)
     return SolveResult(
-        alpha=shape(a_c), b=shape(out["b"]), G=shape(g_c),
-        iterations=shape(out["iterations"], jnp.int32),
-        objective=shape(out["objective"]), kkt_gap=shape(out["kkt_gap"]),
-        converged=shape(out["converged"], bool),
-        n_planning=shape(out["n_planning"], jnp.int32),
-        n_free=untracked,
+        alpha=shape(fr.alpha), b=shape(fr.b), G=shape(fr.G),
+        iterations=shape(fr.iterations),
+        objective=shape(fr.objective), kkt_gap=shape(fr.kkt_gap),
+        converged=shape(fr.converged),
+        n_planning=shape(fr.n_planning), n_free=untracked,
         n_clipped=untracked, n_reverted=untracked,
-        n_free_sv=shape(n_free_sv, jnp.int32),
+        n_free_sv=shape(n_free_sv),
         trace=jnp.zeros((nG, k, nC, 1), dtype), n_trace=zero,
         steps_i=jnp.zeros((nG, k, nC, 1), jnp.int32),
         steps_j=jnp.zeros((nG, k, nC, 1), jnp.int32),
@@ -353,7 +345,8 @@ def solve_grid_compacted(X, Y, Cs, gammas,
                          cfg: SolverConfig = SolverConfig(), *,
                          chunk: int = 96, impl: str | None = None,
                          block_l: int = 1024,
-                         precompute: bool | None = None) -> SolveResult:
+                         precompute: bool | None = None,
+                         shrinking: bool = False) -> SolveResult:
     """Host-driven variant of :func:`solve_grid`: same (gamma, class, C)
     result axes, but the batch is re-compacted every ``chunk`` iterations so
     converged lanes stop consuming wall time.  This is the CPU throughput
@@ -377,6 +370,15 @@ def solve_grid_compacted(X, Y, Cs, gammas,
     ``alpha``/bounds in ``n_free_sv``.  The trace/step recording buffers
     are placeholders in both modes (chunk resumes reset the O(1)
     recording state).
+
+    ``shrinking=True`` adds active-set shrinking.  On the fused path the
+    chunked driver (:func:`~repro.core.solver_fused.solve_fused_chunked_qp`)
+    turns it into HARD row compaction: between chunks the bound-pinned
+    base rows no live lane can still move are physically gathered out,
+    so the kernels run at the shrunken width — real FLOP reduction, with
+    LIBSVM-style gradient reconstruction + full-KKT re-check before any
+    lane retires (unshrink events are counted per lane).  On the vmapped
+    path it enables the classic engine's ``cfg.shrink_every`` cycle.
     """
     X = jnp.asarray(X)
     Y = jnp.asarray(Y)
@@ -387,7 +389,9 @@ def solve_grid_compacted(X, Y, Cs, gammas,
     gammas_np = np.asarray(gammas, np.float64).reshape(-1)
     if impl is not None:
         return _compacted_fused_flat(X, Y, Cs_np, gammas_np, cfg, chunk,
-                                     impl, block_l, precompute)
+                                     impl, block_l, precompute, shrinking)
+    if shrinking:
+        cfg = resolve_shrink_cfg(cfg, True)
     order = np.argsort(Cs_np, kind="stable")
     nG, nC = len(gammas_np), len(Cs_np)
     B = nG * k
@@ -482,7 +486,8 @@ def solve_grid_compacted(X, Y, Cs, gammas,
 def solve_grid_svr(X, y, Cs, epsilons, gammas,
                    cfg: SolverConfig = SolverConfig(), *,
                    impl: str = "auto", block_l: int = 1024,
-                   precompute: bool | None = None) -> FusedResult:
+                   precompute: bool | None = None,
+                   shrinking: bool = False) -> FusedResult:
     """Solve the full ε-SVR (gamma, epsilon, C) grid as one fused lane batch.
 
     ``X``: (l, d); ``y``: (l,) real targets; ``Cs``: (n_C,); ``epsilons``:
@@ -495,7 +500,10 @@ def solve_grid_svr(X, y, Cs, epsilons, gammas,
     have leading axes ``(n_gamma, n_eps, n_C)``; ``alpha`` is the doubled
     (..., 2l) dual — fold with :func:`repro.core.qp.svr_fold` to (..., l)
     coefficients, after which :func:`grid_decision` evaluates the whole
-    grid (pass the eps axis in the class slot).
+    grid (pass the eps axis in the class slot).  ``shrinking=True``
+    enables in-loop soft shrinking over the doubled coordinates (the
+    per-lane active mask rides through the ``dup`` kernels like any
+    other lane state; see :func:`solve_fused_batched_qp`).
     """
     X = jnp.asarray(X)
     y = jnp.asarray(y)
@@ -521,14 +529,16 @@ def solve_grid_svr(X, y, Cs, epsilons, gammas,
             gram=jnp.exp(-gam_j[:, None, None] * sqdist(X)),
             gram_idx=jnp.repeat(jnp.arange(nG, dtype=jnp.int32), nE * nC))
     out = solve_fused_batched_qp(X, Pf, Lf, Uf, gf, cfg, impl=impl,
-                                 block_l=block_l, doubled=True, **bank_kw)
+                                 block_l=block_l, doubled=True,
+                                 shrinking=shrinking, **bank_kw)
     return jax.tree.map(
         lambda leaf: leaf.reshape((nG, nE, nC) + leaf.shape[1:]), out)
 
 
 def solve_grid_oneclass(X, nus, gammas, cfg: SolverConfig = SolverConfig(),
                         *, impl: str = "auto", block_l: int = 1024,
-                        precompute: bool | None = None) -> FusedResult:
+                        precompute: bool | None = None,
+                        shrinking: bool = False) -> FusedResult:
     """Solve the one-class (gamma, nu) grid as one fused lane batch.
 
     Every lane is the ν dual (``p = 0``, box ``[0, 1/(nu l)]``, ``sum(a) =
@@ -568,7 +578,7 @@ def solve_grid_oneclass(X, nus, gammas, cfg: SolverConfig = SolverConfig(),
         G0 = G0.reshape(nG * nN, l)
     out = solve_fused_batched_qp(X, Pf, Lf, Uf, gf, cfg, impl=impl,
                                  block_l=block_l, alpha0=alpha0, G0=G0,
-                                 **bank_kw)
+                                 shrinking=shrinking, **bank_kw)
     return jax.tree.map(
         lambda leaf: leaf.reshape((nG, nN) + leaf.shape[1:]), out)
 

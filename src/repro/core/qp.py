@@ -187,6 +187,56 @@ def kkt_gap(G: jax.Array, alpha: jax.Array, bounds: Bounds,
     return g_up - g_dn
 
 
+def finite_gap(gap: jax.Array) -> jax.Array:
+    """Clamp a KKT gap from empty-endpoint reductions to a finite value.
+
+    When one side of the box is fully pinned (tiny C, a one-class lane with
+    every alpha at a bound, or a fully-shrunk active set), the masked
+    max/min endpoints reduce over an empty set and the raw gap is -inf (or
+    NaN downstream).  An empty ``I_up`` or ``I_down`` means *no violating
+    pair exists*, so the correct gap is 0 — converged, finite.
+    """
+    return jnp.where(jnp.isfinite(gap), gap, jnp.zeros_like(gap))
+
+
+def safe_bias(g_up: jax.Array, g_dn: jax.Array) -> jax.Array:
+    """Bias from the KKT gap endpoints, robust to empty endpoint sets.
+
+    The textbook ``b = (g_up + g_dn) / 2`` is non-finite when either
+    masked reduction was empty (``g_up = -inf`` / ``g_dn = +inf``: one box
+    side fully pinned).  Like LIBSVM's ``Solver::calculate_rho`` fall back
+    to the surviving endpoint; 0 when both sides are empty (the C = 0
+    degenerate lane).
+    """
+    fin_up = jnp.isfinite(g_up)
+    fin_dn = jnp.isfinite(g_dn)
+    gu = jnp.where(fin_up, g_up, g_dn)
+    gd = jnp.where(fin_dn, g_dn, g_up)
+    return jnp.where(fin_up | fin_dn, 0.5 * (gu + gd),
+                     jnp.zeros_like(g_up))
+
+
+def shrink_mask(G: jax.Array, alpha: jax.Array, L: jax.Array,
+                U: jax.Array) -> jax.Array:
+    """Conservative active mask over the trailing coordinate axis (batched).
+
+    Drops bound-pinned variables that cannot belong to any violating pair
+    under the current gap endpoints: a variable at its lower bound only
+    acts as an ``i`` (up) candidate and is unpromising when
+    ``G_i < min_{I_down} G``; one at its upper bound only acts as a ``j``
+    (down) candidate, unpromising when ``G_j > max_{I_up} G``.  Interior
+    variables always stay active.  Leading axes broadcast, so this serves
+    the single-lane solver ((l,) inputs) and the fused lane batch
+    ((B, n)) alike.
+    """
+    up = alpha < U
+    dn = alpha > L
+    g_up = jnp.max(jnp.where(up, G, -jnp.inf), axis=-1, keepdims=True)
+    g_dn = jnp.min(jnp.where(dn, G, jnp.inf), axis=-1, keepdims=True)
+    inactive = (~dn & (G < g_dn)) | (~up & (G > g_up))
+    return ~inactive
+
+
 def is_feasible(alpha: jax.Array, bounds: Bounds, atol: float = 1e-9) -> jax.Array:
     """Feasibility predicate for property tests."""
     box = jnp.all((alpha >= bounds.lower - atol) & (alpha <= bounds.upper + atol))

@@ -118,25 +118,35 @@ class SolveResult:
     steps_mu: jax.Array
 
 
+# Refresh cadence used when a caller asks for ``shrinking=True`` without
+# setting ``SolverConfig.shrink_every`` (LIBSVM refreshes every min(l, 1000)
+# iterations; our conservative rule is cheap enough to run more often).
+DEFAULT_SHRINK_EVERY = 64
+
+
+def resolve_shrink_cfg(cfg: SolverConfig, shrinking) -> SolverConfig:
+    """Fold a ``shrinking=True|False|None`` knob into ``cfg.shrink_every``.
+
+    ``None`` defers to the config; ``True`` enables it with
+    :data:`DEFAULT_SHRINK_EVERY` when the config has no cadence of its own;
+    ``False`` forces it off.
+    """
+    if shrinking is None:
+        return cfg
+    every = (cfg.shrink_every or DEFAULT_SHRINK_EVERY) if shrinking else 0
+    if every == cfg.shrink_every:
+        return cfg
+    return dataclasses.replace(cfg, shrink_every=every)
+
+
 def _shrink_mask(G, alpha, bounds: Bounds):
     """Conservative adaptive shrinking: drop bound variables that cannot be
-    part of any violating pair under the current gap endpoints.
-
-    A variable at its lower bound only acts as an ``i`` (up) candidate; it is
-    unpromising when ``G_i < min_{I_down} G``.  A variable at its upper bound
-    only acts as a ``j`` (down) candidate; unpromising when
-    ``G_j > max_{I_up} G``.  Interior variables always stay active.  Masked
-    variables still receive exact gradient updates, so reactivation is free
-    (cf. DESIGN.md §3: shrinking is a mask on TPU, not a problem resize).
+    part of any violating pair under the current gap endpoints (the shared
+    rule in :func:`repro.core.qp.shrink_mask`).  Masked variables still
+    receive exact gradient updates, so reactivation is free (cf. DESIGN.md
+    §3: shrinking is a mask on TPU, not a problem resize).
     """
-    up = qp_mod.up_mask(alpha, bounds)
-    dn = qp_mod.down_mask(alpha, bounds)
-    g_up = jnp.max(jnp.where(up, G, -jnp.inf))
-    g_dn = jnp.min(jnp.where(dn, G, jnp.inf))
-    at_lower = ~dn   # alpha == L
-    at_upper = ~up   # alpha == U
-    inactive = (at_lower & (G < g_dn)) | (at_upper & (G > g_up))
-    return ~inactive
+    return qp_mod.shrink_mask(G, alpha, bounds.lower, bounds.upper)
 
 
 def _make_body(kernel, p, bounds: Bounds, diag, cfg: SolverConfig):
@@ -296,12 +306,13 @@ def _make_body(kernel, p, bounds: Bounds, diag, cfg: SolverConfig):
             refresh = (s.t % cfg.shrink_every) == (cfg.shrink_every - 1)
             active = jnp.where(refresh, _shrink_mask(G_new, alpha_new, bounds),
                                active)
-            gap_masked = qp_mod.kkt_gap(G_new, alpha_new, bounds, active)
+            gap_masked = qp_mod.finite_gap(
+                qp_mod.kkt_gap(G_new, alpha_new, bounds, active))
             # unshrink when the masked problem looks solved
             active = jnp.where(gap_masked <= eps, jnp.ones_like(active),
                                active)
 
-        gap = qp_mod.kkt_gap(G_new, alpha_new, bounds)
+        gap = qp_mod.finite_gap(qp_mod.kkt_gap(G_new, alpha_new, bounds))
         done = gap <= eps
 
         return SolverState(
@@ -340,7 +351,7 @@ def init_state(kernel, p, bounds: Bounds, cfg: SolverConfig,
     N = cfg.plan_candidates
     cap = cfg.trace_cap if cfg.record_trace else 1
     scap = cfg.step_cap if cfg.record_steps else 1
-    gap = qp_mod.kkt_gap(G0, alpha0, bounds)
+    gap = qp_mod.finite_gap(qp_mod.kkt_gap(G0, alpha0, bounds))
     return SolverState(
         alpha=alpha0, G=G0, t=jnp.asarray(0, jnp.int32),
         done=gap <= cfg.eps, gap=gap,
@@ -365,7 +376,7 @@ def _finalize(s: SolverState, p, bounds: Bounds) -> SolveResult:
     dn = qp_mod.down_mask(s.alpha, bounds)
     g_up = jnp.max(jnp.where(up, s.G, -jnp.inf))
     g_dn = jnp.min(jnp.where(dn, s.G, jnp.inf))
-    b = 0.5 * (g_up + g_dn)
+    b = qp_mod.safe_bias(g_up, g_dn)
     # f(a) = p.a - 1/2 a.Q a = 1/2 (p.a + G.a)  since G = p - Q a
     objective = 0.5 * (jnp.dot(p, s.alpha) + jnp.dot(s.G, s.alpha))
     n_free_sv = jnp.sum((s.alpha > bounds.lower)
@@ -379,10 +390,11 @@ def _finalize(s: SolverState, p, bounds: Bounds) -> SolveResult:
         steps_i=s.steps_i, steps_j=s.steps_j, steps_mu=s.steps_mu)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
+@partial(jax.jit, static_argnames=("cfg", "shrinking"))
 def solve_qp(kernel, qp: qp_mod.DualQP, cfg: SolverConfig = SolverConfig(),
              alpha0: Optional[jax.Array] = None,
-             G0: Optional[jax.Array] = None) -> SolveResult:
+             G0: Optional[jax.Array] = None, *,
+             shrinking: Optional[bool] = None) -> SolveResult:
     """Solve a general :class:`~repro.core.qp.DualQP` (``max p.a - 1/2
     a.Q a`` over a box with one equality constraint).
 
@@ -391,8 +403,12 @@ def solve_qp(kernel, qp: qp_mod.DualQP, cfg: SolverConfig = SolverConfig(),
     Problems whose feasible set does not contain 0 (one-class) must pass a
     feasible ``alpha0`` (``G0`` is reconstructed by one matvec if
     omitted).  jit-compiled; ``qp`` is traced data, so heterogeneous
-    batches vmap over one compilation.
+    batches vmap over one compilation.  ``shrinking`` overrides
+    ``cfg.shrink_every`` (see :func:`resolve_shrink_cfg`): ``True`` enables
+    the soft active-set mask, ``False`` disables it, ``None`` (default)
+    respects the config.
     """
+    cfg = resolve_shrink_cfg(cfg, shrinking)
     p = jnp.asarray(qp.p)
     bounds = qp.bounds
     diag = kernel.diag().astype(p.dtype)
@@ -408,22 +424,25 @@ def solve_qp(kernel, qp: qp_mod.DualQP, cfg: SolverConfig = SolverConfig(),
 
 def solve(kernel, y: jax.Array, C, cfg: SolverConfig = SolverConfig(),
           alpha0: Optional[jax.Array] = None,
-          G0: Optional[jax.Array] = None) -> SolveResult:
+          G0: Optional[jax.Array] = None, *,
+          shrinking: Optional[bool] = None) -> SolveResult:
     """Solve the dual SVM classification QP (eq. 1): the ``p = y`` instance
     of :func:`solve_qp`.
 
     ``C`` is a scalar budget or an (l,) per-sample vector (class-weighted
-    SVC).  Returns a :class:`SolveResult`.  jit-compiled; vmap over a batch
-    of QPs with e.g.
+    SVC).  ``shrinking=True|False`` overrides ``cfg.shrink_every`` (see
+    :func:`resolve_shrink_cfg`).  Returns a :class:`SolveResult`.
+    jit-compiled; vmap over a batch of QPs with e.g.
     ``jax.vmap(lambda K, y: solve(PrecomputedKernel(K), y, C, cfg))``.
     """
     y = jnp.asarray(y)
     qp = qp_mod.classification_qp(y, jnp.asarray(C, y.dtype))
-    return solve_qp(kernel, qp, cfg, alpha0, G0)
+    return solve_qp(kernel, qp, cfg, alpha0, G0, shrinking=shrinking)
 
 
 def solve_batched(Ks: jax.Array, ys: jax.Array, C,
-                  cfg: SolverConfig = SolverConfig()) -> SolveResult:
+                  cfg: SolverConfig = SolverConfig(), *,
+                  shrinking: Optional[bool] = None) -> SolveResult:
     """vmap-batched solve over a stack of precomputed-kernel QPs.
 
     ``Ks``: (B, l, l); ``ys``: (B, l); ``C``: scalar or (B,) per-problem
@@ -437,6 +456,7 @@ def solve_batched(Ks: jax.Array, ys: jax.Array, C,
     Cs = jnp.broadcast_to(jnp.asarray(C, ys.dtype), ys.shape[:1])
 
     def one(K, y, c):
-        return solve(qp_mod.PrecomputedKernel(K), y, c, cfg)
+        return solve(qp_mod.PrecomputedKernel(K), y, c, cfg,
+                     shrinking=shrinking)
 
     return jax.vmap(one)(jnp.asarray(Ks), ys, Cs)

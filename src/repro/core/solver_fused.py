@@ -40,11 +40,12 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import qp as qp_mod
 from repro.core import step as step_mod
 from repro.core.qp import TAU
-from repro.core.solver import SolverConfig
+from repro.core.solver import DEFAULT_SHRINK_EVERY, SolverConfig
 from repro.kernels import ops
 from repro.kernels import row_source
 
@@ -60,6 +61,10 @@ class FusedResult:
     kkt_gap: jax.Array
     converged: jax.Array
     n_planning: jax.Array
+    # number of unshrink events (a lane's masked problem looked solved but
+    # the full KKT check failed, forcing reactivation); 0 when shrinking is
+    # off or never triggered a reconstruction
+    n_unshrink: jax.Array
 
 
 class _State(NamedTuple):
@@ -201,7 +206,7 @@ def solve_fused(X, y, C, gamma, cfg: SolverConfig = SolverConfig(),
         G_new, i_next, g_i_next, g_dn = ops.rbf_update_wss(
             X, sqn, G, k_i, alpha_new, L, U, jnp.take(X, j_sel, axis=0),
             mu, gamma, impl=impl, block_l=block_l)
-        gap = g_i_next - g_dn
+        gap = qp_mod.finite_gap(g_i_next - g_dn)
 
         return _State(
             alpha=alpha_new, G=G_new, i=i_next.astype(jnp.int32),
@@ -221,7 +226,7 @@ def solve_fused(X, y, C, gamma, cfg: SolverConfig = SolverConfig(),
     v_up = jnp.where(up0, G0, -jnp.inf)
     i0 = jnp.argmax(v_up).astype(jnp.int32)
     g_i0 = v_up[i0]
-    gap0 = g_i0 - jnp.min(jnp.where(dn0, G0, jnp.inf))
+    gap0 = qp_mod.finite_gap(g_i0 - jnp.min(jnp.where(dn0, G0, jnp.inf)))
     z = jnp.asarray(0, jnp.int32)
     s0 = _State(alpha=alpha0, G=G0, i=i0, g_i=g_i0, gap=gap0, t=z,
                 done=gap0 <= eps, pi=z, pj=z, qi=z, qj=z, n_hist=z,
@@ -236,9 +241,10 @@ def solve_fused(X, y, C, gamma, cfg: SolverConfig = SolverConfig(),
     g_up = jnp.max(jnp.where(up, s.G, -jnp.inf))
     g_dn = jnp.min(jnp.where(dn, s.G, jnp.inf))
     return FusedResult(
-        alpha=s.alpha, b=0.5 * (g_up + g_dn), G=s.G, iterations=s.t,
+        alpha=s.alpha, b=qp_mod.safe_bias(g_up, g_dn), G=s.G, iterations=s.t,
         objective=0.5 * (jnp.dot(y, s.alpha) + jnp.dot(s.G, s.alpha)),
-        kkt_gap=s.gap, converged=s.done, n_planning=s.n_planning)
+        kkt_gap=s.gap, converged=s.done, n_planning=s.n_planning,
+        n_unshrink=jnp.asarray(0, jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -264,6 +270,9 @@ class _BatchState(NamedTuple):
     prev_free: jax.Array      # (B,)
     prev_ratio_ok: jax.Array  # (B,)
     n_planning: jax.Array     # (B,)
+    act: jax.Array            # (B, n) bool active set ((B, 1) dummy when
+                              # shrinking is off)
+    n_unshrink: jax.Array     # (B,) unshrink (reactivation) events
 
 
 def _take_lane(M, idx):
@@ -271,12 +280,14 @@ def _take_lane(M, idx):
     return jnp.take_along_axis(M, idx[:, None], axis=1)[:, 0]
 
 
-@partial(jax.jit, static_argnames=("cfg", "impl", "block_l", "doubled"))
+@partial(jax.jit, static_argnames=("cfg", "impl", "block_l", "doubled",
+                                   "shrinking"))
 def solve_fused_batched_qp(X, P, L, U, gamma,
                            cfg: SolverConfig = SolverConfig(),
                            *, impl: str = "auto", block_l: int = 1024,
                            alpha0=None, G0=None, gram=None, gram_idx=None,
-                           doubled: bool = False) -> FusedResult:
+                           doubled: bool = False,
+                           shrinking: bool = False) -> FusedResult:
     """Solve a batch of B *general* dual QPs over shared ``X`` in ONE
     while_loop: per-lane linear term ``P`` (B, n), per-coordinate box
     ``L``/``U`` (B, n), per-lane RBF ``gamma`` (scalar or (B,)).
@@ -316,6 +327,22 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
       update algebra as XLA-fused jnp, ``"interpret"``/``"pallas"`` route
       the gathered rows through the rows-variant Pallas kernels.  Lanes
       sharing a gamma index the same bank entry — no per-lane Gram copies.
+
+    ``shrinking=True`` enables LIBSVM-style *soft* active-set shrinking:
+    every ``cfg.shrink_every`` iterations (default
+    :data:`~repro.core.solver.DEFAULT_SHRINK_EVERY`) bound-pinned
+    variables that cannot belong to any violating pair are masked out of
+    the pass A/B scans via a per-lane (B, n) active mask threaded through
+    the kernels.  The gradient update itself is never masked, so G stays
+    exact everywhere and unshrinking is free: a lane whose *masked* gap
+    reaches ``eps`` with a partial mask is reactivated in-loop (counted in
+    ``FusedResult.n_unshrink``) and only declared converged once the gap
+    over the FULL active set passes the check — objectives are identical
+    to the unshrunk engine up to selection-order float reassociation.
+    Soft shrinking keeps the scans O(n) (masked lanes still ride through
+    the kernels); the wall-clock win on CPU/host comes from
+    :func:`solve_fused_chunked_qp`, which periodically *compacts* rows and
+    lanes so the kernels launch over the live prefix only.
     """
     assert cfg.algorithm in ("smo", "pasmo")
     assert cfg.plan_candidates == 1
@@ -339,6 +366,7 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
     eps = cfg.eps
     eta = cfg.eta
     planning = cfg.algorithm == "pasmo"
+    period = cfg.shrink_every if cfg.shrink_every > 0 else DEFAULT_SHRINK_EVERY
     lanes = jnp.arange(B)
     if bank:
         src = row_source.bank_source(gram, gram_idx, gamma, dup=doubled)
@@ -362,12 +390,13 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
 
         active = ~s.done
         use_exact = jnp.asarray(planning) & (~s.p_smo) & (~s.prev_ratio_ok)
+        act_kw = s.act if shrinking else None
 
         # ---- pass A: j-selection (k_i stays in VMEM / the bank) ------------
         a_i, _, L_i, U_i = at_idx(s.i)
         j0, gain0 = ops.source_row_wss(src, G, alpha, L, U, s.i, a_i, L_i,
                                        U_i, s.g_i, use_exact, impl=impl,
-                                       block_l=block_l)
+                                       block_l=block_l, act=act_kw)
         a_j0, G_j0, L_j0, U_j0 = at_idx(j0)
 
         # ---- Alg. 3 extra candidate B^(t-2) (O(B d)) -----------------------
@@ -450,17 +479,41 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
 
         # lane freeze: converged lanes take a zero step — pass B becomes a
         # bitwise no-op on their G, alpha is untouched.  Both working-set
-        # coordinates update through ONE stacked scatter.
-        mu = jnp.where(active, jnp.where(do_plan, mu_plan, mu_smo), 0.0)
+        # coordinates update through ONE stacked scatter.  The isfinite
+        # guard freezes a lane for one repair iteration when an unshrink
+        # event left it with a stale -inf g_i (empty masked I_up).
+        mu = jnp.where(active & jnp.isfinite(lw),
+                       jnp.where(do_plan, mu_plan, mu_smo), 0.0)
         alpha_new = alpha.at[idx2, jnp.concatenate([i_sel, j_sel])].add(
             jnp.concatenate([mu, -mu]))
 
         # ---- pass B: k_i/k_j + update + next i + gap -----------------------
         G_new, i_next, g_i_next, g_dn = ops.source_update_wss(
             src, G, alpha_new, L, U, i_sel, j_sel, mu, impl=impl,
-            block_l=block_l)
-        gap = jnp.where(active, g_i_next - g_dn, s.gap)
-        done = s.done | (gap <= eps)
+            block_l=block_l, act=act_kw)
+        gap_new = qp_mod.finite_gap(g_i_next - g_dn)
+        if shrinking:
+            # a lane only counts as converged when its mask was FULL at the
+            # scan that produced the gap; a partial-mask "solved" lane is
+            # unshrunk in place and keeps iterating (G is exact everywhere,
+            # so reactivation costs nothing).
+            full_now = jnp.all(s.act, axis=1)
+            locally_done = gap_new <= eps
+            done = s.done | (active & locally_done & full_now)
+            refresh = (s.t % period) == (period - 1)
+            act2 = jax.lax.cond(
+                refresh,
+                lambda: qp_mod.shrink_mask(G_new, alpha_new, L, U),
+                lambda: s.act)
+            act2 = act2 | (locally_done & ~full_now)[:, None]
+            act_new = jnp.where((active & ~done)[:, None], act2, s.act)
+            n_unshrink = s.n_unshrink + (
+                active & locally_done & ~full_now).astype(jnp.int32)
+        else:
+            done = s.done | (gap_new <= eps)
+            act_new = s.act
+            n_unshrink = s.n_unshrink
+        gap = jnp.where(active, gap_new, s.gap)
 
         return _BatchState(
             alpha=alpha_new, G=G_new,
@@ -476,7 +529,8 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
             p_smo=jnp.where(active, ~do_plan, s.p_smo),
             prev_free=jnp.where(active, (~do_plan) & free_smo, s.prev_free),
             prev_ratio_ok=jnp.where(active, ratio_ok, s.prev_ratio_ok),
-            n_planning=s.n_planning + (do_plan & active).astype(jnp.int32))
+            n_planning=s.n_planning + (do_plan & active).astype(jnp.int32),
+            act=act_new, n_unshrink=n_unshrink)
 
     # ---- init ---------------------------------------------------------------
     if alpha0 is None:
@@ -492,14 +546,17 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
     v_up = jnp.where(up0, G0, -jnp.inf)
     i0 = jnp.argmax(v_up, axis=1).astype(jnp.int32)
     g_i0 = _take_lane(v_up, i0)
-    gap0 = g_i0 - jnp.min(jnp.where(dn0, G0, jnp.inf), axis=1)
+    gap0 = qp_mod.finite_gap(
+        g_i0 - jnp.min(jnp.where(dn0, G0, jnp.inf), axis=1))
     zB = jnp.zeros((B,), jnp.int32)
     fB = jnp.zeros((B,), bool)
+    act0 = jnp.ones((B, n) if shrinking else (B, 1), bool)
     s0 = _BatchState(alpha=alpha0, G=G0, i=i0, g_i=g_i0, gap=gap0,
                      t=jnp.asarray(0, jnp.int32), iters=zB,
                      done=gap0 <= eps, pi=zB, pj=zB, qi=zB, qj=zB,
                      n_hist=zB, p_smo=~fB, prev_free=fB,
-                     prev_ratio_ok=~fB, n_planning=zB)
+                     prev_ratio_ok=~fB, n_planning=zB,
+                     act=act0, n_unshrink=zB)
 
     s = jax.lax.while_loop(
         lambda s: jnp.any(~s.done) & (s.t < cfg.max_iter), body, s0)
@@ -509,16 +566,19 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
     g_up = jnp.max(jnp.where(up, s.G, -jnp.inf), axis=1)
     g_dn = jnp.min(jnp.where(dn, s.G, jnp.inf), axis=1)
     return FusedResult(
-        alpha=s.alpha, b=0.5 * (g_up + g_dn), G=s.G, iterations=s.iters,
+        alpha=s.alpha, b=qp_mod.safe_bias(g_up, g_dn), G=s.G,
+        iterations=s.iters,
         objective=0.5 * (jnp.sum(P * s.alpha, axis=1)
                          + jnp.sum(s.G * s.alpha, axis=1)),
-        kkt_gap=s.gap, converged=s.done, n_planning=s.n_planning)
+        kkt_gap=s.gap, converged=s.done, n_planning=s.n_planning,
+        n_unshrink=s.n_unshrink)
 
 
 def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
                         *, impl: str = "auto", block_l: int = 1024,
                         alpha0=None, G0=None, gram=None,
-                        gram_idx=None) -> FusedResult:
+                        gram_idx=None, shrinking: bool = False
+                        ) -> FusedResult:
     """Solve a batch of B RBF *classification* QPs over shared ``X`` in ONE
     while_loop — the ``p = y`` instance of :func:`solve_fused_batched_qp`.
 
@@ -538,4 +598,259 @@ def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
     return solve_fused_batched_qp(
         X, Y, jnp.minimum(0.0, YC), jnp.maximum(0.0, YC), gamma, cfg,
         impl=impl, block_l=block_l, alpha0=alpha0, G0=G0, gram=gram,
-        gram_idx=gram_idx, doubled=False)
+        gram_idx=gram_idx, doubled=False, shrinking=shrinking)
+
+
+# ---------------------------------------------------------------------------
+# Chunked host driver: hard row compaction + lane compaction
+# ---------------------------------------------------------------------------
+
+
+def _pow2(n: int) -> int:
+    """Smallest power of two >= n (bucketing keeps compile count log)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def solve_fused_chunked_qp(X, P, L, U, gamma,
+                           cfg: SolverConfig = SolverConfig(), *,
+                           impl: str = "auto", block_l: int = 1024,
+                           chunk: int = 96, shrinking: bool = False,
+                           doubled: bool = False, alpha0=None, G0=None,
+                           gram=None, gram_idx=None) -> FusedResult:
+    """Host-chunked :func:`solve_fused_batched_qp` with HARD compaction.
+
+    The in-loop shrinking of the batched engine is *soft* — masked rows
+    still ride through the kernels, so it saves selection work but not
+    FLOPs (JAX while_loop shapes are static).  This driver runs the
+    engine in chunks of ``chunk`` iterations and, between chunks,
+    physically compacts BOTH axes on the host:
+
+    * **lanes** — converged lanes are dropped from the batch (after the
+      full KKT check below), so the kernels launch over the live lanes
+      only;
+    * **rows** — with ``shrinking=True`` the LIBSVM shrink rule
+      (:func:`repro.core.qp.shrink_mask`, union over live lanes, doubled
+      halves folded onto the base axis) gathers the surviving base rows
+      into a dense prefix: the next chunk's kernels run at the shrunken
+      width.  Both axes are power-of-two bucketed to keep the compile
+      count logarithmic.
+
+    Row compaction makes the per-chunk state G *stale on dropped
+    coordinates* (updates only touch kept rows; the kept-coordinate G
+    stays exact because the kept set only shrinks between unshrink
+    events).  Convergence is therefore never declared from the shrunken
+    problem alone: a lane whose chunk converges while rows are dropped
+    gets the LIBSVM unshrink treatment — its full gradient is
+    reconstructed (``G = P - Q alpha`` via
+    :meth:`~repro.kernels.row_source.RowSource.matvec`) and the full-set
+    KKT gap is checked on the host.  Pass -> the lane retires; fail ->
+    ``n_unshrink`` increments, every live lane's gradient is
+    reconstructed and the row set resets to full for the next chunk.
+
+    Arguments mirror :func:`solve_fused_batched_qp` (including the
+    Gram-bank row source, which is sliced to the kept rows per chunk);
+    ``chunk`` is the iteration budget per sub-solve.  Returns a B-flat
+    :class:`FusedResult` whose ``iterations``/``n_planning``/
+    ``n_unshrink`` accumulate across chunks and whose ``G`` is exact on
+    every coordinate for every lane.
+    """
+    assert (alpha0 is None) == (G0 is None), \
+        "warm starts need the (alpha0, G0) pair"
+    assert (gram is None) == (gram_idx is None), \
+        "the Gram bank needs the (gram, gram_idx) pair"
+    bank = gram is not None
+    X = jnp.asarray(X)
+    dtype = X.dtype
+    P_np = np.asarray(P, np.float64)
+    B, n = P_np.shape
+    lb = X.shape[0]
+    assert n == (2 * lb if doubled else lb)
+    L_np = np.broadcast_to(np.asarray(L, np.float64), (B, n))
+    U_np = np.broadcast_to(np.asarray(U, np.float64), (B, n))
+    gam_np = np.broadcast_to(
+        np.asarray(gamma, np.float64).reshape(-1), (B,))
+    X_np = np.asarray(X, np.float64)
+    gram_np = None if not bank else np.asarray(gram, np.float64)
+    gidx_np = None if not bank else np.asarray(gram_idx, np.int32)
+    eps = float(cfg.eps)
+    ccfg = dataclasses.replace(cfg, max_iter=min(chunk, cfg.max_iter))
+
+    if alpha0 is None:
+        alpha = np.zeros((B, n))
+        G = P_np.copy()
+    else:
+        alpha = np.asarray(alpha0, np.float64).copy()
+        G = np.asarray(G0, np.float64).copy()
+
+    out_b = np.zeros(B)
+    out_gap = np.zeros(B)
+    out_obj = np.zeros(B)
+    out_conv = np.zeros(B, bool)
+    out_iter = np.zeros(B, np.int64)
+    out_plan = np.zeros(B, np.int64)
+    out_unshrink = np.zeros(B, np.int64)
+
+    live = np.arange(B)
+    keep = np.arange(lb)
+
+    def reconstruct(idx):
+        """Exact full-width G = P - Q alpha for lanes ``idx``."""
+        if bank:
+            src = row_source.bank_source(gram, jnp.asarray(gidx_np[idx]),
+                                         dup=doubled)
+        else:
+            src = row_source.rbf_source(X, jnp.asarray(gam_np[idx], dtype),
+                                        len(idx), dup=doubled)
+        mv = src.matvec(jnp.asarray(alpha[idx], dtype))
+        G[idx] = P_np[idx] - np.asarray(mv, np.float64)
+
+    def finalize(idx):
+        """Full-set (b, kkt_gap, objective) from exact host state."""
+        a, g = alpha[idx], G[idx]
+        up = a < U_np[idx]
+        dn = a > L_np[idx]
+        g_up = np.where(up, g, -np.inf).max(axis=1)
+        g_dn = np.where(dn, g, np.inf).min(axis=1)
+        gap = g_up - g_dn
+        gap = np.where(np.isfinite(gap), gap, 0.0)
+        fu, fd = np.isfinite(g_up), np.isfinite(g_dn)
+        gu = np.where(fu, g_up, np.where(fd, g_dn, 0.0))
+        gd = np.where(fd, g_dn, np.where(fu, g_up, 0.0))
+        b = np.where(fu | fd, 0.5 * (gu + gd), 0.0)
+        obj = 0.5 * np.sum((P_np[idx] + g) * a, axis=1)
+        return b, gap, obj
+
+    max_rounds = 4 * max(1, -(-cfg.max_iter // max(1, chunk))) + 16
+    for _ in range(max_rounds):
+        if len(live) == 0:
+            break
+        m, m_live = len(keep), len(live)
+        bsz, rb = _pow2(m_live), _pow2(m)
+        lanes = np.concatenate([live, np.repeat(live[:1], bsz - m_live)])
+        padc = rb - m
+
+        def gather(A):
+            """Kept-coordinate lane state, padded to the row bucket with
+            inert coords (L = U = 0: never selectable, G irrelevant)."""
+            sub = A[np.ix_(lanes, keep)]
+            z = np.zeros((bsz, padc))
+            if doubled:
+                sub2 = A[np.ix_(lanes, keep + lb)]
+                return np.concatenate([sub, z, sub2, z], axis=1)
+            return np.concatenate([sub, z], axis=1)
+
+        X_sub = jnp.asarray(np.concatenate(
+            [X_np[keep], np.zeros((padc, X_np.shape[1]))]), dtype)
+        bank_kw = {}
+        if bank:
+            gsub = np.zeros(gram_np.shape[:1] + (rb, rb))
+            gsub[:, :m, :m] = gram_np[:, keep[:, None], keep[None, :]]
+            bank_kw = dict(gram=jnp.asarray(gsub, dtype),
+                           gram_idx=jnp.asarray(gidx_np[lanes]))
+
+        res = solve_fused_batched_qp(
+            X_sub, jnp.asarray(gather(P_np), dtype),
+            jnp.asarray(gather(L_np), dtype),
+            jnp.asarray(gather(U_np), dtype),
+            jnp.asarray(gam_np[lanes], dtype), ccfg, impl=impl,
+            block_l=block_l, alpha0=jnp.asarray(gather(alpha), dtype),
+            G0=jnp.asarray(gather(G), dtype), doubled=doubled,
+            shrinking=shrinking, **bank_kw)
+
+        ra = np.asarray(res.alpha, np.float64)[:m_live]
+        rg = np.asarray(res.G, np.float64)[:m_live]
+        alpha[np.ix_(live, keep)] = ra[:, :m]
+        G[np.ix_(live, keep)] = rg[:, :m]
+        if doubled:
+            alpha[np.ix_(live, keep + lb)] = ra[:, rb:rb + m]
+            G[np.ix_(live, keep + lb)] = rg[:, rb:rb + m]
+        out_iter[live] += np.asarray(res.iterations, np.int64)[:m_live]
+        out_plan[live] += np.asarray(res.n_planning, np.int64)[:m_live]
+        out_unshrink[live] += np.asarray(res.n_unshrink,
+                                         np.int64)[:m_live]
+        conv = np.asarray(res.converged)[:m_live]
+
+        # ---- retire converged lanes (full KKT check when rows dropped) ----
+        need_unshrink = False
+        retired = np.zeros(m_live, bool)
+        cand = live[conv]
+        if len(cand):
+            if m < lb:
+                reconstruct(cand)
+            b_c, gap_c, obj_c = finalize(cand)
+            ok = gap_c <= eps
+            good = cand[ok]
+            out_b[good] = b_c[ok]
+            out_gap[good] = gap_c[ok]
+            out_obj[good] = obj_c[ok]
+            out_conv[good] = True
+            failed = cand[~ok]
+            if len(failed):
+                out_unshrink[failed] += 1
+                need_unshrink = True
+            retired[np.nonzero(conv)[0][ok]] = True
+
+        # ---- retire exhausted lanes (budget spent, unconverged) -----------
+        exh_pos = np.nonzero((~retired)
+                             & (out_iter[live] >= cfg.max_iter))[0]
+        if len(exh_pos):
+            exh = live[exh_pos]
+            if m < lb:
+                reconstruct(exh)
+            b_e, gap_e, obj_e = finalize(exh)
+            out_b[exh] = b_e
+            out_gap[exh] = gap_e
+            out_obj[exh] = obj_e
+            out_conv[exh] = gap_e <= eps
+            retired[exh_pos] = True
+
+        live = live[~retired]
+        if len(live) == 0:
+            break
+
+        if need_unshrink:
+            # stored G is stale on dropped coords for EVERY live lane
+            if m < lb:
+                reconstruct(live)
+            keep = np.arange(lb)
+        elif shrinking and m > 1:
+            # monotone row shrink from the exact kept-coordinate state:
+            # a base row survives if ANY live lane still needs it
+            cols = (np.concatenate([keep, keep + lb]) if doubled else keep)
+            a_k = alpha[np.ix_(live, cols)]
+            g_k = G[np.ix_(live, cols)]
+            L_k = L_np[np.ix_(live, cols)]
+            U_k = U_np[np.ix_(live, cols)]
+            up = a_k < U_k
+            dn = a_k > L_k
+            g_up = np.where(up, g_k, -np.inf).max(axis=1, keepdims=True)
+            g_dn = np.where(dn, g_k, np.inf).min(axis=1, keepdims=True)
+            act = ~((~dn & (g_k < g_dn)) | (~up & (g_k > g_up)))
+            union = act.any(axis=0)
+            if doubled:
+                union = union[:m] | union[m:]
+            if union.any() and not union.all():
+                keep = keep[union]
+
+    if len(live):
+        # safety bound hit: finalize the stragglers from exact state
+        if len(keep) < lb:
+            reconstruct(live)
+        b_l, gap_l, obj_l = finalize(live)
+        out_b[live] = b_l
+        out_gap[live] = gap_l
+        out_obj[live] = obj_l
+        out_conv[live] = gap_l <= eps
+
+    return FusedResult(
+        alpha=jnp.asarray(alpha, dtype), b=jnp.asarray(out_b, dtype),
+        G=jnp.asarray(G, dtype),
+        iterations=jnp.asarray(out_iter, jnp.int32),
+        objective=jnp.asarray(out_obj, dtype),
+        kkt_gap=jnp.asarray(out_gap, dtype),
+        converged=jnp.asarray(out_conv),
+        n_planning=jnp.asarray(out_plan, jnp.int32),
+        n_unshrink=jnp.asarray(out_unshrink, jnp.int32))

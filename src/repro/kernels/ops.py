@@ -187,7 +187,7 @@ def _unstack_halves(a, B: int, l: int):
 
 def rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i,
                         g_i, i_idx, use_exact, gammas, *, impl: str = "auto",
-                        block_l: int = 1024, dup: bool = False):
+                        block_l: int = 1024, dup: bool = False, act=None):
     """Batched pass A: per-lane WSS2 selection, returns (j (B,), gain (B,)).
 
     ``X``/``sqn`` are shared; ``G``/``alpha``/``L``/``U`` are (B, n); ``XQ``
@@ -196,13 +196,15 @@ def rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i,
     base ``X``/``sqn``): the jnp oracle computes the base (B, l) row and
     tiles it; the Pallas path stacks the lane state into (2, B, lpad)
     halves and the kernel reads the base row tile twice — the matmul never
-    widens past l.
+    widens past l.  ``act`` is an optional (B, n) active-set mask (soft
+    shrinking: restricts the j-scan only).
     """
     impl = resolve_impl(impl)
     if impl == "jnp":
         return ref_ops.rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq,
                                            a_i, L_i, U_i, g_i, i_idx,
-                                           use_exact, gammas, dup=dup)
+                                           use_exact, gammas, dup=dup,
+                                           act=act)
     l, d = X.shape
     H = 2 if dup else 1
     B = G.shape[0]
@@ -212,12 +214,14 @@ def rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i,
     scal = jnp.stack([sqq, jnp.broadcast_to(gammas, (B,)),
                       a_i, L_i, U_i, g_i,
                       use_exact.astype(dtype)], axis=1).astype(dtype)
+    act_st = (None if act is None
+              else _stack_halves(act.astype(dtype), H, bpad, lpad))
     bmax, barg = rbf_row_wss_batched_pallas(
         _pad_d(_pad_l(X, lpad), dpad), _pad_l(sqn, lpad),
         _stack_halves(G, H, bpad, lpad), _stack_halves(alpha, H, bpad, lpad),
         _stack_halves(L, H, bpad, lpad), _stack_halves(U, H, bpad, lpad),
         _pad_b(_pad_d(XQ, dpad), bpad), _pad_b(scal, bpad),
-        _pad_b(_iscal(i_idx, B), bpad),
+        _pad_b(_iscal(i_idx, B), bpad), act_st,
         block_l=block_l, interpret=(impl == "interpret"), base_l=l)
     j, gain = _first_max(bmax, barg)
     return j[:B], gain[:B]
@@ -225,19 +229,21 @@ def rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i,
 
 def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
                            mu, gammas, *, impl: str = "auto",
-                           block_l: int = 1024, dup: bool = False):
+                           block_l: int = 1024, dup: bool = False, act=None):
     """Batched pass B: returns (G_new (B, n), i_next, g_i_next, g_dn).
 
     Recomputes both *base* rows k_i/k_j against the shared X (no HBM
     round-trip for either); a lane with ``mu == 0`` leaves G bitwise
     unchanged.  ``dup`` selects the doubled ε-SVR operator exactly as in
     :func:`rbf_row_wss_batched` (in-kernel half reads, l-wide matmuls).
+    ``act`` optionally restricts the next-i scan and gap endpoints (the
+    gradient update is never masked).
     """
     impl = resolve_impl(impl)
     if impl == "jnp":
         return ref_ops.rbf_update_wss_batched(X, sqn, G, alpha_new, L, U,
                                               XQi, sqqi, XQj, sqqj, mu,
-                                              gammas, dup=dup)
+                                              gammas, dup=dup, act=act)
     l, d = X.shape
     H = 2 if dup else 1
     B = G.shape[0]
@@ -246,13 +252,15 @@ def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
     dtype = X.dtype
     scal = jnp.stack([sqqi, sqqj, jnp.broadcast_to(mu, (B,)),
                       jnp.broadcast_to(gammas, (B,))], axis=1).astype(dtype)
+    act_st = (None if act is None
+              else _stack_halves(act.astype(dtype), H, bpad, lpad))
     G_new, bmax, barg, bmin = rbf_update_wss_batched_pallas(
         _pad_d(_pad_l(X, lpad), dpad), _pad_l(sqn, lpad),
         _stack_halves(G, H, bpad, lpad),
         _stack_halves(alpha_new, H, bpad, lpad),
         _stack_halves(L, H, bpad, lpad), _stack_halves(U, H, bpad, lpad),
         _pad_b(_pad_d(XQi, dpad), bpad), _pad_b(_pad_d(XQj, dpad), bpad),
-        _pad_b(scal, bpad),
+        _pad_b(scal, bpad), act_st,
         block_l=block_l, interpret=(impl == "interpret"), base_l=l)
     i_next, g_i_next = _first_max(bmax, barg)
     return (_unstack_halves(G_new, B, l), i_next[:B], g_i_next[:B],
@@ -261,16 +269,18 @@ def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
 
 def row_wss_batched_rows(KR, G, alpha, L, U, a_i, L_i, U_i, g_i, i_idx,
                          use_exact, *, impl: str = "auto",
-                         block_l: int = 1024, dup: bool = False):
+                         block_l: int = 1024, dup: bool = False, act=None):
     """Batched pass A from pre-gathered *base* rows ``KR`` (B, l) — the
-    Gram-bank row source.  Same contract as :func:`rbf_row_wss_batched`;
-    the jnp path tiles the rows for the doubled operator, the Pallas path
-    reads the row tile once per half in-kernel."""
+    Gram-bank row source.  Same contract as :func:`rbf_row_wss_batched`
+    (including the optional ``act`` mask); the jnp path tiles the rows for
+    the doubled operator, the Pallas path reads the row tile once per half
+    in-kernel."""
     impl = resolve_impl(impl)
     if impl == "jnp":
         k = ref_ops.tile_rows(KR) if dup else KR
         return ref_ops.row_wss_batched_from_k(k, G, alpha, L, U, a_i, L_i,
-                                              U_i, g_i, i_idx, use_exact)
+                                              U_i, g_i, i_idx, use_exact,
+                                              act=act)
     B, l = KR.shape
     H = 2 if dup else 1
     lpad = pad_dims(l, 1, block_l)[0]
@@ -278,11 +288,13 @@ def row_wss_batched_rows(KR, G, alpha, L, U, a_i, L_i, U_i, g_i, i_idx,
     dtype = KR.dtype
     scal = jnp.stack([a_i, L_i, U_i, g_i,
                       use_exact.astype(dtype)], axis=1).astype(dtype)
+    act_st = (None if act is None
+              else _stack_halves(act.astype(dtype), H, bpad, lpad))
     bmax, barg = row_wss_batched_rows_pallas(
         _pad_bl(KR, bpad, lpad), _stack_halves(G, H, bpad, lpad),
         _stack_halves(alpha, H, bpad, lpad),
         _stack_halves(L, H, bpad, lpad), _stack_halves(U, H, bpad, lpad),
-        _pad_b(scal, bpad), _pad_b(_iscal(i_idx, B), bpad),
+        _pad_b(scal, bpad), _pad_b(_iscal(i_idx, B), bpad), act_st,
         block_l=block_l, interpret=(impl == "interpret"), base_l=l)
     j, gain = _first_max(bmax, barg)
     return j[:B], gain[:B]
@@ -290,7 +302,7 @@ def row_wss_batched_rows(KR, G, alpha, L, U, a_i, L_i, U_i, g_i, i_idx,
 
 def update_wss_batched_rows(KRi, KRj, G, alpha_new, L, U, mu, *,
                             impl: str = "auto", block_l: int = 1024,
-                            dup: bool = False):
+                            dup: bool = False, act=None):
     """Batched pass B from pre-gathered *base* rows — the Gram-bank row
     source.  Same contract as :func:`rbf_update_wss_batched`."""
     impl = resolve_impl(impl)
@@ -298,19 +310,22 @@ def update_wss_batched_rows(KRi, KRj, G, alpha_new, L, U, mu, *,
         ki = ref_ops.tile_rows(KRi) if dup else KRi
         kj = ref_ops.tile_rows(KRj) if dup else KRj
         return ref_ops.update_wss_batched_from_rows(G, ki, kj, mu,
-                                                    alpha_new, L, U)
+                                                    alpha_new, L, U,
+                                                    act=act)
     B, l = KRi.shape
     H = 2 if dup else 1
     lpad = pad_dims(l, 1, block_l)[0]
     bpad = pad_lanes(B)
     dtype = KRi.dtype
     scal = jnp.broadcast_to(mu, (B,)).astype(dtype)[:, None]
+    act_st = (None if act is None
+              else _stack_halves(act.astype(dtype), H, bpad, lpad))
     G_new, bmax, barg, bmin = update_wss_batched_rows_pallas(
         _pad_bl(KRi, bpad, lpad), _pad_bl(KRj, bpad, lpad),
         _stack_halves(G, H, bpad, lpad),
         _stack_halves(alpha_new, H, bpad, lpad),
         _stack_halves(L, H, bpad, lpad), _stack_halves(U, H, bpad, lpad),
-        _pad_b(scal, bpad),
+        _pad_b(scal, bpad), act_st,
         block_l=block_l, interpret=(impl == "interpret"), base_l=l)
     i_next, g_i_next = _first_max(bmax, barg)
     return (_unstack_halves(G_new, B, l), i_next[:B], g_i_next[:B],
@@ -324,27 +339,30 @@ def update_wss_batched_rows(KRi, KRj, G, alpha_new, L, U, mu, *,
 
 def source_row_wss(src: RowSource, G, alpha, L, U, i_idx, a_i, L_i, U_i,
                    g_i, use_exact, *, impl: str = "auto",
-                   block_l: int = 1024):
+                   block_l: int = 1024, act=None):
     """Batched pass A against any :class:`~repro.kernels.row_source.RowSource`.
 
+    ``act`` is an optional (B, n) active-set mask (soft shrinking).
     Returns (j (B,), gain (B,)) — the per-lane WSS2 selection.
     """
     if src.is_bank:
         KR = src.query(i_idx).astype(G.dtype)
         return row_wss_batched_rows(KR, G, alpha, L, U, a_i, L_i, U_i, g_i,
                                     i_idx, use_exact, impl=impl,
-                                    block_l=block_l, dup=src.dup)
+                                    block_l=block_l, dup=src.dup, act=act)
     XQ, sqq = src.query(i_idx)
     return rbf_row_wss_batched(src.X, src.sqn, G, alpha, L, U, XQ, sqq,
                                a_i, L_i, U_i, g_i, i_idx, use_exact,
                                src.gammas, impl=impl, block_l=block_l,
-                               dup=src.dup)
+                               dup=src.dup, act=act)
 
 
 def source_update_wss(src: RowSource, G, alpha_new, L, U, i_idx, j_idx, mu,
-                      *, impl: str = "auto", block_l: int = 1024):
+                      *, impl: str = "auto", block_l: int = 1024, act=None):
     """Batched pass B against any :class:`~repro.kernels.row_source.RowSource`.
 
+    ``act`` is an optional (B, n) active-set mask (soft shrinking; the
+    gradient update itself is never masked).
     Returns (G_new (B, n), i_next (B,), g_i_next (B,), g_dn (B,)).
     """
     B = G.shape[0]
@@ -353,12 +371,13 @@ def source_update_wss(src: RowSource, G, alpha_new, L, U, i_idx, j_idx, mu,
         rows = src.query(stacked).astype(G.dtype)   # ONE (2B, l) gather
         return update_wss_batched_rows(rows[:B], rows[B:], G, alpha_new,
                                        L, U, mu, impl=impl,
-                                       block_l=block_l, dup=src.dup)
+                                       block_l=block_l, dup=src.dup,
+                                       act=act)
     XQ, sqq = src.query(stacked)
     return rbf_update_wss_batched(src.X, src.sqn, G, alpha_new, L, U,
                                   XQ[:B], sqq[:B], XQ[B:], sqq[B:], mu,
                                   src.gammas, impl=impl, block_l=block_l,
-                                  dup=src.dup)
+                                  dup=src.dup, act=act)
 
 
 def gram(X1, X2=None, gamma=1.0, *, impl: str = "auto",

@@ -89,7 +89,7 @@ def _kernel(xq_ref, scal_ref, iscal_ref, X_ref, sqn_ref, G_ref, alpha_ref,
 
 
 def _select_from_k(k, G, alpha, L, U, scal, i_idx, b, *, block_l: int,
-                   base_l: int):
+                   base_l: int, act=None):
     """Shared WSS2 selection algebra over the (H, B, BL) state halves.
 
     ``k`` is the (B, BL) *base* kernel-row tile; the doubled ε-SVR operator
@@ -97,6 +97,8 @@ def _select_from_k(k, G, alpha, L, U, scal, i_idx, b, *, block_l: int,
     base row tiled, so the duplication is index arithmetic, not a second
     matmul.  The global coordinate of half h is ``h * base_l + offset``
     (``base_l`` is the TRUE base example count — padded tails are inert).
+    ``act`` is an optional (H, B, BL) active-set tile in the data dtype
+    (1.0 active / 0.0 shrunk) that further masks the j-scan.
     Returns the per-block (best (B, 1), arg (B, 1) int32) pair.
     """
     H = G.shape[0]
@@ -121,6 +123,8 @@ def _select_from_k(k, G, alpha, L, U, scal, i_idx, b, *, block_l: int,
         gidx = (h * base_l + b * block_l
                 + jax.lax.broadcasted_iota(jnp.int32, k.shape, 1))
         mask = (ah > Lh) & (l_vec > 0) & (gidx != i_idx)
+        if act is not None:
+            mask = mask & (act[h] > 0.5)
         vals = jnp.where(mask, gains, -jnp.inf)
         arg = jnp.argmax(vals, axis=1).astype(jnp.int32)
         m = jnp.max(vals, axis=1)
@@ -133,9 +137,7 @@ def _select_from_k(k, G, alpha, L, U, scal, i_idx, b, *, block_l: int,
     return best[:, None], barg[:, None]
 
 
-def _kernel_batched(xq_ref, scal_ref, iscal_ref, X_ref, sqn_ref, G_ref,
-                    alpha_ref, L_ref, U_ref, bmax_out, barg_out,
-                    *, block_l: int, base_l: int):
+def _kernel_batched(*refs, block_l: int, base_l: int, masked: bool = False):
     """Lane-batched pass A (rbf row source): every lane shares the (BL, d)
     X tile.
 
@@ -144,7 +146,12 @@ def _kernel_batched(xq_ref, scal_ref, iscal_ref, X_ref, sqn_ref, G_ref,
     registers.  Unlike the single-lane kernel no k-row is written back —
     the batched pass B recomputes it, trading one extra matmul for an HBM
     round-trip of (B, l) and for launch-free Alg. 3 candidate swaps.
+    With ``masked=True`` an (H, B, BL) active-set tile rides first in the
+    ref list and restricts the j-scan (soft shrinking).
     """
+    act_ref, refs = (refs[0], refs[1:]) if masked else (None, refs)
+    (xq_ref, scal_ref, iscal_ref, X_ref, sqn_ref, G_ref, alpha_ref,
+     L_ref, U_ref, bmax_out, barg_out) = refs
     b = pl.program_id(0)
     sqq = scal_ref[:, 0:1]
     gamma = scal_ref[:, 1:2]
@@ -159,20 +166,24 @@ def _kernel_batched(xq_ref, scal_ref, iscal_ref, X_ref, sqn_ref, G_ref,
 
     bmax, barg = _select_from_k(
         k, G_ref[...], alpha_ref[...], L_ref[...], U_ref[...],
-        scal_ref[:, 2:], iscal_ref[...], b, block_l=block_l, base_l=base_l)
+        scal_ref[:, 2:], iscal_ref[...], b, block_l=block_l, base_l=base_l,
+        act=None if act_ref is None else act_ref[...])
     bmax_out[...] = bmax
     barg_out[...] = barg
 
 
-def _kernel_batched_rows(kr_ref, scal_ref, iscal_ref, G_ref, alpha_ref,
-                         L_ref, U_ref, bmax_out, barg_out,
-                         *, block_l: int, base_l: int):
+def _kernel_batched_rows(*refs, block_l: int, base_l: int,
+                         masked: bool = False):
     """Lane-batched pass A (rows source): the kernel-row tile arrives
     pre-gathered (Gram-bank mode) — same selection algebra, no matmul."""
+    act_ref, refs = (refs[0], refs[1:]) if masked else (None, refs)
+    (kr_ref, scal_ref, iscal_ref, G_ref, alpha_ref, L_ref, U_ref,
+     bmax_out, barg_out) = refs
     b = pl.program_id(0)
     bmax, barg = _select_from_k(
         kr_ref[...], G_ref[...], alpha_ref[...], L_ref[...], U_ref[...],
-        scal_ref[...], iscal_ref[...], b, block_l=block_l, base_l=base_l)
+        scal_ref[...], iscal_ref[...], b, block_l=block_l, base_l=base_l,
+        act=None if act_ref is None else act_ref[...])
     bmax_out[...] = bmax
     barg_out[...] = barg
 
@@ -180,7 +191,7 @@ def _kernel_batched_rows(kr_ref, scal_ref, iscal_ref, G_ref, alpha_ref,
 @functools.partial(jax.jit,
                    static_argnames=("block_l", "interpret", "base_l"))
 def rbf_row_wss_batched_pallas(X, sqn, G, alpha, L, U, XQ, scalars,
-                               iscalars, *, block_l: int = 1024,
+                               iscalars, act=None, *, block_l: int = 1024,
                                interpret: bool = False, base_l: int = 0):
     """Launch lane-batched pass A.  ``G``/``alpha``/``L``/``U`` are
     (H, B, lpad) stacks of the variable halves (H = 1 plain, H = 2 the
@@ -189,7 +200,8 @@ def rbf_row_wss_batched_pallas(X, sqn, G, alpha, L, U, XQ, scalars,
     (B, 7) float array [sqq, gamma, a_i, L_i, U_i, g_i, use_exact] and
     ``iscalars`` the (B, 1) int32 channel [i_idx] (global doubled index).
     ``base_l`` is the true base example count (half-1 coordinates are
-    ``base_l + offset``).
+    ``base_l + offset``).  ``act`` is an optional (H, B, lpad) active-set
+    stack in the data dtype (1.0/0.0; soft shrinking).
 
     Returns (block_max (B, nb), block_arg (B, nb)).
     """
@@ -205,33 +217,40 @@ def rbf_row_wss_batched_pallas(X, sqn, G, alpha, L, U, XQ, scalars,
         jax.ShapeDtypeStruct((B, nb), dtype),        # block max
         jax.ShapeDtypeStruct((B, nb), jnp.int32),    # block arg
     )
+    masked = act is not None
+    in_specs = [
+        pl.BlockSpec((B, d), lambda b: (0, 0)),          # XQ
+        pl.BlockSpec((B, 7), lambda b: (0, 0)),          # scalars
+        pl.BlockSpec((B, 1), lambda b: (0, 0)),          # iscalars
+        pl.BlockSpec((block_l, d), lambda b: (b, 0)),    # X
+        pl.BlockSpec((1, block_l), lambda b: (0, b)),    # sqn
+        lane_spec, lane_spec, lane_spec, lane_spec,
+    ]
+    args = [XQ, scalars, iscalars, X, sqn.reshape(1, lpad), G, alpha, L, U]
+    if masked:
+        in_specs.insert(0, lane_spec)
+        args.insert(0, act)
     bmax, barg = pl.pallas_call(
-        functools.partial(_kernel_batched, block_l=block_l, base_l=base_l),
+        functools.partial(_kernel_batched, block_l=block_l, base_l=base_l,
+                          masked=masked),
         grid=(nb,),
-        in_specs=[
-            pl.BlockSpec((B, d), lambda b: (0, 0)),          # XQ
-            pl.BlockSpec((B, 7), lambda b: (0, 0)),          # scalars
-            pl.BlockSpec((B, 1), lambda b: (0, 0)),          # iscalars
-            pl.BlockSpec((block_l, d), lambda b: (b, 0)),    # X
-            pl.BlockSpec((1, block_l), lambda b: (0, b)),    # sqn
-            lane_spec, lane_spec, lane_spec, lane_spec,
-        ],
+        in_specs=in_specs,
         out_specs=[blk_spec, blk_spec],
         out_shape=out_shapes,
         interpret=interpret,
-    )(XQ, scalars, iscalars, X, sqn.reshape(1, lpad), G, alpha, L, U)
+    )(*args)
     return bmax, barg
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block_l", "interpret", "base_l"))
 def row_wss_batched_rows_pallas(KR, G, alpha, L, U, scalars, iscalars,
-                                *, block_l: int = 1024,
+                                act=None, *, block_l: int = 1024,
                                 interpret: bool = False, base_l: int = 0):
     """Launch lane-batched pass A from pre-gathered base rows ``KR``
     (B, lpad) — the Gram-bank row source.  ``scalars`` is the packed
-    (B, 5) float array [a_i, L_i, U_i, g_i, use_exact]; the state stack
-    and ``iscalars``/``base_l`` are as in
+    (B, 5) float array [a_i, L_i, U_i, g_i, use_exact]; the state stack,
+    optional ``act`` stack and ``iscalars``/``base_l`` are as in
     :func:`rbf_row_wss_batched_pallas`.  Returns (block_max, block_arg).
     """
     H, B, lpad = G.shape
@@ -245,20 +264,26 @@ def row_wss_batched_rows_pallas(KR, G, alpha, L, U, scalars, iscalars,
         jax.ShapeDtypeStruct((B, nb), dtype),
         jax.ShapeDtypeStruct((B, nb), jnp.int32),
     )
+    masked = act is not None
+    in_specs = [
+        pl.BlockSpec((B, block_l), lambda b: (0, b)),    # KR
+        pl.BlockSpec((B, 5), lambda b: (0, 0)),          # scalars
+        pl.BlockSpec((B, 1), lambda b: (0, 0)),          # iscalars
+        lane_spec, lane_spec, lane_spec, lane_spec,
+    ]
+    args = [KR, scalars, iscalars, G, alpha, L, U]
+    if masked:
+        in_specs.insert(0, lane_spec)
+        args.insert(0, act)
     bmax, barg = pl.pallas_call(
         functools.partial(_kernel_batched_rows, block_l=block_l,
-                          base_l=base_l),
+                          base_l=base_l, masked=masked),
         grid=(nb,),
-        in_specs=[
-            pl.BlockSpec((B, block_l), lambda b: (0, b)),    # KR
-            pl.BlockSpec((B, 5), lambda b: (0, 0)),          # scalars
-            pl.BlockSpec((B, 1), lambda b: (0, 0)),          # iscalars
-            lane_spec, lane_spec, lane_spec, lane_spec,
-        ],
+        in_specs=in_specs,
         out_specs=[blk_spec, blk_spec],
         out_shape=out_shapes,
         interpret=interpret,
-    )(KR, scalars, iscalars, G, alpha, L, U)
+    )(*args)
     return bmax, barg
 
 

@@ -61,14 +61,17 @@ def _kernel(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, ki_ref, alpha_ref,
 
 
 def _update_from_rows(k_i, k_j, G, alpha, L, U, mu, b, *, block_l: int,
-                      base_l: int):
+                      base_l: int, act=None):
     """Shared pass-B algebra over the (H, B, BL) state halves.
 
     ``k_i``/``k_j`` are the (B, BL) *base* row tiles — the doubled ε-SVR
     operator (H = 2) applies them to each half in turn, so the duplicated
     row is index arithmetic, never a second matmul or a wider tile.  A lane
     with ``mu == 0`` leaves every half of G bitwise unchanged (the
-    in-kernel lane freeze).  Returns
+    in-kernel lane freeze).  ``act`` is an optional (H, B, BL) active-set
+    tile in the data dtype (1.0/0.0) restricting the next-i scan and the
+    gap endpoints; the gradient update itself stays unmasked — soft
+    shrinking keeps G exact on every coordinate.  Returns
     (G_new (H, B, BL), bmax (B, 1), barg (B, 1) int32, bmin (B, 1)).
     """
     H = G.shape[0]
@@ -77,6 +80,9 @@ def _update_from_rows(k_i, k_j, G, alpha, L, U, mu, b, *, block_l: int,
     for h in range(H):
         up = alpha[h] < U[h]
         dn = alpha[h] > L[h]
+        if act is not None:
+            up = up & (act[h] > 0.5)
+            dn = dn & (act[h] > 0.5)
         vals_up = jnp.where(up, G_new[h], -jnp.inf)
         arg = jnp.argmax(vals_up, axis=1).astype(jnp.int32)
         m = jnp.max(vals_up, axis=1)
@@ -91,9 +97,7 @@ def _update_from_rows(k_i, k_j, G, alpha, L, U, mu, b, *, block_l: int,
     return G_new, best[:, None], barg[:, None], bmin[:, None]
 
 
-def _kernel_batched(xqi_ref, xqj_ref, scal_ref, X_ref, sqn_ref, G_ref,
-                    alpha_ref, L_ref, U_ref, G_out, bmax_out, barg_out,
-                    bmin_out, *, block_l: int, base_l: int):
+def _kernel_batched(*refs, block_l: int, base_l: int, masked: bool = False):
     """Lane-batched pass B (rbf source): recompute BOTH base rows k_i, k_j
     against the shared X tile (two (B, d) x (d, BL) matmuls), update every
     state half in-register, and emit the per-lane next-i argmax plus both
@@ -101,8 +105,13 @@ def _kernel_batched(xqi_ref, xqj_ref, scal_ref, X_ref, sqn_ref, G_ref,
 
     Neither row ever touches HBM.  A lane with ``mu == 0`` writes G back
     bitwise unchanged — that is the in-kernel lane freeze: converged lanes
-    ride along as masked no-ops until every lane is done.
+    ride along as masked no-ops until every lane is done.  With
+    ``masked=True`` an (H, B, BL) active-set tile rides first in the ref
+    list and restricts the next-i scan / gap endpoints (soft shrinking).
     """
+    act_ref, refs = (refs[0], refs[1:]) if masked else (None, refs)
+    (xqi_ref, xqj_ref, scal_ref, X_ref, sqn_ref, G_ref, alpha_ref,
+     L_ref, U_ref, G_out, bmax_out, barg_out, bmin_out) = refs
     b = pl.program_id(0)
     # per-lane scalars: [sqq_i, sqq_j, mu, gamma]
     sqq_i = scal_ref[:, 0:1]
@@ -122,23 +131,27 @@ def _kernel_batched(xqi_ref, xqj_ref, scal_ref, X_ref, sqn_ref, G_ref,
 
     G_new, bmax, barg, bmin = _update_from_rows(
         k_i, k_j, G_ref[...], alpha_ref[...], L_ref[...], U_ref[...], mu,
-        b, block_l=block_l, base_l=base_l)
+        b, block_l=block_l, base_l=base_l,
+        act=None if act_ref is None else act_ref[...])
     G_out[...] = G_new.astype(G_out.dtype)
     bmax_out[...] = bmax
     barg_out[...] = barg
     bmin_out[...] = bmin
 
 
-def _kernel_batched_rows(kri_ref, krj_ref, scal_ref, G_ref, alpha_ref,
-                         L_ref, U_ref, G_out, bmax_out, barg_out, bmin_out,
-                         *, block_l: int, base_l: int):
+def _kernel_batched_rows(*refs, block_l: int, base_l: int,
+                         masked: bool = False):
     """Lane-batched pass B (rows source): both base row tiles arrive
     pre-gathered (Gram-bank mode) — same update algebra, no matmuls."""
+    act_ref, refs = (refs[0], refs[1:]) if masked else (None, refs)
+    (kri_ref, krj_ref, scal_ref, G_ref, alpha_ref, L_ref, U_ref,
+     G_out, bmax_out, barg_out, bmin_out) = refs
     b = pl.program_id(0)
     mu = scal_ref[:, 0:1]
     G_new, bmax, barg, bmin = _update_from_rows(
         kri_ref[...], krj_ref[...], G_ref[...], alpha_ref[...], L_ref[...],
-        U_ref[...], mu, b, block_l=block_l, base_l=base_l)
+        U_ref[...], mu, b, block_l=block_l, base_l=base_l,
+        act=None if act_ref is None else act_ref[...])
     G_out[...] = G_new.astype(G_out.dtype)
     bmax_out[...] = bmax
     barg_out[...] = barg
@@ -148,12 +161,13 @@ def _kernel_batched_rows(kri_ref, krj_ref, scal_ref, G_ref, alpha_ref,
 @functools.partial(jax.jit,
                    static_argnames=("block_l", "interpret", "base_l"))
 def rbf_update_wss_batched_pallas(X, sqn, G, alpha_new, L, U, XQi, XQj,
-                                  scalars, *, block_l: int = 1024,
+                                  scalars, act=None, *, block_l: int = 1024,
                                   interpret: bool = False, base_l: int = 0):
     """Launch lane-batched pass B.  The state leaves are (H, B, lpad) half
     stacks (H = 2 for the doubled ε-SVR operator); ``XQi``/``XQj`` are the
     (B, d) *base* query rows and ``scalars`` the packed (B, 4) array
-    [sqq_i, sqq_j, mu, gamma] per lane.  Returns
+    [sqq_i, sqq_j, mu, gamma] per lane.  ``act`` is an optional
+    (H, B, lpad) active-set stack (data dtype 1.0/0.0).  Returns
     (G_new (H, B, lpad), bmax_up (B, nb), barg_up (B, nb), bmin_dn (B, nb))."""
     H, B, lpad = G.shape
     d = X.shape[1]
@@ -169,32 +183,39 @@ def rbf_update_wss_batched_pallas(X, sqn, G, alpha_new, L, U, XQi, XQj,
         jax.ShapeDtypeStruct((B, nb), jnp.int32),
         jax.ShapeDtypeStruct((B, nb), dtype),
     )
+    masked = act is not None
+    in_specs = [
+        pl.BlockSpec((B, d), lambda b: (0, 0)),          # XQi
+        pl.BlockSpec((B, d), lambda b: (0, 0)),          # XQj
+        pl.BlockSpec((B, 4), lambda b: (0, 0)),          # scalars
+        pl.BlockSpec((block_l, d), lambda b: (b, 0)),    # X
+        pl.BlockSpec((1, block_l), lambda b: (0, b)),    # sqn
+        lane_spec, lane_spec, lane_spec, lane_spec,
+    ]
+    args = [XQi, XQj, scalars, X, sqn.reshape(1, lpad), G, alpha_new, L, U]
+    if masked:
+        in_specs.insert(0, lane_spec)
+        args.insert(0, act)
     G_new, bmax, barg, bmin = pl.pallas_call(
-        functools.partial(_kernel_batched, block_l=block_l, base_l=base_l),
+        functools.partial(_kernel_batched, block_l=block_l, base_l=base_l,
+                          masked=masked),
         grid=(nb,),
-        in_specs=[
-            pl.BlockSpec((B, d), lambda b: (0, 0)),          # XQi
-            pl.BlockSpec((B, d), lambda b: (0, 0)),          # XQj
-            pl.BlockSpec((B, 4), lambda b: (0, 0)),          # scalars
-            pl.BlockSpec((block_l, d), lambda b: (b, 0)),    # X
-            pl.BlockSpec((1, block_l), lambda b: (0, b)),    # sqn
-            lane_spec, lane_spec, lane_spec, lane_spec,
-        ],
+        in_specs=in_specs,
         out_specs=[lane_spec, blk_spec, blk_spec, blk_spec],
         out_shape=out_shapes,
         interpret=interpret,
-    )(XQi, XQj, scalars, X, sqn.reshape(1, lpad), G, alpha_new, L, U)
+    )(*args)
     return G_new, bmax, barg, bmin
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block_l", "interpret", "base_l"))
 def update_wss_batched_rows_pallas(KRi, KRj, G, alpha_new, L, U, scalars,
-                                   *, block_l: int = 1024,
+                                   act=None, *, block_l: int = 1024,
                                    interpret: bool = False, base_l: int = 0):
     """Launch lane-batched pass B from pre-gathered base rows ``KRi``/``KRj``
     (B, lpad) — the Gram-bank row source.  ``scalars`` is the packed (B, 1)
-    array [mu]; state stack and ``base_l`` as in
+    array [mu]; state stack, optional ``act`` stack and ``base_l`` as in
     :func:`rbf_update_wss_batched_pallas`."""
     H, B, lpad = G.shape
     assert lpad % block_l == 0, (lpad, block_l)
@@ -210,20 +231,26 @@ def update_wss_batched_rows_pallas(KRi, KRj, G, alpha_new, L, U, scalars,
         jax.ShapeDtypeStruct((B, nb), jnp.int32),
         jax.ShapeDtypeStruct((B, nb), dtype),
     )
+    masked = act is not None
+    in_specs = [
+        row_spec,                                        # KRi
+        row_spec,                                        # KRj
+        pl.BlockSpec((B, 1), lambda b: (0, 0)),          # scalars
+        lane_spec, lane_spec, lane_spec, lane_spec,
+    ]
+    args = [KRi, KRj, scalars, G, alpha_new, L, U]
+    if masked:
+        in_specs.insert(0, lane_spec)
+        args.insert(0, act)
     G_new, bmax, barg, bmin = pl.pallas_call(
         functools.partial(_kernel_batched_rows, block_l=block_l,
-                          base_l=base_l),
+                          base_l=base_l, masked=masked),
         grid=(nb,),
-        in_specs=[
-            row_spec,                                        # KRi
-            row_spec,                                        # KRj
-            pl.BlockSpec((B, 1), lambda b: (0, 0)),          # scalars
-            lane_spec, lane_spec, lane_spec, lane_spec,
-        ],
+        in_specs=in_specs,
         out_specs=[lane_spec, blk_spec, blk_spec, blk_spec],
         out_shape=out_shapes,
         interpret=interpret,
-    )(KRi, KRj, scalars, G, alpha_new, L, U)
+    )(*args)
     return G_new, bmax, barg, bmin
 
 

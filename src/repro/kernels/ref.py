@@ -88,12 +88,15 @@ def rbf_rows_batched(X, sqn, XQ, sqq, gammas, dup: bool = False):
 
 
 def row_wss_batched_from_k(k, G, alpha, L, U, a_i, L_i, U_i, g_i, i_idx,
-                           use_exact):
+                           use_exact, act=None):
     """Pass A selection algebra given the (B, l) kernel rows ``k``.
 
     Shared by the X-backed oracle below and the Gram-bank gather mode of
     :func:`repro.core.solver_fused.solve_fused_batched`.  RBF diag == 1 is
-    hardcoded (paper setting).  Returns (j (B,) int32, gain_j (B,)).
+    hardcoded (paper setting).  ``act`` optionally restricts the j-scan to
+    a per-lane (B, n) active set (soft shrinking: G stays exact
+    everywhere, only the selection is masked).  Returns
+    (j (B,) int32, gain_j (B,)).
     """
     lv = g_i[:, None] - G
     q = jnp.maximum(2.0 - 2.0 * k, TAU)
@@ -105,13 +108,16 @@ def row_wss_batched_from_k(k, G, alpha, L, U, a_i, L_i, U_i, g_i, i_idx,
     gains = jnp.where(use_exact[:, None], g_exact, g_tilde)
     idx = jnp.arange(G.shape[1], dtype=jnp.int32)
     mask = (alpha > L) & (lv > 0) & (idx[None, :] != i_idx[:, None])
+    if act is not None:
+        mask = mask & (act > 0.5)
     vals = jnp.where(mask, gains, -jnp.inf)
     j = jnp.argmax(vals, axis=1).astype(jnp.int32)
     return j, jnp.take_along_axis(vals, j[:, None], axis=1)[:, 0]
 
 
 def rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i,
-                        g_i, i_idx, use_exact, gammas, dup: bool = False):
+                        g_i, i_idx, use_exact, gammas, dup: bool = False,
+                        act=None):
     """Batched pass A oracle: WSS2 j-selection per lane.
 
     ``G``/``alpha``/``L``/``U`` are (B, n); ``XQ`` is (B, d); the remaining
@@ -122,19 +128,25 @@ def rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i,
     """
     k = rbf_rows_batched(X, sqn, XQ, sqq, gammas, dup=dup)
     return row_wss_batched_from_k(k, G, alpha, L, U, a_i, L_i, U_i, g_i,
-                                  i_idx, use_exact)
+                                  i_idx, use_exact, act=act)
 
 
-def update_wss_batched_from_rows(G, k_i, k_j, mu, alpha_new, L, U):
+def update_wss_batched_from_rows(G, k_i, k_j, mu, alpha_new, L, U, act=None):
     """Pass B update + stopping-scan algebra given both (B, l) rows.
 
     A lane with ``mu == 0`` is a bitwise no-op on G (the in-kernel
-    lane-freeze used by ``solve_fused_batched``).  Returns
+    lane-freeze used by ``solve_fused_batched``).  ``act`` optionally
+    restricts the next-i scan and the gap endpoints to a per-lane active
+    set; the gradient update itself is NEVER masked (soft shrinking keeps
+    G exact on every coordinate, so unshrinking is free).  Returns
     (G_new (B, l), i_next (B,), g_i_next (B,), g_dn (B,)).
     """
     G_new = G - mu[:, None] * (k_i - k_j)
     up = alpha_new < U
     dn = alpha_new > L
+    if act is not None:
+        up = up & (act > 0.5)
+        dn = dn & (act > 0.5)
     vals_up = jnp.where(up, G_new, -jnp.inf)
     i_next = jnp.argmax(vals_up, axis=1).astype(jnp.int32)
     g_i_next = jnp.take_along_axis(vals_up, i_next[:, None], axis=1)[:, 0]
@@ -143,7 +155,7 @@ def update_wss_batched_from_rows(G, k_i, k_j, mu, alpha_new, L, U):
 
 
 def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
-                           mu, gammas, dup: bool = False):
+                           mu, gammas, dup: bool = False, act=None):
     """Batched pass B oracle: k_i/k_j recompute + update + next i + gap ends.
 
     Both rows come from one stacked (2B, d) x (d, l) matmul (against the
@@ -156,7 +168,7 @@ def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
                           jnp.concatenate([sqqi, sqqj]),
                           jnp.concatenate([gammas, gammas]), dup=dup)
     return update_wss_batched_from_rows(G, Kr[:B], Kr[B:], mu, alpha_new,
-                                        L, U)
+                                        L, U, act=act)
 
 
 def gram(X, gamma):

@@ -101,6 +101,42 @@ class RowSource:
                               * jnp.take(self.X, b, axis=0), axis=-1))
         return jnp.exp(-jnp.tile(self.gammas, reps) * jnp.maximum(d2, 0.0))
 
+    def matvec(self, v, block: int = 256):
+        """Per-lane operator matvec ``Q_b v_b`` for a (B, n) stack.
+
+        Backs the LIBSVM-style gradient reconstruction
+        ``G = p - Q alpha`` after hard shrinking (see
+        :func:`repro.core.solver_fused.solve_fused_chunked_qp`).  The
+        doubled operator folds its halves first (``Q v = tile(K (v+ +
+        v-))``) so the contraction always runs at base width; the rbf
+        supplier blocks over rows of X like
+        :meth:`repro.core.qp.RBFKernel.matvec` but with per-lane gammas.
+        """
+        l = self.base_l
+        if self.dup:
+            v = v[:, :l] + v[:, l:]
+        if self.is_bank:
+            mv = jnp.einsum("sij,bj->sbi", self.gram, v)
+            out = mv[self.gram_idx, jnp.arange(v.shape[0])]
+        else:
+            X, sqn = self.X, self.sqn
+            d = X.shape[1]
+            pad = (-l) % block
+            Xp = jnp.pad(X, ((0, pad), (0, 0)))
+            sp = jnp.pad(sqn, (0, pad))
+
+            def blk(args):
+                Xb, nb = args
+                d2 = nb[:, None] + sqn[None, :] - 2.0 * (Xb @ X.T)
+                k = jnp.exp(-self.gammas[:, None, None]
+                            * jnp.maximum(d2, 0.0)[None])    # (B, block, l)
+                return jnp.einsum("bkl,bl->bk", k, v)
+
+            out = jax.lax.map(blk, (Xp.reshape(-1, block, d),
+                                    sp.reshape(-1, block)))
+            out = jnp.moveaxis(out, 0, 1).reshape(v.shape[0], -1)[:, :l]
+        return jnp.concatenate([out, out], axis=1) if self.dup else out
+
 
 def rbf_source(X, gammas, B: int, *, dup: bool = False) -> RowSource:
     """Row source recomputing rows from the shared ``X`` (l, d)."""

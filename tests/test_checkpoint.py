@@ -97,6 +97,7 @@ def test_elastic_reshard_restore(tmp_path):
     assert r["w"].sharding == sh["w"]
 
 
+@pytest.mark.slow
 def test_resilient_run_bit_exact_after_failures(tmp_path):
     """Kill the loop twice; the final state must equal the uninterrupted
     run (deterministic pipeline + step replay)."""

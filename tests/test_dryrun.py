@@ -82,7 +82,8 @@ class TestHloAnalyzer:
 
 
 _CELLS = [
-    ("qwen2-0.5b", "train_4k"),        # dense
+    pytest.param("qwen2-0.5b", "train_4k",  # dense (heaviest: slow tier)
+                 marks=pytest.mark.slow),
     ("mixtral-8x7b", "long_500k"),     # moe + SWA ring cache
     ("mamba2-370m", "decode_32k"),     # ssm state decode
     ("whisper-tiny", "prefill_32k"),   # enc-dec

@@ -59,7 +59,7 @@ class TestSolverEdgeCases:
     def test_warm_start_resumes(self):
         """Solving to eps=1e-2 then warm-starting to 1e-5 must reach the
         same optimum as a cold 1e-5 solve, in fewer additional steps."""
-        X, y = xor_gaussians(60, seed=0)
+        X, y = xor_gaussians(48, seed=0)
         kern = qp_mod.make_rbf(jnp.asarray(X), 0.5)
         yj = jnp.asarray(y)
         coarse = solve(kern, yj, 100.0,
@@ -127,13 +127,13 @@ class TestSolverEdgeCases:
 
     def test_shrinking_reactivation_correctness(self):
         """Aggressive shrinking interval still reaches the exact optimum."""
-        X, y = xor_gaussians(80, seed=3)
+        X, y = xor_gaussians(56, seed=3)
         kern = qp_mod.make_rbf(jnp.asarray(X), 0.5)
         yj = jnp.asarray(y)
-        base = solve(kern, yj, 100.0,
+        base = solve(kern, yj, 40.0,
                      SolverConfig(algorithm="pasmo", eps=1e-5))
         for every in (4, 64):
-            shr = solve(kern, yj, 100.0,
+            shr = solve(kern, yj, 40.0,
                         SolverConfig(algorithm="pasmo", eps=1e-5,
                                      shrink_every=every))
             assert bool(shr.converged)
@@ -141,6 +141,7 @@ class TestSolverEdgeCases:
                                        float(base.objective), rtol=1e-7)
 
 
+@pytest.mark.slow
 class TestFlashLongWindow:
     def test_window_band_long_sequence(self):
         """Windowed flash on a long sequence only schedules the band."""

@@ -14,7 +14,7 @@ from repro.svm.data import multiclass_blobs
 CFG = SolverConfig(eps=1e-4, max_iter=200_000)
 
 
-def _problem(n=90, k=3, seed=0, gamma=0.5):
+def _problem(n=72, k=3, seed=0, gamma=0.5):
     X, y = multiclass_blobs(n, seed=seed, k=k)
     X = jnp.asarray(X)
     classes, y_idx = mc.class_index(y)
@@ -36,7 +36,7 @@ def test_ovr_labels_structure():
 
 def test_ovr_matches_sequential_solves():
     """Batched OVR decision values == per-class sequential solves."""
-    X, Y, K, y_idx = _problem()
+    X, Y, K, y_idx = _problem(n=48)
     kern = qp_mod.PrecomputedKernel(K)
     res = mc.solve_ovr(kern, Y, 10.0, CFG)
     assert bool(jnp.all(res.converged))
@@ -56,6 +56,7 @@ def test_ovr_matches_sequential_solves():
     assert np.mean(pred == np.asarray(y_idx)) > 0.8
 
 
+@pytest.mark.slow
 def test_ovr_per_class_C():
     X, Y, K, _ = _problem()
     kern = qp_mod.PrecomputedKernel(K)
@@ -77,15 +78,16 @@ def test_ovr_per_class_C():
         assert float(jnp.max(jnp.abs(res.alpha[c]))) <= C + 1e-9
 
 
+@pytest.mark.slow
 def test_grid_one_call_matches_twelve_sequential():
     """Acceptance: a 3-class, 4-point C/gamma grid in ONE vmapped call gives
     the same predictions as the 12 equivalent sequential solves, each at the
     same KKT accuracy."""
-    X, Y, _, _ = _problem(n=80)
+    X, Y, _, _ = _problem(n=64)
     Cs = np.array([1.0, 20.0])
     gammas = np.array([0.3, 1.5])
     res = grid_mod.solve_grid(X, Y, Cs, gammas, CFG)
-    assert res.alpha.shape == (2, 3, 2, 80)
+    assert res.alpha.shape == (2, 3, 2, 64)
     assert bool(jnp.all(res.converged))
     assert float(jnp.max(res.kkt_gap)) <= CFG.eps + 1e-12
 
@@ -113,10 +115,11 @@ def test_grid_one_call_matches_twelve_sequential():
     assert n_checked == 12
 
 
+@pytest.mark.slow
 def test_grid_warm_start_matches_cold_start():
     """Warm-started C-path reaches the same KKT gap and optima as cold."""
-    X, Y, _, _ = _problem(n=70)
-    Cs = np.array([0.5, 2.0, 8.0, 32.0])
+    X, Y, _, _ = _problem(n=56)
+    Cs = np.array([0.5, 4.0, 32.0])
     gammas = np.array([0.8])
     warm = grid_mod.solve_grid(X, Y, Cs, gammas, CFG)
     cold = grid_mod.solve_grid(X, Y, Cs, gammas, CFG, warm_start=False)
@@ -131,14 +134,15 @@ def test_grid_warm_start_matches_cold_start():
         assert float(jnp.max(jnp.abs(warm.alpha[:, :, ci]))) <= C + 1e-9
 
 
+@pytest.mark.slow
 def test_grid_compacted_matches_fused():
     """The host-compacted driver reaches the same optima at the same KKT
     accuracy as the single fused call, with the same result axes."""
-    X, Y, _, _ = _problem(n=50)
+    X, Y, _, _ = _problem(n=40)
     Cs = np.array([1.0, 16.0])
     gammas = np.array([0.8])
     fused = grid_mod.solve_grid(X, Y, Cs, gammas, CFG)
-    comp = grid_mod.solve_grid_compacted(X, Y, Cs, gammas, CFG, chunk=50)
+    comp = grid_mod.solve_grid_compacted(X, Y, Cs, gammas, CFG, chunk=256)
     assert comp.alpha.shape == fused.alpha.shape
     assert bool(jnp.all(comp.converged))
     assert float(jnp.max(comp.kkt_gap)) <= CFG.eps + 1e-12
@@ -148,7 +152,7 @@ def test_grid_compacted_matches_fused():
 
 
 def test_grid_unsorted_C_axis_is_input_aligned():
-    X, Y, _, _ = _problem(n=60)
+    X, Y, _, _ = _problem(n=36)
     gammas = np.array([0.8])
     up = grid_mod.solve_grid(X, Y, np.array([1.0, 30.0]), gammas, CFG)
     dn = grid_mod.solve_grid(X, Y, np.array([30.0, 1.0]), gammas, CFG)
@@ -159,7 +163,7 @@ def test_grid_unsorted_C_axis_is_input_aligned():
 
 def test_warm_start_alpha0_without_G0():
     """solve() reconstructs the gradient through the oracle's matvec."""
-    X, Y, K, _ = _problem(n=60)
+    X, Y, K, _ = _problem(n=48)
     kern = qp_mod.PrecomputedKernel(K)
     y = Y[0]
     first = solve(kern, y, 5.0, CFG)

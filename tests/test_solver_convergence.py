@@ -115,19 +115,20 @@ class TestConvergenceToOptimum:
         np.testing.assert_allclose(float(shr.objective), float(base.objective),
                                    rtol=1e-6)
 
+    @pytest.mark.slow
     def test_batched_solver(self):
         Ks, ys = [], []
         for s in range(4):
-            K, y, C = _problem("xor", 40, seed=s)
+            K, y, C = _problem("xor", 32, seed=s)
             Ks.append(K)
             ys.append(y)
         res = solve_batched(jnp.asarray(np.stack(Ks)), jnp.asarray(np.stack(ys)),
-                            100.0, SolverConfig(algorithm="pasmo", eps=1e-5))
-        assert res.alpha.shape == (4, 40)
+                            50.0, SolverConfig(algorithm="pasmo", eps=1e-5))
+        assert res.alpha.shape == (4, 32)
         assert bool(jnp.all(res.converged))
         for s in range(4):
             single = solve(qp_mod.PrecomputedKernel(jnp.asarray(Ks[s])),
-                           jnp.asarray(ys[s]), 100.0,
+                           jnp.asarray(ys[s]), 50.0,
                            SolverConfig(algorithm="pasmo", eps=1e-5))
             np.testing.assert_allclose(float(res.objective[s]),
                                        float(single.objective), rtol=1e-9)

@@ -20,9 +20,10 @@ def _problem(name, n, seed=0):
 
 
 @pytest.mark.parametrize("alg", ["smo", "pasmo"])
-@pytest.mark.parametrize("name", ["blobs", "ring", "xor"])
+@pytest.mark.parametrize("name", [
+    "blobs", pytest.param("ring", marks=pytest.mark.slow), "xor"])
 def test_fused_jnp_matches_standard(alg, name):
-    X, y, C, gamma = _problem(name, 80)
+    X, y, C, gamma = _problem(name, 64)
     cfg = SolverConfig(algorithm=alg, eps=1e-4, max_iter=100_000)
     rf = solve_fused(jnp.asarray(X), jnp.asarray(y), C, gamma, cfg,
                      impl="jnp")

@@ -67,6 +67,7 @@ def test_gamma_scale_and_introspection():
     assert np.all(clf.n_support_ > 0)
 
 
+@pytest.mark.slow
 def test_precompute_false_matches_precompute_true():
     X, y = _binary_data(70, seed=6)
     a = SVC(C=10.0, gamma=1.0, eps=1e-4, precompute=True).fit(X, y)

@@ -74,6 +74,7 @@ def test_svr_fused_matches_dense_reference_oracle():
     assert abs(a.sum()) < 1e-8
 
 
+@pytest.mark.slow
 def test_svr_engine_parity_and_fit_quality():
     """Facade parity: SVR(engine='fused') == SVR(engine='batched') to 1e-6
     in objective and prediction; both actually fit the curve."""
@@ -121,6 +122,7 @@ def test_oneclass_fused_matches_dense_reference_oracle():
                                atol=1e-10)
 
 
+@pytest.mark.slow
 def test_oneclass_engine_parity_and_nu_semantics():
     """Facade parity fused vs batched; the training-outlier fraction tracks
     nu and the planted outliers score lowest."""
@@ -142,15 +144,16 @@ def test_oneclass_engine_parity_and_nu_semantics():
     assert dec[:5].mean() < dec[5:].mean()
 
 
+@pytest.mark.slow
 def test_svr_grid_fused_lanes_match_per_lane_facade():
     """A (gamma, eps, C) SVR grid is one flat fused lane batch; every lane
     equals the corresponding single-QP facade solve."""
     rng = np.random.default_rng(2)
     X = rng.uniform(-2, 2, size=(40, 2))
     y = np.sinc(X[:, 0]) * np.cos(X[:, 1]) + 0.05 * rng.normal(size=40)
-    Cs, epss, gammas = [1.0, 10.0], [0.02, 0.2], [0.5, 1.5]
+    Cs, epss, gammas = [1.0, 10.0], [0.02, 0.2], [0.5]
     res = grid_mod.solve_grid_svr(X, y, Cs, epss, gammas, CFG, **FUSED_KW)
-    assert res.alpha.shape == (2, 2, 2, 80)
+    assert res.alpha.shape == (1, 2, 2, 80)
     assert bool(jnp.all(res.converged))
     for gi, g in enumerate(gammas):
         for ei, e in enumerate(epss):
@@ -163,15 +166,16 @@ def test_svr_grid_fused_lanes_match_per_lane_facade():
     # fold + shared decision machinery across the whole grid
     beta = qp_mod.svr_fold(res.alpha)
     dec = grid_mod.grid_decision(X[:7], X, gammas, beta, res.b)
-    assert dec.shape == (2, 2, 2, 7)
+    assert dec.shape == (1, 2, 2, 7)
 
 
+@pytest.mark.slow
 def test_oneclass_grid_fused_lanes_match_per_lane_facade():
     """A (gamma, nu) one-class grid is one flat fused lane batch."""
-    X, _, _, _ = _oneclass_problem(l=50)
+    X, _, _, _ = _oneclass_problem(l=40)
     nus, gammas = [0.2, 0.4], [0.5, 1.0]
     res = grid_mod.solve_grid_oneclass(X, nus, gammas, CFG, **FUSED_KW)
-    assert res.alpha.shape == (2, 2, 50)
+    assert res.alpha.shape == (2, 2, 40)
     assert bool(jnp.all(res.converged))
     np.testing.assert_allclose(np.asarray(jnp.sum(res.alpha, axis=-1)),
                                1.0, atol=1e-10)
@@ -190,11 +194,13 @@ def test_svr_grid_interpret_in_kernel_doubled_matches_jnp():
     base (lpad, dpad) X tile, half-offset reads — never a pre-tiled X)
     reaches the jnp-engine objectives to 1e-6 on every lane."""
     rng = np.random.default_rng(5)
-    X = rng.uniform(-2, 2, size=(32, 2))
-    y = np.sinc(X[:, 0]) + 0.05 * rng.normal(size=32)
+    X = rng.uniform(-2, 2, size=(24, 2))
+    y = np.sinc(X[:, 0]) + 0.05 * rng.normal(size=24)
     Cs, epss, gammas = [1.0, 10.0], [0.05], [0.8]
-    r_jnp = grid_mod.solve_grid_svr(X, y, Cs, epss, gammas, CFG, impl="jnp")
-    r_int = grid_mod.solve_grid_svr(X, y, Cs, epss, gammas, CFG,
+    # backend parity is eps-independent; looser stop = cheaper interpret run
+    cfg = SolverConfig(eps=1e-4, max_iter=200_000)
+    r_jnp = grid_mod.solve_grid_svr(X, y, Cs, epss, gammas, cfg, impl="jnp")
+    r_int = grid_mod.solve_grid_svr(X, y, Cs, epss, gammas, cfg,
                                     impl="interpret", block_l=128)
     assert bool(jnp.all(r_int.converged))
     np.testing.assert_allclose(np.asarray(r_int.objective),
@@ -212,21 +218,24 @@ def test_gram_bank_row_source_runs_on_interpret_backend():
     kernels (interpret), for both the plain SVC grid and the doubled SVR
     grid, matching the jnp bank path to 1e-6."""
     rng = np.random.default_rng(6)
-    X = rng.normal(size=(30, 2))
+    X = rng.normal(size=(24, 2))
     y = np.sign(X[:, 0] * X[:, 1]) + (X[:, 0] * 0 + 0)   # XOR-ish labels
     y[y == 0] = 1.0
-    r_jnp = grid_mod.solve_grid(X, y[None, :], [1.0, 8.0], [0.6], CFG,
+    # backend parity is eps-independent (identical algorithm both sides),
+    # so a looser stop keeps this interpret-mode test cheap in tier-1
+    cfg = SolverConfig(eps=1e-4, max_iter=200_000)
+    r_jnp = grid_mod.solve_grid(X, y[None, :], [8.0], [0.6], cfg,
                                 impl="jnp", precompute=True)
-    r_int = grid_mod.solve_grid(X, y[None, :], [1.0, 8.0], [0.6], CFG,
+    r_int = grid_mod.solve_grid(X, y[None, :], [8.0], [0.6], cfg,
                                 impl="interpret", block_l=128,
                                 precompute=True)
     assert bool(jnp.all(r_int.converged))
     np.testing.assert_allclose(np.asarray(r_int.objective),
                                np.asarray(r_jnp.objective), rtol=1e-6)
     ys = np.sinc(X[:, 0])
-    s_jnp = grid_mod.solve_grid_svr(X, ys, [5.0], [0.05], [0.6], CFG,
+    s_jnp = grid_mod.solve_grid_svr(X, ys, [5.0], [0.05], [0.6], cfg,
                                     impl="jnp", precompute=True)
-    s_int = grid_mod.solve_grid_svr(X, ys, [5.0], [0.05], [0.6], CFG,
+    s_int = grid_mod.solve_grid_svr(X, ys, [5.0], [0.05], [0.6], cfg,
                                     impl="interpret", block_l=128,
                                     precompute=True)
     assert bool(jnp.all(s_int.converged))
@@ -239,9 +248,9 @@ def test_svc_class_weight_box_and_engine_parity():
     both engines, the engines agree, and 'balanced' lifts minority recall
     on an imbalanced blob."""
     rng = np.random.default_rng(4)
-    X = np.vstack([rng.normal(size=(90, 2)),
-                   rng.normal(size=(10, 2)) + 1.5])
-    y = np.array([0] * 90 + [1] * 10)
+    X = np.vstack([rng.normal(size=(54, 2)),
+                   rng.normal(size=(6, 2)) + 1.5])
+    y = np.array([0] * 54 + [1] * 6)
     plain = SVC(C=1.0, gamma=0.5, engine="fused").fit(X, y)
     fused = SVC(C=1.0, gamma=0.5, class_weight="balanced",
                 engine="fused").fit(X, y)
@@ -250,17 +259,17 @@ def test_svc_class_weight_box_and_engine_parity():
     np.testing.assert_allclose(float(fused.fit_result_.objective),
                                float(batched.fit_result_.objective),
                                rtol=1e-6)
-    w = fused._sample_weights(np.array([0] * 90 + [1] * 10), 2)
+    w = fused._sample_weights(np.array([0] * 54 + [1] * 6), 2)
     assert np.all(np.abs(np.asarray(fused.alpha_)) <= w + 1e-9)
     assert np.any(np.abs(np.asarray(fused.alpha_)) > 1.0 + 1e-9), \
         "the minority box must actually exceed the unweighted C"
-    rec_plain = float((plain.predict(X[90:]) == 1).mean())
-    rec_bal = float((fused.predict(X[90:]) == 1).mean())
+    rec_plain = float((plain.predict(X[54:]) == 1).mean())
+    rec_bal = float((fused.predict(X[54:]) == 1).mean())
     assert rec_bal > rec_plain
     # dict weights hit the same code path
     d = SVC(C=1.0, gamma=0.5, class_weight={0: 1.0, 1: 9.0},
             engine="fused").fit(X, y)
-    assert float((d.predict(X[90:]) == 1).mean()) >= rec_plain
+    assert float((d.predict(X[54:]) == 1).mean()) >= rec_plain
 
 
 def test_svr_rejects_bad_engine_and_unfitted_predict():

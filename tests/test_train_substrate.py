@@ -39,10 +39,14 @@ def test_optimizers_descend_quadratic(name):
     tc = TrainConfig(optimizer=name, learning_rate=0.05, weight_decay=0.0)
     params = {"x": x0}
     state = opt.init(params, tc)
-    for _ in range(400):
+
+    @jax.jit
+    def step(params, state):
         g = jax.grad(lambda p: loss(p["x"]))(params)
-        params, state = opt.update(g, state, params, tc,
-                                   lr=jnp.asarray(0.05))
+        return opt.update(g, state, params, tc, lr=jnp.asarray(0.05))
+
+    for _ in range(400):
+        params, state = step(params, state)
     final = float(loss(params["x"]))
     init = float(loss(x0))
     assert final < init - 0.5 * (init - float(loss(jnp.asarray(x_star))))
