@@ -17,8 +17,12 @@ Contenders for a (gamma, class, C) model-selection grid:
 
 Acceptance bar (ISSUE 2): ``fused_batched`` >= 2x over ``vmapped`` on the
 CPU jnp backend for a >= 24-lane heterogeneous grid at l ~ 512.  All
-timings are min-over-repeats measured in alternating rounds, so slow host
-windows (thread migration, cgroup throttling) hit every contender equally.
+timings run in alternating rounds, so slow host windows (thread
+migration, cgroup throttling) hit every contender equally; both the min
+and the median over rounds are recorded, and every gated speedup ratio is
+computed from the MEDIANS — a single lucky round used to move the
+checked-in ratios by tens of percent between otherwise identical runs
+(``bench_gate.py`` additionally supports per-record tolerances).
 
 Each profile also carries a **row-pass** micro-entry (ISSUE 5): the
 batched pass A + pass B kernel pair timed through the Pallas interpret
@@ -36,6 +40,27 @@ on a skewed-straggler grid — a large-l, mostly-separable problem whose
 big-C lanes iterate long on a small free set, so the active-set mask plus
 physical row compaction shed most of the kernel width.
 ``shrinking_speedup`` = t_off / t_on is recorded and gated (bar: >= 1.3x).
+
+With more than one attached device each profile adds a **sharded** entry
+(ISSUE 7): a 64-lane (gamma, class, C) grid solved by the single-device
+fused engine vs the lane-sharded engine
+(:mod:`repro.core.sharded_lanes`) over every device —
+``sharded_lanes_speedup`` = t_fused_single / t_sharded (bar: >= 2x under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  The workload
+(XOR data, gammas down to the near-linear regime, one big-C column) has
+a FEW extreme straggler lanes — the top lane runs ~80x the median
+iteration count: in that convergence tail the single-device batch drags
+ALL 64 lanes through every iteration (frozen lanes are masked no-ops
+whose kernel cost still scales with the lane count), while under the
+round-robin deal all but the stragglers' shards terminate their
+while_loops outright after a few thousand iterations.  Per-shard
+termination plus lane-proportional per-iteration cost is what the gate
+measures, so the speedup holds even on a single-CORE host where the
+forced host devices buy no hardware parallelism (measured 3.4x at
+l = 512 on one core); with real parallel devices it only grows.
+Sharded-vs-fused objective parity to 1e-6 on every lane is asserted
+before any timing.  On a single device the entry is skipped (the gate
+skips missing configs gracefully).
 
 ``run(profile=..., json_path=...)`` also emits the machine-readable
 ``BENCH_grid.json`` perf-trajectory record (see ``benchmarks.run --quick``).
@@ -81,6 +106,24 @@ PROFILES = {
 ROW_PASS = {
     "quick": dict(l=256, d=32, B=8, iters=6, repeat=3, block_l=128),
     "full": dict(l=512, d=32, B=8, iters=6, repeat=3, block_l=128),
+}
+
+# Sharded entry per profile (>1 device only): 8 gammas x 2 OVR lanes x
+# 4 Cs = 64 lanes on XOR data (see module docs).  The near-linear-gamma
+# big-C lanes are 10-80x the median iteration count and FEW (top-8 lane
+# iters ~[21k, 11k, 8k, 7k, 7k, 5k, 2k, 2k] vs median ~250 at l=512),
+# so after the round-robin deal most shards terminate their while_loops
+# in a few thousand iterations while the single-device batch drags all
+# 64 lanes through the ~21k-iteration tail.  Separable blob grids do NOT
+# show this: their big-C column is 16 near-equal stragglers, every slab
+# inherits one, and sharding buys ~1.1x.  eps is tight so the pre-timing
+# 1e-6 objective-parity assert is robust to slab-shape codegen (see the
+# sharded_lanes docstring) and the tail dominates the wall clock.
+SHARDED = {
+    "quick": dict(l=512, k=2, n_gamma=8, g_range=(0.02, 1.0),
+                  Cs=[0.25, 1.0, 4.0, 64.0], repeat=3, eps=1e-5),
+    "full": dict(l=512, k=2, n_gamma=8, g_range=(0.02, 1.0),
+                 Cs=[0.25, 1.0, 4.0, 64.0], repeat=4, eps=1e-5),
 }
 
 # Shrinking entry per profile: the chunked fused driver on a large-l
@@ -172,7 +215,7 @@ def _row_pass_bench(spec: dict) -> dict:
     fns = {name: (lambda st=st, dup=dup: [
         _row_pass_iteration(st, dup, block_l) for _ in range(iters)])
         for name, (st, dup) in states.items()}
-    secs = _interleaved_min(fns, spec["repeat"])
+    secs, meds = _interleaved_time(fns, spec["repeat"])
     return {
         "config": {"l": l, "d": d, "k": 0, "n_gamma": 0, "g_range": (0, 0),
                    "Cs": [], "repeat": spec["repeat"], "row_pass": True,
@@ -181,8 +224,9 @@ def _row_pass_bench(spec: dict) -> dict:
         "n_qp": B,
         "eps": 0.0,
         "seconds": secs,
-        "speedups": {"doubled_row_parity": (secs["row_pass_base"]
-                                            / secs["row_pass_doubled"])},
+        "seconds_median": meds,
+        "speedups": {"doubled_row_parity": (meds["row_pass_base"]
+                                            / meds["row_pass_doubled"])},
     }
 
 
@@ -208,7 +252,7 @@ def _shrink_bench(spec: dict) -> dict:
             grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg,
                                           shrinking=True, **kw).alpha),
     }
-    secs = _interleaved_min(fns, spec["repeat"])
+    secs, meds = _interleaved_time(fns, spec["repeat"])
     return {
         "config": {"l": l, "d": d, "k": k, "n_gamma": ng,
                    "g_range": spec["g_range"], "Cs": list(spec["Cs"]),
@@ -218,22 +262,79 @@ def _shrink_bench(spec: dict) -> dict:
         "n_qp": n_qp,
         "eps": spec["eps"],
         "seconds": secs,
-        "speedups": {"shrinking_speedup": (secs["chunked_fused_shrink_off"]
-                                           / secs["chunked_fused_shrink_on"])},
+        "seconds_median": meds,
+        "speedups": {"shrinking_speedup": (meds["chunked_fused_shrink_off"]
+                                           / meds["chunked_fused_shrink_on"])},
     }
 
 
-def _interleaved_min(fns, repeat):
-    """min wall time per contender, measured in alternating rounds."""
+def _sharded_bench(spec: dict):
+    """Lane-sharded vs single-device fused engine; None on one device."""
+    if len(jax.devices()) < 2:
+        return None
+    from repro.core.sharded_lanes import resolve_lane_mesh
+    from repro.svm.data import xor_gaussians
+    l, k, ng = spec["l"], spec["k"], spec["n_gamma"]
+    # XOR data: the small-gamma big-C lanes are rare extreme stragglers
+    # (see the SHARDED comment) — binary OVR twins give k = 2 lanes
+    Xn, yn = xor_gaussians(l, seed=0)
+    X = jnp.asarray(Xn)
+    Y = jnp.stack([jnp.asarray(yn), -jnp.asarray(yn)])
+    gammas = np.geomspace(*spec["g_range"], ng)
+    Cs = np.asarray(spec["Cs"], np.float64)
+    cfg = SolverConfig(eps=spec["eps"])
+    mesh = resolve_lane_mesh(None, None)   # every attached device, once
+    n_qp = ng * k * len(Cs)
+    kw = dict(impl="jnp")
+
+    # acceptance: objective parity to 1e-6 on every lane, before timing
+    r0 = grid_mod.solve_grid(X, Y, Cs, gammas, cfg, **kw)
+    r1 = grid_mod.solve_grid(X, Y, Cs, gammas, cfg, mesh=mesh, **kw)
+    assert bool(jnp.all(r0.converged)) and bool(jnp.all(r1.converged))
+    np.testing.assert_allclose(np.asarray(r1.objective),
+                               np.asarray(r0.objective),
+                               rtol=0, atol=1e-6)
+
+    fns = {
+        "fused_single": lambda: jax.block_until_ready(
+            grid_mod.solve_grid(X, Y, Cs, gammas, cfg, **kw).alpha),
+        "sharded_lanes": lambda: jax.block_until_ready(
+            grid_mod.solve_grid(X, Y, Cs, gammas, cfg, mesh=mesh,
+                                **kw).alpha),
+    }
+    secs, meds = _interleaved_time(fns, spec["repeat"])
+    return {
+        "config": {"l": l, "d": 2, "k": k, "n_gamma": ng,
+                   "g_range": spec["g_range"], "Cs": list(spec["Cs"]),
+                   "repeat": spec["repeat"], "sharded": True,
+                   "n_devices": len(jax.devices())},
+        "lanes": n_qp,
+        "n_qp": n_qp,
+        "eps": spec["eps"],
+        "seconds": secs,
+        "seconds_median": meds,
+        "speedups": {"sharded_lanes_speedup": (meds["fused_single"]
+                                               / meds["sharded_lanes"])},
+    }
+
+
+def _interleaved_time(fns, repeat):
+    """Per-contender (min, median) wall times over alternating rounds.
+
+    Gated ratios are computed from the MEDIANS: the min is kept for the
+    perf trajectory (best-case latency) but a single lucky round used to
+    swing checked-in ratios by tens of percent between identical runs.
+    """
     for fn in fns.values():
         fn()  # warmup / compile
-    mins = {name: float("inf") for name in fns}
+    samples = {name: [] for name in fns}
     for _ in range(repeat):
         for name, fn in fns.items():
             t0 = time.perf_counter()
             fn()
-            mins[name] = min(mins[name], time.perf_counter() - t0)
-    return mins
+            samples[name].append(time.perf_counter() - t0)
+    return ({name: min(s) for name, s in samples.items()},
+            {name: float(np.median(s)) for name, s in samples.items()})
 
 
 def run_bench(profile: str = "full") -> dict:
@@ -271,18 +372,18 @@ def run_bench(profile: str = "full") -> dict:
         if spec["sequential"]:
             fns["sequential"] = lambda: _sequential(X, Y, gammas, Cs, cfg)
 
-        secs = _interleaved_min(fns, spec["repeat"])
+        secs, meds = _interleaved_time(fns, spec["repeat"])
         speedups = {
-            "fused_batched_vs_vmapped": secs["vmapped"]
-                                        / secs["fused_batched"],
-            "compacted_fused_vs_vmapped": secs["vmapped"]
-                                          / secs["compacted_fused"],
+            "fused_batched_vs_vmapped": meds["vmapped"]
+                                        / meds["fused_batched"],
+            "compacted_fused_vs_vmapped": meds["vmapped"]
+                                          / meds["compacted_fused"],
         }
         if "sequential" in secs:
             speedups["fused_batched_vs_sequential"] = (
-                secs["sequential"] / secs["fused_batched"])
+                meds["sequential"] / meds["fused_batched"])
             speedups["compacted_vs_sequential"] = (
-                secs["sequential"] / secs["compacted"])
+                meds["sequential"] / meds["compacted"])
         bench["configs"].append({
             "config": {kk: spec[kk] for kk in
                        ("l", "d", "k", "n_gamma", "g_range", "Cs",
@@ -291,10 +392,18 @@ def run_bench(profile: str = "full") -> dict:
             "n_qp": n_qp,
             "eps": cfg.eps,
             "seconds": secs,
+            "seconds_median": meds,
             "speedups": speedups,
         })
     bench["configs"].append(_row_pass_bench(ROW_PASS[profile]))
     bench["configs"].append(_shrink_bench(SHRINK[profile]))
+    sharded = _sharded_bench(SHARDED[profile])
+    if sharded is not None:
+        bench["configs"].append(sharded)
+    else:
+        print("grid_bench: single device — sharded entry skipped "
+              "(run under XLA_FLAGS=--xla_force_host_platform_"
+              "device_count=8 to measure it)")
     return bench
 
 

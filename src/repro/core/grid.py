@@ -48,6 +48,8 @@ from repro.core.solver import (SolveResult, SolverConfig, resolve_shrink_cfg,
 from repro.core.solver_fused import (FusedResult, solve_fused_batched,
                                      solve_fused_batched_qp,
                                      solve_fused_chunked_qp)
+from repro.core.sharded_lanes import (resolve_lane_mesh, solve_fused_sharded,
+                                      solve_fused_sharded_qp)
 
 
 def sqdist(X: jax.Array) -> jax.Array:
@@ -134,10 +136,10 @@ def _use_bank(impl: str, precompute) -> bool:
 
 
 @partial(jax.jit, static_argnames=("cfg", "impl", "block_l", "precompute",
-                                   "shrinking"))
+                                   "shrinking", "mesh"))
 def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
                       impl: str, block_l: int, precompute,
-                      shrinking: bool = False) -> SolveResult:
+                      shrinking: bool = False, mesh=None) -> SolveResult:
     k, l = Y.shape
     nG = gammas.shape[0]
     nC = Cs.shape[0]
@@ -145,15 +147,17 @@ def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
     Yf = jnp.repeat(jnp.tile(Y, (nG, 1)), nC, axis=0)    # (B, l)
     gf = jnp.repeat(gammas, k * nC)                      # (B,)
     Cf = jnp.tile(Cs, nG * k)                            # (B,)
+    solver = (solve_fused_batched if mesh is None
+              else partial(solve_fused_sharded, mesh=mesh))
     if _use_bank(impl, precompute):
         bank = jnp.exp(-gammas[:, None, None] * sqdist(X))
         bidx = jnp.repeat(jnp.arange(nG, dtype=jnp.int32), k * nC)
-        out = solve_fused_batched(X, Yf, Cf, gf, cfg, impl=impl,
-                                  block_l=block_l, gram=bank, gram_idx=bidx,
-                                  shrinking=shrinking)
+        out = solver(X, Yf, Cf, gf, cfg, impl=impl,
+                     block_l=block_l, gram=bank, gram_idx=bidx,
+                     shrinking=shrinking)
     else:
-        out = solve_fused_batched(X, Yf, Cf, gf, cfg, impl=impl,
-                                  block_l=block_l, shrinking=shrinking)
+        out = solver(X, Yf, Cf, gf, cfg, impl=impl,
+                     block_l=block_l, shrinking=shrinking)
 
     def to_grid(leaf):                                   # (B, ...) leaves
         return leaf.reshape((nG, k, nC) + leaf.shape[1:])
@@ -178,7 +182,8 @@ def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
 def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
                warm_start: bool = True, impl: str | None = None,
                block_l: int = 1024, precompute: bool | None = None,
-               shrinking: bool = False) -> SolveResult:
+               shrinking: bool = False, mesh=None,
+               devices=None) -> SolveResult:
     """Solve the full (gamma, class, C) grid in ONE compiled call.
 
     ``X``: (l, d) shared inputs; ``Y``: (k, l) signed label vectors (a 1-D
@@ -222,6 +227,13 @@ def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
     cycle.  Optima are unchanged either way (full KKT re-check before any
     lane converges); for the physical row-compaction speedup use
     :func:`solve_grid_compacted`.
+
+    ``mesh``/``devices`` (fused engine only) shard the flat lane batch
+    over a device mesh (:mod:`repro.core.sharded_lanes`): pass a mesh
+    with a ``data`` axis, or an explicit device list to build a 1-D mesh
+    over.  Each device runs its own while_loop on a cost-balanced lane
+    slab (zero collectives in the hot loop); results are identical to the
+    single-device engine lane for lane.
     """
     X = jnp.asarray(X)
     Y = jnp.asarray(Y)
@@ -232,13 +244,18 @@ def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
     order = np.argsort(Cs_np, kind="stable")
     Cs_j = jnp.asarray(Cs_np[order], X.dtype)
     gammas_j = jnp.asarray(gammas_np, X.dtype)
+    if mesh is not None or devices is not None:
+        if impl is None:
+            raise ValueError("lane sharding runs on the fused engine — "
+                             "set impl (e.g. impl='jnp') with mesh/devices")
+        mesh = resolve_lane_mesh(mesh, devices)
     if impl is None:
         res = _solve_grid(X, Y, Cs_j, gammas_j,
                           resolve_shrink_cfg(cfg, True) if shrinking
                           else cfg, warm_start)
     else:
         res = _solve_grid_fused(X, Y, Cs_j, gammas_j, cfg, impl, block_l,
-                                precompute, shrinking)
+                                precompute, shrinking, mesh)
     if np.any(order != np.arange(len(Cs_np))):
         inv = np.argsort(order, kind="stable")
         res = jax.tree.map(lambda leaf: jnp.take(leaf, inv, axis=2), res)
@@ -288,7 +305,7 @@ _CHUNK_COUNTERS = ("iterations", "n_planning", "n_free", "n_clipped",
 def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
                           cfg: SolverConfig, chunk: int, impl: str,
                           block_l: int, precompute,
-                          shrinking: bool) -> SolveResult:
+                          shrinking: bool, mesh=None) -> SolveResult:
     """Chunked driver over the fused engine, FLAT lane layout.
 
     Like :func:`_solve_grid_fused` every (gamma, class, C) grid point is
@@ -317,7 +334,7 @@ def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
     fr = solve_fused_chunked_qp(
         X, Yf, np.minimum(0.0, YC), np.maximum(0.0, YC), gam_lane, cfg,
         impl=impl, block_l=block_l, chunk=chunk, shrinking=shrinking,
-        **bank_kw)
+        mesh=mesh, **bank_kw)
     n_free_sv = _free_sv_count(fr.alpha,
                                jnp.asarray(np.minimum(0.0, YC), dtype),
                                jnp.asarray(np.maximum(0.0, YC), dtype))
@@ -346,7 +363,8 @@ def solve_grid_compacted(X, Y, Cs, gammas,
                          chunk: int = 96, impl: str | None = None,
                          block_l: int = 1024,
                          precompute: bool | None = None,
-                         shrinking: bool = False) -> SolveResult:
+                         shrinking: bool = False, mesh=None,
+                         devices=None) -> SolveResult:
     """Host-driven variant of :func:`solve_grid`: same (gamma, class, C)
     result axes, but the batch is re-compacted every ``chunk`` iterations so
     converged lanes stop consuming wall time.  This is the CPU throughput
@@ -379,6 +397,10 @@ def solve_grid_compacted(X, Y, Cs, gammas,
     LIBSVM-style gradient reconstruction + full-KKT re-check before any
     lane retires (unshrink events are counted per lane).  On the vmapped
     path it enables the classic engine's ``cfg.shrink_every`` cycle.
+
+    ``mesh``/``devices`` (fused path only) lane-shard every chunk as in
+    :func:`solve_grid`; host-side lane compaction between chunks stacks
+    with the device split.
     """
     X = jnp.asarray(X)
     Y = jnp.asarray(Y)
@@ -387,9 +409,15 @@ def solve_grid_compacted(X, Y, Cs, gammas,
     k, l = Y.shape
     Cs_np = np.asarray(Cs, np.float64).reshape(-1)
     gammas_np = np.asarray(gammas, np.float64).reshape(-1)
+    if mesh is not None or devices is not None:
+        if impl is None:
+            raise ValueError("lane sharding runs on the fused engine — "
+                             "set impl (e.g. impl='jnp') with mesh/devices")
+        mesh = resolve_lane_mesh(mesh, devices)
     if impl is not None:
         return _compacted_fused_flat(X, Y, Cs_np, gammas_np, cfg, chunk,
-                                     impl, block_l, precompute, shrinking)
+                                     impl, block_l, precompute, shrinking,
+                                     mesh)
     if shrinking:
         cfg = resolve_shrink_cfg(cfg, True)
     order = np.argsort(Cs_np, kind="stable")
@@ -487,7 +515,8 @@ def solve_grid_svr(X, y, Cs, epsilons, gammas,
                    cfg: SolverConfig = SolverConfig(), *,
                    impl: str = "auto", block_l: int = 1024,
                    precompute: bool | None = None,
-                   shrinking: bool = False) -> FusedResult:
+                   shrinking: bool = False, mesh=None,
+                   devices=None) -> FusedResult:
     """Solve the full ε-SVR (gamma, epsilon, C) grid as one fused lane batch.
 
     ``X``: (l, d); ``y``: (l,) real targets; ``Cs``: (n_C,); ``epsilons``:
@@ -504,6 +533,10 @@ def solve_grid_svr(X, y, Cs, epsilons, gammas,
     enables in-loop soft shrinking over the doubled coordinates (the
     per-lane active mask rides through the ``dup`` kernels like any
     other lane state; see :func:`solve_fused_batched_qp`).
+    ``mesh``/``devices`` shard the lane batch over devices exactly as in
+    :func:`solve_grid` (doubled lanes promise objective parity vs the
+    single-device engine, not bitwise iteration counts — see
+    :mod:`repro.core.sharded_lanes`).
     """
     X = jnp.asarray(X)
     y = jnp.asarray(y)
@@ -528,9 +561,14 @@ def solve_grid_svr(X, y, Cs, epsilons, gammas,
         bank_kw = dict(
             gram=jnp.exp(-gam_j[:, None, None] * sqdist(X)),
             gram_idx=jnp.repeat(jnp.arange(nG, dtype=jnp.int32), nE * nC))
-    out = solve_fused_batched_qp(X, Pf, Lf, Uf, gf, cfg, impl=impl,
-                                 block_l=block_l, doubled=True,
-                                 shrinking=shrinking, **bank_kw)
+    if mesh is not None or devices is not None:
+        out = solve_fused_sharded_qp(
+            X, Pf, Lf, Uf, gf, cfg, mesh=mesh, devices=devices, impl=impl,
+            block_l=block_l, doubled=True, shrinking=shrinking, **bank_kw)
+    else:
+        out = solve_fused_batched_qp(X, Pf, Lf, Uf, gf, cfg, impl=impl,
+                                     block_l=block_l, doubled=True,
+                                     shrinking=shrinking, **bank_kw)
     return jax.tree.map(
         lambda leaf: leaf.reshape((nG, nE, nC) + leaf.shape[1:]), out)
 
@@ -538,7 +576,8 @@ def solve_grid_svr(X, y, Cs, epsilons, gammas,
 def solve_grid_oneclass(X, nus, gammas, cfg: SolverConfig = SolverConfig(),
                         *, impl: str = "auto", block_l: int = 1024,
                         precompute: bool | None = None,
-                        shrinking: bool = False) -> FusedResult:
+                        shrinking: bool = False, mesh=None,
+                        devices=None) -> FusedResult:
     """Solve the one-class (gamma, nu) grid as one fused lane batch.
 
     Every lane is the ν dual (``p = 0``, box ``[0, 1/(nu l)]``, ``sum(a) =
@@ -548,7 +587,10 @@ def solve_grid_oneclass(X, nus, gammas, cfg: SolverConfig = SolverConfig(),
     :func:`solve_grid`.  Returns a
     :class:`~repro.core.solver_fused.FusedResult` with
     leading axes ``(n_gamma, n_nu)``; the decision offset is ``rho = -b``
-    (``decision(x) = k(x, SVs) @ alpha + b``).
+    (``decision(x) = k(x, SVs) @ alpha + b``).  ``mesh``/``devices`` shard
+    the lane batch over devices exactly as in :func:`solve_grid` (the lane
+    cost proxy is the box width ``1/(nu l)``: small-nu lanes are the
+    stragglers and spread round-robin across shards).
     """
     X = jnp.asarray(X)
     dtype = X.dtype
@@ -576,9 +618,15 @@ def solve_grid_oneclass(X, nus, gammas, cfg: SolverConfig = SolverConfig(),
         G0 = -jax.vmap(lambda g: jax.vmap(
             lambda a: qp_mod.make_rbf(X, g).matvec(a))(A0))(gam_j)
         G0 = G0.reshape(nG * nN, l)
-    out = solve_fused_batched_qp(X, Pf, Lf, Uf, gf, cfg, impl=impl,
-                                 block_l=block_l, alpha0=alpha0, G0=G0,
-                                 shrinking=shrinking, **bank_kw)
+    if mesh is not None or devices is not None:
+        out = solve_fused_sharded_qp(
+            X, Pf, Lf, Uf, gf, cfg, mesh=mesh, devices=devices, impl=impl,
+            block_l=block_l, alpha0=alpha0, G0=G0, shrinking=shrinking,
+            **bank_kw)
+    else:
+        out = solve_fused_batched_qp(X, Pf, Lf, Uf, gf, cfg, impl=impl,
+                                     block_l=block_l, alpha0=alpha0, G0=G0,
+                                     shrinking=shrinking, **bank_kw)
     return jax.tree.map(
         lambda leaf: leaf.reshape((nG, nN) + leaf.shape[1:]), out)
 

@@ -93,7 +93,7 @@ def solve_ovr(kernel, Y: jax.Array, C,
 def solve_ovr_fused(X, Y: jax.Array, C, gamma,
                     cfg: SolverConfig = SolverConfig(), *,
                     impl: str = "auto", block_l: int = 1024,
-                    precompute: bool = False):
+                    precompute: bool = False, mesh=None, devices=None):
     """Solve all one-vs-rest heads through the fused two-pass batched engine.
 
     Unlike :func:`solve_ovr` this consumes the raw ``X`` (l, d); every
@@ -107,6 +107,9 @@ def solve_ovr_fused(X, Y: jax.Array, C, gamma,
     :class:`~repro.core.solver_fused.FusedResult` with a
     leading class axis on every leaf.  Requires
     ``cfg.algorithm in ("smo", "pasmo")`` and ``plan_candidates == 1``.
+    ``mesh``/``devices`` shard the class-head lanes over a device mesh
+    (:mod:`repro.core.sharded_lanes`) — identical results, one while_loop
+    per device slab.
     """
     from repro.core.solver_fused import solve_fused_batched
     from repro.kernels import ops as kernel_ops
@@ -117,6 +120,11 @@ def solve_ovr_fused(X, Y: jax.Array, C, gamma,
         K = kernel_ops.gram(X, gamma=gamma, impl=impl)
         bank_kw = dict(gram=K[None].astype(Y.dtype),
                        gram_idx=jnp.zeros((Y.shape[0],), jnp.int32))
+    if mesh is not None or devices is not None:
+        from repro.core.sharded_lanes import solve_fused_sharded
+        return solve_fused_sharded(X, Y, C, gamma, cfg, mesh=mesh,
+                                   devices=devices, impl=impl,
+                                   block_l=block_l, **bank_kw)
     return solve_fused_batched(X, Y, C, gamma, cfg,
                                impl=impl, block_l=block_l, **bank_kw)
 

@@ -619,7 +619,8 @@ def solve_fused_chunked_qp(X, P, L, U, gamma,
                            impl: str = "auto", block_l: int = 1024,
                            chunk: int = 96, shrinking: bool = False,
                            doubled: bool = False, alpha0=None, G0=None,
-                           gram=None, gram_idx=None) -> FusedResult:
+                           gram=None, gram_idx=None, mesh=None,
+                           devices=None) -> FusedResult:
     """Host-chunked :func:`solve_fused_batched_qp` with HARD compaction.
 
     The in-loop shrinking of the batched engine is *soft* — masked rows
@@ -652,7 +653,11 @@ def solve_fused_chunked_qp(X, P, L, U, gamma,
 
     Arguments mirror :func:`solve_fused_batched_qp` (including the
     Gram-bank row source, which is sliced to the kept rows per chunk);
-    ``chunk`` is the iteration budget per sub-solve.  Returns a B-flat
+    ``chunk`` is the iteration budget per sub-solve.  ``mesh``/``devices``
+    lane-shard every chunk over a device mesh
+    (:func:`repro.core.sharded_lanes.solve_fused_sharded_qp` becomes the
+    chunk engine — lane compaction happens on the host between chunks, so
+    sharding and compaction stack).  Returns a B-flat
     :class:`FusedResult` whose ``iterations``/``n_planning``/
     ``n_unshrink`` accumulate across chunks and whose ``G`` is exact on
     every coordinate for every lane.
@@ -661,6 +666,14 @@ def solve_fused_chunked_qp(X, P, L, U, gamma,
         "warm starts need the (alpha0, G0) pair"
     assert (gram is None) == (gram_idx is None), \
         "the Gram bank needs the (gram, gram_idx) pair"
+    if mesh is not None or devices is not None:
+        # local import: sharded_lanes imports this module at top level
+        from repro.core.sharded_lanes import (resolve_lane_mesh,
+                                              solve_fused_sharded_qp)
+        mesh = resolve_lane_mesh(mesh, devices)
+        chunk_solver = partial(solve_fused_sharded_qp, mesh=mesh)
+    else:
+        chunk_solver = solve_fused_batched_qp
     bank = gram is not None
     X = jnp.asarray(X)
     dtype = X.dtype
@@ -751,7 +764,7 @@ def solve_fused_chunked_qp(X, P, L, U, gamma,
             bank_kw = dict(gram=jnp.asarray(gsub, dtype),
                            gram_idx=jnp.asarray(gidx_np[lanes]))
 
-        res = solve_fused_batched_qp(
+        res = chunk_solver(
             X_sub, jnp.asarray(gather(P_np), dtype),
             jnp.asarray(gather(L_np), dtype),
             jnp.asarray(gather(U_np), dtype),

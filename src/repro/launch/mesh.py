@@ -32,3 +32,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(n_data: int = 1, n_model: int = 1):
     """Small mesh over however many (virtual) devices exist — tests."""
     return _make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_lane_mesh(devices=None, *, axis: str = "data"):
+    """1-D mesh over ``devices`` (default: every attached device) for the
+    lane-sharded fused engine (:mod:`repro.core.sharded_lanes`).
+
+    Built from an explicit device list — unlike :func:`jax.make_mesh` this
+    lets tests and benchmarks pin a subset (e.g. half the forced host
+    devices) without touching global state."""
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = list(jax.devices()) if devices is None else list(devices)
+    return Mesh(np.array(devs), (axis,))

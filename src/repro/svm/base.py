@@ -27,10 +27,16 @@ class SVMEstimatorBase:
 
     def _init_common(self, *, algorithm: str, eps: float, max_iter: int,
                      plan_candidates: int, impl: str, engine: str,
-                     precompute: bool, dtype) -> None:
-        if engine not in ("auto", "fused", "batched"):
-            raise ValueError(f"engine must be auto|fused|batched, "
+                     precompute: bool, dtype, mesh=None,
+                     devices=None) -> None:
+        if engine not in ("auto", "fused", "batched", "sharded"):
+            raise ValueError(f"engine must be auto|fused|batched|sharded, "
                              f"got {engine!r}")
+        if engine in ("fused", "batched") and (mesh is not None
+                                               or devices is not None):
+            raise ValueError("mesh/devices belong to the sharded engine — "
+                             f"drop them or use engine='sharded'/'auto', "
+                             f"got engine={engine!r}")
         self.algorithm = algorithm
         self.eps = eps
         self.max_iter = max_iter
@@ -38,6 +44,8 @@ class SVMEstimatorBase:
         self.impl = impl
         self.engine = engine
         self.precompute = precompute
+        self.mesh = mesh
+        self.devices = devices
         # f64 when x64 is on (the paper-accuracy setting), else a clean f32
         # fallback instead of per-call truncation warnings
         self.dtype = dtype if dtype is not None else (
@@ -54,12 +62,26 @@ class SVMEstimatorBase:
             return 1.0 / (X.shape[1] * var) if var > 0 else 1.0
         return float(self.gamma)
 
-    def _resolve_engine(self) -> str:
-        if self.engine != "auto":
-            return self.engine
+    def _resolve_engine(self, n_lanes: int = 1) -> str:
+        """Pick the fit engine; ``n_lanes`` is the QP lane count of the
+        upcoming fit (class heads for SVC, 1 for SVR/one-class) — ``auto``
+        only shards when there is more than one lane to spread."""
         fusable = (self.algorithm in ("smo", "pasmo")
                    and self.plan_candidates == 1)
-        return "fused" if fusable else "batched"
+        if self.engine == "sharded":
+            if not fusable:
+                raise ValueError(
+                    "engine='sharded' runs on the fused engine, which needs "
+                    "algorithm in ('smo', 'pasmo') and plan_candidates == 1")
+            return "sharded"
+        if self.engine != "auto":
+            return self.engine
+        if not fusable:
+            return "batched"
+        if (self.mesh is not None or self.devices is not None
+                or (n_lanes > 1 and len(jax.devices()) > 1)):
+            return "sharded"
+        return "fused"
 
     def _check_fitted(self):
         if not hasattr(self, self._fit_attr):

@@ -17,6 +17,7 @@ outliers, and the fraction of training outliers approaches ``nu``.
 
 from __future__ import annotations
 
+from functools import partial
 from typing import Union
 
 import jax
@@ -24,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import qp as qp_mod
+from repro.core.sharded_lanes import solve_fused_sharded_qp
 from repro.core.solver import solve_qp
 from repro.core.solver_fused import solve_fused_batched_qp
 from repro.kernels import ops
@@ -42,14 +44,16 @@ class OneClassSVM(SVMEstimatorBase):
                  *, algorithm: str = "pasmo", eps: float = 1e-3,
                  max_iter: int = 1_000_000, plan_candidates: int = 1,
                  impl: str = "auto", engine: str = "auto",
-                 precompute: bool = True, dtype=None):
+                 precompute: bool = True, dtype=None, mesh=None,
+                 devices=None):
         if not 0.0 < nu <= 1.0:
             raise ValueError(f"nu must be in (0, 1], got {nu!r}")
         self.nu = nu
         self.gamma = gamma
         self._init_common(algorithm=algorithm, eps=eps, max_iter=max_iter,
                           plan_candidates=plan_candidates, impl=impl,
-                          engine=engine, precompute=precompute, dtype=dtype)
+                          engine=engine, precompute=precompute, dtype=dtype,
+                          mesh=mesh, devices=devices)
 
     def fit(self, X, y=None) -> "OneClassSVM":
         X = jnp.asarray(X, self.dtype)
@@ -61,7 +65,7 @@ class OneClassSVM(SVMEstimatorBase):
         qp = qp_mod.oneclass_qp(l, self.nu, self.dtype)
         a0 = qp_mod.oneclass_alpha0(l, self.nu, self.dtype)
 
-        if engine == "fused":
+        if engine in ("fused", "sharded"):
             bank_kw = {}
             if self.precompute and ops.resolve_impl(self.impl) == "jnp":
                 K = ops.gram(X, gamma=self.gamma_,
@@ -71,7 +75,12 @@ class OneClassSVM(SVMEstimatorBase):
                                gram_idx=jnp.zeros((1,), jnp.int32))
             else:
                 G0 = -qp_mod.make_rbf(X, self.gamma_).matvec(a0)
-            res = solve_fused_batched_qp(
+            if engine == "sharded":
+                solver = partial(solve_fused_sharded_qp, mesh=self.mesh,
+                                 devices=self.devices)
+            else:
+                solver = solve_fused_batched_qp
+            res = solver(
                 X, qp.p[None], qp.bounds.lower[None], qp.bounds.upper[None],
                 self.gamma_, cfg, impl=self.impl,
                 alpha0=a0[None], G0=G0[None], **bank_kw)

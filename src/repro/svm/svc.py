@@ -50,11 +50,17 @@ class SVC(SVMEstimatorBase):
     map onto :class:`repro.core.solver.SolverConfig`; ``impl`` selects the
     kernel backend (``"auto"`` = Pallas on TPU, jnp elsewhere) for both the
     fused fit engine and the predict Gram work; ``engine`` picks the fit
-    engine (``"auto"`` resolves to ``"fused"`` when the config allows it,
-    else ``"batched"``); ``precompute=False`` trades the O(l^2) Gram
+    engine (``"auto"`` resolves to ``"sharded"`` on a multiclass fit with
+    more than one device attached — or whenever ``mesh``/``devices`` is
+    given — else ``"fused"`` when the config allows it, else
+    ``"batched"``); ``precompute=False`` trades the O(l^2) Gram
     memory for on-the-fly kernel rows in either engine (in the fused
     engine ``precompute=True`` builds the shared Gram bank on the jnp
-    backend — the CPU throughput mode).
+    backend — the CPU throughput mode).  ``engine="sharded"`` lane-shards
+    the class heads over a device mesh
+    (:mod:`repro.core.sharded_lanes`) — identical fit, one while_loop per
+    device slab; ``mesh``/``devices`` pin the mesh (default: every
+    attached device).
     """
 
     def __init__(self, C: Union[float, np.ndarray] = 1.0,
@@ -63,7 +69,8 @@ class SVC(SVMEstimatorBase):
                  algorithm: str = "pasmo", eps: float = 1e-3,
                  max_iter: int = 1_000_000, plan_candidates: int = 1,
                  impl: str = "auto", engine: str = "auto",
-                 precompute: bool = True, dtype=None):
+                 precompute: bool = True, dtype=None, mesh=None,
+                 devices=None):
         if not (class_weight is None or class_weight == "balanced"
                 or isinstance(class_weight, dict)):
             raise ValueError("class_weight must be None, 'balanced' or a "
@@ -73,7 +80,8 @@ class SVC(SVMEstimatorBase):
         self.gamma = gamma
         self._init_common(algorithm=algorithm, eps=eps, max_iter=max_iter,
                           plan_candidates=plan_candidates, impl=impl,
-                          engine=engine, precompute=precompute, dtype=dtype)
+                          engine=engine, precompute=precompute, dtype=dtype,
+                          mesh=mesh, devices=devices)
 
     # -- fitting ------------------------------------------------------------
 
@@ -96,7 +104,7 @@ class SVC(SVMEstimatorBase):
         self.gamma_ = self._resolve_gamma(X)
         self.X_ = X
         cfg = self._config()
-        engine = self._resolve_engine()
+        engine = self._resolve_engine(n_lanes=1 if k == 2 else k)
 
         if k == 2 and np.asarray(self.C).size != 1:
             raise ValueError("per-class C requires more than two "
@@ -119,18 +127,25 @@ class SVC(SVMEstimatorBase):
         else:
             Y = mc.ovr_labels(y_idx, k, self.dtype)
 
-        if engine == "fused":
+        if engine in ("fused", "sharded"):
+            shard_kw = {}
+            if engine == "sharded":
+                shard_kw = dict(mesh=self.mesh, devices=self.devices)
+                if self.mesh is None and self.devices is None:
+                    shard_kw["devices"] = tuple(jax.devices())
             if k == 2:
                 C_arg = (C_bin[None, :] if self.class_weight is not None
                          else C_bin)
                 res = mc.solve_ovr_fused(X, yb[None, :], C_arg,
                                          self.gamma_, cfg, impl=self.impl,
-                                         precompute=self.precompute)
+                                         precompute=self.precompute,
+                                         **shard_kw)
                 res = jax.tree.map(lambda leaf: leaf[0], res)
             else:
                 res = mc.solve_ovr_fused(X, Y, C_ovr,
                                          self.gamma_, cfg, impl=self.impl,
-                                         precompute=self.precompute)
+                                         precompute=self.precompute,
+                                         **shard_kw)
         else:
             if self.precompute:
                 K = ops.gram(X, gamma=self.gamma_, impl=self.impl)

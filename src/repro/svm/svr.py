@@ -20,6 +20,7 @@ with ``beta = alpha[:l] + alpha[l:]`` (:func:`repro.core.qp.svr_fold`).
 
 from __future__ import annotations
 
+from functools import partial
 from typing import Union
 
 import jax
@@ -28,6 +29,7 @@ import numpy as np
 
 from repro.core import qp as qp_mod
 from repro.core.solver import solve_qp
+from repro.core.sharded_lanes import solve_fused_sharded_qp
 from repro.core.solver_fused import solve_fused_batched_qp
 from repro.kernels import ops
 from repro.svm.base import SVMEstimatorBase
@@ -39,7 +41,11 @@ class SVR(SVMEstimatorBase):
     ``C`` is the box budget, ``epsilon`` the insensitive-tube half-width,
     ``gamma`` a float or ``"scale"``; ``eps`` is the KKT stopping accuracy
     (solver tolerance, NOT the tube).  ``impl``/``engine``/``precompute``
-    select backends exactly as in :class:`repro.svm.svc.SVC`.
+    select backends exactly as in :class:`repro.svm.svc.SVC`.  The fit is
+    a single QP lane, so ``engine="auto"`` never picks ``"sharded"`` here
+    — an explicit ``engine="sharded"`` (with optional ``mesh``/``devices``)
+    still routes the lane through the sharded engine, mainly so grid code
+    can treat all three facades uniformly.
     """
 
     _fit_attr = "beta_"
@@ -49,13 +55,15 @@ class SVR(SVMEstimatorBase):
                  algorithm: str = "pasmo", eps: float = 1e-3,
                  max_iter: int = 1_000_000, plan_candidates: int = 1,
                  impl: str = "auto", engine: str = "auto",
-                 precompute: bool = True, dtype=None):
+                 precompute: bool = True, dtype=None, mesh=None,
+                 devices=None):
         self.C = C
         self.epsilon = epsilon
         self.gamma = gamma
         self._init_common(algorithm=algorithm, eps=eps, max_iter=max_iter,
                           plan_candidates=plan_candidates, impl=impl,
-                          engine=engine, precompute=precompute, dtype=dtype)
+                          engine=engine, precompute=precompute, dtype=dtype,
+                          mesh=mesh, devices=devices)
 
     def fit(self, X, y) -> "SVR":
         X = jnp.asarray(X, self.dtype)
@@ -66,13 +74,18 @@ class SVR(SVMEstimatorBase):
         engine = self._resolve_engine()
         qp = qp_mod.svr_qp(y, float(self.C), float(self.epsilon))
 
-        if engine == "fused":
+        if engine in ("fused", "sharded"):
             bank_kw = {}
             if self.precompute and ops.resolve_impl(self.impl) == "jnp":
                 K = ops.gram(X, gamma=self.gamma_, impl=self.impl)
                 bank_kw = dict(gram=K[None].astype(self.dtype),
                                gram_idx=jnp.zeros((1,), jnp.int32))
-            res = solve_fused_batched_qp(
+            if engine == "sharded":
+                solver = partial(solve_fused_sharded_qp, mesh=self.mesh,
+                                 devices=self.devices)
+            else:
+                solver = solve_fused_batched_qp
+            res = solver(
                 X, qp.p[None], qp.bounds.lower[None], qp.bounds.upper[None],
                 self.gamma_, cfg, impl=self.impl, doubled=True, **bank_kw)
             res = jax.tree.map(lambda leaf: leaf[0], res)

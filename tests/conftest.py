@@ -1,4 +1,7 @@
 import os
+import re
+import subprocess
+import sys
 
 import jax
 
@@ -17,3 +20,32 @@ FUSED_IMPL = os.environ.get("REPRO_IMPL", "jnp")
 FUSED_KW = {"impl": FUSED_IMPL}
 if FUSED_IMPL != "jnp":
     FUSED_KW["block_l"] = int(os.environ.get("REPRO_BLOCK_L", "128"))
+
+
+def run_multidevice(script: str, n_devices: int = 8, *,
+                    timeout: int = 600) -> str:
+    """Run ``script`` in a fresh interpreter with ``n_devices`` forced host
+    CPU devices; return its stdout.
+
+    ``--xla_force_host_platform_device_count`` must be set before jax is
+    imported, and the running suite must keep seeing a single device (the
+    dry-run rule), so multi-device tests respawn: the flag is composed into
+    ``XLA_FLAGS`` (replacing any inherited device-count flag), ``PYTHONPATH``
+    gains ``src/``, and the child owns imports and x64 config itself.  A
+    non-zero exit asserts with the stderr tail.  Mark callers
+    ``@pytest.mark.slow`` — each respawn pays a fresh jit warm-up.
+    """
+    env = dict(os.environ)
+    flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                   env.get("XLA_FLAGS", "")).strip()
+    env["XLA_FLAGS"] = (f"{flags} " if flags else "") + \
+        f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.pathsep.join(p for p in (
+        os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src")),
+        env.get("PYTHONPATH")) if p)
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, env=env,
+                          timeout=timeout)
+    assert proc.returncode == 0, \
+        f"multi-device subprocess failed:\n{proc.stderr[-4000:]}"
+    return proc.stdout

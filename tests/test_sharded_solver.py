@@ -5,9 +5,6 @@ subprocess with ``--xla_force_host_platform_device_count=8`` so the rest of
 the suite keeps seeing a single device (dry-run rule).
 """
 
-import os
-import subprocess
-import sys
 import textwrap
 
 import jax
@@ -15,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import run_multidevice
 from repro.core import qp as qp_mod
 from repro.core.sharded import solve_sharded
 from repro.core.solver import SolverConfig, solve
@@ -50,8 +48,6 @@ def test_sharded_padding_is_inert():
 
 
 _SUBPROCESS_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax
     jax.config.update("jax_enable_x64", True)
     import jax.numpy as jnp
@@ -83,11 +79,5 @@ _SUBPROCESS_SCRIPT = textwrap.dedent("""
 
 @pytest.mark.slow
 def test_sharded_eight_devices_subprocess():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.abspath(
-        os.path.join(os.path.dirname(__file__), "..", "src"))
-    proc = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
-                          capture_output=True, text=True, env=env,
-                          timeout=600)
-    assert proc.returncode == 0, proc.stderr[-4000:]
-    assert "SHARDED_OK" in proc.stdout
+    out = run_multidevice(_SUBPROCESS_SCRIPT, 8)
+    assert "SHARDED_OK" in out
