@@ -20,6 +20,16 @@ generations where absolute wall times do not):
   lane-sharded engine over every attached device (bar: >= 2x with 8
   forced host devices; measured only when >1 device is attached — a
   single-device fresh run simply lacks the config and the gate skips it).
+* ``telemetry_overhead`` — t_off / t_on for the fused engine with the
+  flight recorder (ISSUE 8): ~1.0 means the telemetry ring + drain is
+  near-free; its per-record tolerance bounds the allowed recorder cost
+  at ~10%.  (Telemetry *off* is gated structurally instead: the jaxpr is
+  asserted byte-identical to pre-telemetry in ``tests/test_telemetry.py``.)
+
+On any failure the gate prints the stored-vs-fresh **environment
+fingerprint** diff (machine/backend/device provenance stamped into every
+``BENCH_*.json`` record) — the first suspect for cross-machine ratio
+drift.
 
 Noise policy:
 
@@ -44,8 +54,36 @@ import os
 import sys
 
 METRICS = ("fused_batched_vs_sequential", "doubled_row_parity",
-           "shrinking_speedup", "sharded_lanes_speedup")
+           "shrinking_speedup", "sharded_lanes_speedup",
+           "telemetry_overhead")
 DEFAULT_TOLERANCE = 0.25
+
+
+def _fingerprint_note(fresh: dict, record: dict) -> None:
+    """On a gate failure, show WHERE the two records came from.
+
+    Same-machine ratios transfer across hosts, but not perfectly — a
+    regression verdict on a very different machine (backend, device
+    kind, core count) is the first thing to rule out.  Records predating
+    the fingerprint field just say so.  Stdlib-only on purpose (the gate
+    must not need jax): both fingerprints come from the JSON files.
+    """
+    fp_f = fresh.get("fingerprint")
+    fp_r = record.get("fingerprint")
+    if not fp_f or not fp_r:
+        which = "fresh run" if not fp_f else "checked-in record"
+        print(f"bench_gate: {which} carries no environment fingerprint "
+              "(predates it?) — cannot diff environments")
+        return
+    keys = sorted(set(fp_f) | set(fp_r))
+    diffs = [f"  {k}: record={fp_r.get(k)!r} -> fresh={fp_f.get(k)!r}"
+             for k in keys if fp_r.get(k) != fp_f.get(k)]
+    if diffs:
+        print("bench_gate: environment differs from the record "
+              "(ratio drift suspect):")
+        print("\n".join(diffs))
+    else:
+        print("bench_gate: environment fingerprint matches the record")
 
 
 def _config_key(entry: dict):
@@ -101,10 +139,12 @@ def gate(fresh_path: str, record_path: str) -> int:
     if checked == 0:
         print("bench_gate: ERROR — no comparable configs between fresh "
               "and record")
+        _fingerprint_note(fresh, record)
         return 0 if skip else 1
     if failures:
         msg = (f"bench_gate: {len(failures)} config(s) regressed "
                f">{tolerance:.0%} below the checked-in record")
+        _fingerprint_note(fresh, record)
         if skip:
             print(msg + " — IGNORED (BENCH_GATE_SKIP set, e.g. via the "
                         "bench-noisy-runner label)")

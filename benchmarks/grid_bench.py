@@ -79,6 +79,7 @@ from repro.core import multiclass as mc
 from repro.core import qp as qp_mod
 from repro.core.solver import SolverConfig, solve
 from repro.kernels import ops as kernel_ops
+from repro.telemetry import Diagnostics, RingConfig, env_fingerprint
 
 # Each config: problem shape + which contenders to time.  "quick" is the CI
 # trajectory profile (small, <1 min); "full" ends with the acceptance
@@ -124,6 +125,23 @@ SHARDED = {
                   Cs=[0.25, 1.0, 4.0, 64.0], repeat=3, eps=1e-5),
     "full": dict(l=512, k=2, n_gamma=8, g_range=(0.02, 1.0),
                  Cs=[0.25, 1.0, 4.0, 64.0], repeat=4, eps=1e-5),
+}
+
+# Telemetry entry per profile (ISSUE 8): the fused engine with the flight
+# recorder off vs on (default ring geometry).  With telemetry=None the
+# traced jaxpr is byte-identical to pre-telemetry (tests/test_telemetry.py
+# asserts it), so "off" IS the zero-overhead baseline; the gated
+# ``telemetry_overhead`` = t_off / t_on bounds the recorder's cost — ring
+# writes every sample_every iterations plus the host-side drain — at ~10%
+# (per-record tolerance in BENCH_grid_quick.json).
+TELEMETRY = {
+    # l is deliberately NOT tiny: the recorder's cost is a fixed host
+    # drain plus O(B) in-loop algebra, so at toy sizes it reads as tens
+    # of percent of a ~10ms solve while the device tier itself is ~2%
+    "quick": dict(l=384, d=8, k=2, n_gamma=4, g_range=(0.2, 1.0),
+                  Cs=[1.0, 8.0], repeat=5, sample_every=64),
+    "full": dict(l=512, d=16, k=2, n_gamma=4, g_range=(0.2, 1.0),
+                 Cs=[1.0, 8.0], repeat=5, sample_every=64),
 }
 
 # Shrinking entry per profile: the chunked fused driver on a large-l
@@ -268,6 +286,62 @@ def _shrink_bench(spec: dict) -> dict:
     }
 
 
+def _telemetry_bench(spec: dict) -> dict:
+    l, d, k, ng = spec["l"], spec["d"], spec["k"], spec["n_gamma"]
+    X, Y, gammas, Cs = _workload(l, d, k, ng, spec["g_range"], spec["Cs"])
+    cfg = SolverConfig(eps=1e-3)
+    rc = RingConfig(sample_every=spec["sample_every"])
+    kw = dict(impl="jnp")
+
+    # the recorder must not perturb the solve: identical iteration
+    # trajectories; objectives to last-ulp slack only (the widened
+    # while_loop carry lets XLA fuse reductions differently)
+    base = grid_mod.solve_grid(X, Y, Cs, gammas, cfg, **kw)
+    probe = Diagnostics(ring=rc)
+    on = grid_mod.solve_grid(X, Y, Cs, gammas, cfg, diagnostics=probe, **kw)
+    assert np.array_equal(np.asarray(base.iterations),
+                          np.asarray(on.iterations))
+    np.testing.assert_allclose(np.asarray(base.objective),
+                               np.asarray(on.objective),
+                               rtol=1e-12, atol=0)
+
+    # "on" includes the full host cost: Diagnostics construction
+    # (fingerprint probe), the ring through the while_loop, and the
+    # per-lane drain into the in-memory sink
+    fns = {
+        "fused_telemetry_off": lambda: jax.block_until_ready(
+            grid_mod.solve_grid(X, Y, Cs, gammas, cfg, **kw).alpha),
+        "fused_telemetry_on": lambda: jax.block_until_ready(
+            grid_mod.solve_grid(X, Y, Cs, gammas, cfg,
+                                diagnostics=Diagnostics(ring=rc),
+                                **kw).alpha),
+    }
+    secs, meds = _interleaved_time(fns, spec["repeat"])
+
+    # REPRO_TELEMETRY_JSONL=<path>: persist one instrumented run's full
+    # flight-recorder stream (fingerprint/phase/lane/summary) — CI uploads
+    # it as an artifact and smoke-tests the report CLI on it
+    out_path = os.environ.get("REPRO_TELEMETRY_JSONL")
+    if out_path:
+        diag = Diagnostics(out_path, ring=rc)
+        grid_mod.solve_grid(X, Y, Cs, gammas, cfg, diagnostics=diag, **kw)
+        diag.finalize()
+
+    return {
+        "config": {"l": l, "d": d, "k": k, "n_gamma": ng,
+                   "g_range": spec["g_range"], "Cs": list(spec["Cs"]),
+                   "repeat": spec["repeat"], "telemetry": True,
+                   "sample_every": spec["sample_every"]},
+        "lanes": ng * k,
+        "n_qp": ng * k * len(Cs),
+        "eps": cfg.eps,
+        "seconds": secs,
+        "seconds_median": meds,
+        "speedups": {"telemetry_overhead": (meds["fused_telemetry_off"]
+                                            / meds["fused_telemetry_on"])},
+    }
+
+
 def _sharded_bench(spec: dict):
     """Lane-sharded vs single-device fused engine; None on one device."""
     if len(jax.devices()) < 2:
@@ -345,6 +419,10 @@ def run_bench(profile: str = "full") -> dict:
         "backend": jax.default_backend(),
         "device": str(jax.devices()[0]),
         "x64": bool(jax.config.jax_enable_x64),
+        # which machine produced this record: bench_gate prints the
+        # stored-vs-fresh diff when a gate fails, so cross-machine ratio
+        # drift is diagnosable from the two JSON files alone
+        "fingerprint": env_fingerprint(),
         "configs": [],
     }
     for spec in PROFILES[profile]:
@@ -396,6 +474,7 @@ def run_bench(profile: str = "full") -> dict:
             "speedups": speedups,
         })
     bench["configs"].append(_row_pass_bench(ROW_PASS[profile]))
+    bench["configs"].append(_telemetry_bench(TELEMETRY[profile]))
     bench["configs"].append(_shrink_bench(SHRINK[profile]))
     sharded = _sharded_bench(SHARDED[profile])
     if sharded is not None:

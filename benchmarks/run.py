@@ -50,7 +50,15 @@ def main() -> None:
                      f"choose from: {','.join(k for k, _ in REGISTRY)}")
 
     import importlib
+    import json
     import os
+
+    # provenance header: the same environment fingerprint every
+    # BENCH_*.json record carries, for runs that only keep the CSV
+    from repro.telemetry import env_fingerprint
+    print(f"# fingerprint: {json.dumps(env_fingerprint(), sort_keys=True)}",
+          flush=True)
+
     failures = 0
     for key, module in REGISTRY:
         if only is not None and key not in only:

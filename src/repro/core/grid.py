@@ -36,7 +36,9 @@ Axis convention for all stacked results: ``(n_gamma, n_class, n_C, ...)``.
 from __future__ import annotations
 
 import dataclasses
+from contextlib import nullcontext
 from functools import partial
+from types import SimpleNamespace
 
 import jax
 import jax.numpy as jnp
@@ -135,11 +137,51 @@ def _use_bank(impl: str, precompute) -> bool:
     return bool(precompute)
 
 
+def _trace_fields(dims, dtype, ring=None) -> dict:
+    """The ``SolveResult`` trace/step-recording buffers for grid drivers.
+
+    The fused engines never run the classic solver's in-loop
+    ``record_trace``/``record_steps`` recorders, so historically every
+    driver allocated its own placeholder buffers.  This is now the ONE
+    place they come from: placeholders by default, and when the flight
+    recorder ran (``ring`` is the grid-shaped
+    :class:`~repro.telemetry.ring.TelemetryRing`) the Fig. 3 mu/mu*
+    channel fills ``trace``/``n_trace`` with the classic semantics —
+    one entry per *accepted* planning step, oldest-wins at the cap, the
+    count free-running past it.
+    """
+    cap = dims + (1,)
+    fields = dict(
+        trace=jnp.zeros(cap, dtype), n_trace=jnp.zeros(dims, jnp.int32),
+        steps_i=jnp.zeros(cap, jnp.int32), steps_j=jnp.zeros(cap, jnp.int32),
+        steps_mu=jnp.zeros(cap, dtype))
+    if ring is not None:
+        fields["trace"] = jnp.asarray(ring.ratio, dtype)
+        fields["n_trace"] = jnp.asarray(ring.n_ratio)
+    return fields
+
+
+def _drain_grid_ring(diagnostics, ring, meta, result):
+    """Flatten a grid-shaped ring to lanes and hand it to ``diagnostics``."""
+    ndim = result.iterations.ndim if hasattr(result, "iterations") else 3
+    # numpy, not jnp: the drain is host-bound and a jnp reshape per leaf
+    # costs a device dispatch each
+    ring_flat = jax.tree.map(
+        lambda leaf: np.asarray(leaf).reshape(
+            (-1,) + np.shape(leaf)[ndim:]), ring)
+    flat_res = SimpleNamespace(**{
+        k: np.asarray(getattr(result, k)).reshape(-1)
+        for k in ("iterations", "kkt_gap", "converged", "n_planning",
+                  "n_unshrink")
+        if getattr(result, k, None) is not None})
+    return diagnostics.drain_ring(ring_flat, meta, flat_res)
+
+
 @partial(jax.jit, static_argnames=("cfg", "impl", "block_l", "precompute",
-                                   "shrinking", "mesh"))
+                                   "shrinking", "mesh", "telemetry"))
 def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
                       impl: str, block_l: int, precompute,
-                      shrinking: bool = False, mesh=None) -> SolveResult:
+                      shrinking: bool = False, mesh=None, telemetry=None):
     k, l = Y.shape
     nG = gammas.shape[0]
     nC = Cs.shape[0]
@@ -154,36 +196,38 @@ def _solve_grid_fused(X, Y, Cs, gammas, cfg: SolverConfig,
         bidx = jnp.repeat(jnp.arange(nG, dtype=jnp.int32), k * nC)
         out = solver(X, Yf, Cf, gf, cfg, impl=impl,
                      block_l=block_l, gram=bank, gram_idx=bidx,
-                     shrinking=shrinking)
+                     shrinking=shrinking, telemetry=telemetry)
     else:
         out = solver(X, Yf, Cf, gf, cfg, impl=impl,
-                     block_l=block_l, shrinking=shrinking)
+                     block_l=block_l, shrinking=shrinking,
+                     telemetry=telemetry)
+    ring = None
+    if telemetry is not None:
+        out, ring = out
 
     def to_grid(leaf):                                   # (B, ...) leaves
         return leaf.reshape((nG, k, nC) + leaf.shape[1:])
 
     fr: FusedResult = jax.tree.map(to_grid, out)
+    ring_g = None if ring is None else jax.tree.map(to_grid, ring)
     YC = Y[None, :, None, :] * Cs[None, None, :, None]
     n_free_sv = _free_sv_count(fr.alpha, jnp.minimum(0.0, YC),
                                jnp.maximum(0.0, YC))
-    zero = jnp.zeros((nG, k, Cs.shape[0]), jnp.int32)
     untracked = jnp.full((nG, k, Cs.shape[0]), UNTRACKED, jnp.int32)
-    return SolveResult(
+    res = SolveResult(
         alpha=fr.alpha, b=fr.b, G=fr.G, iterations=fr.iterations,
         objective=fr.objective, kkt_gap=fr.kkt_gap, converged=fr.converged,
         n_planning=fr.n_planning, n_free=untracked,
         n_clipped=untracked, n_reverted=untracked, n_free_sv=n_free_sv,
-        trace=jnp.zeros((nG, k, Cs.shape[0], 1), X.dtype), n_trace=zero,
-        steps_i=jnp.zeros((nG, k, Cs.shape[0], 1), jnp.int32),
-        steps_j=jnp.zeros((nG, k, Cs.shape[0], 1), jnp.int32),
-        steps_mu=jnp.zeros((nG, k, Cs.shape[0], 1), X.dtype))
+        **_trace_fields((nG, k, nC), X.dtype, ring_g))
+    return res if ring_g is None else (res, ring_g)
 
 
 def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
                warm_start: bool = True, impl: str | None = None,
                block_l: int = 1024, precompute: bool | None = None,
                shrinking: bool = False, mesh=None,
-               devices=None) -> SolveResult:
+               devices=None, diagnostics=None) -> SolveResult:
     """Solve the full (gamma, class, C) grid in ONE compiled call.
 
     ``X``: (l, d) shared inputs; ``Y``: (k, l) signed label vectors (a 1-D
@@ -234,6 +278,16 @@ def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
     over.  Each device runs its own while_loop on a cost-balanced lane
     slab (zero collectives in the hot loop); results are identical to the
     single-device engine lane for lane.
+
+    ``diagnostics`` (a :class:`repro.telemetry.Diagnostics`, fused engine
+    only) turns on the flight recorder: the solve runs under a phase
+    scope, the in-loop :class:`~repro.telemetry.ring.TelemetryRing`
+    samples every lane (KKT-gap trajectory, active-set size, planning
+    mu/mu* ratios), the drained per-lane events land in the diagnostics
+    sink keyed by (gamma, class, C), and ``trace``/``n_trace`` on the
+    returned result carry the Fig. 3 planning-ratio channel — the
+    classic engine's ``record_trace``, generalized to the batched
+    engine.
     """
     X = jnp.asarray(X)
     Y = jnp.asarray(Y)
@@ -249,16 +303,38 @@ def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
             raise ValueError("lane sharding runs on the fused engine — "
                              "set impl (e.g. impl='jnp') with mesh/devices")
         mesh = resolve_lane_mesh(mesh, devices)
+    if diagnostics is not None and impl is None:
+        raise ValueError("diagnostics rides the fused engine — set impl "
+                         "(e.g. impl='jnp') with diagnostics")
+    tel = None if diagnostics is None else diagnostics.ring_config
+    ring = None
     if impl is None:
         res = _solve_grid(X, Y, Cs_j, gammas_j,
                           resolve_shrink_cfg(cfg, True) if shrinking
                           else cfg, warm_start)
     else:
-        res = _solve_grid_fused(X, Y, Cs_j, gammas_j, cfg, impl, block_l,
-                                precompute, shrinking, mesh)
+        k = Y.shape[0]
+        cm = (nullcontext() if diagnostics is None else diagnostics.scope(
+            "solve_grid_fused", lanes=len(gammas_np) * k * len(Cs_np)))
+        with cm:
+            res = _solve_grid_fused(X, Y, Cs_j, gammas_j, cfg, impl,
+                                    block_l, precompute, shrinking, mesh,
+                                    tel)
+            if tel is not None:
+                res, ring = res
+            if diagnostics is not None:
+                jax.block_until_ready(res.alpha)
     if np.any(order != np.arange(len(Cs_np))):
         inv = np.argsort(order, kind="stable")
         res = jax.tree.map(lambda leaf: jnp.take(leaf, inv, axis=2), res)
+        if ring is not None:
+            ring = jax.tree.map(lambda leaf: jnp.take(leaf, inv, axis=2),
+                                ring)
+    if ring is not None:
+        meta = [{"gamma": float(g), "label": int(c), "C": float(Cv)}
+                for g in gammas_np for c in range(Y.shape[0])
+                for Cv in Cs_np]
+        _drain_grid_ring(diagnostics, ring, meta, res)
     return res
 
 
@@ -305,7 +381,8 @@ _CHUNK_COUNTERS = ("iterations", "n_planning", "n_free", "n_clipped",
 def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
                           cfg: SolverConfig, chunk: int, impl: str,
                           block_l: int, precompute,
-                          shrinking: bool, mesh=None) -> SolveResult:
+                          shrinking: bool, mesh=None,
+                          diagnostics=None) -> SolveResult:
     """Chunked driver over the fused engine, FLAT lane layout.
 
     Like :func:`_solve_grid_fused` every (gamma, class, C) grid point is
@@ -334,7 +411,10 @@ def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
     fr = solve_fused_chunked_qp(
         X, Yf, np.minimum(0.0, YC), np.maximum(0.0, YC), gam_lane, cfg,
         impl=impl, block_l=block_l, chunk=chunk, shrinking=shrinking,
-        mesh=mesh, **bank_kw)
+        mesh=mesh, diagnostics=diagnostics, **bank_kw)
+    ring = None
+    if diagnostics is not None and diagnostics.ring_config is not None:
+        fr, ring = fr
     n_free_sv = _free_sv_count(fr.alpha,
                                jnp.asarray(np.minimum(0.0, YC), dtype),
                                jnp.asarray(np.maximum(0.0, YC), dtype))
@@ -342,9 +422,9 @@ def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
     def shape(leaf):
         return leaf.reshape((nG, k, nC) + leaf.shape[1:])
 
-    zero = jnp.zeros((nG, k, nC), jnp.int32)
+    ring_g = None if ring is None else jax.tree.map(shape, ring)
     untracked = jnp.full((nG, k, nC), UNTRACKED, jnp.int32)
-    return SolveResult(
+    res = SolveResult(
         alpha=shape(fr.alpha), b=shape(fr.b), G=shape(fr.G),
         iterations=shape(fr.iterations),
         objective=shape(fr.objective), kkt_gap=shape(fr.kkt_gap),
@@ -352,10 +432,17 @@ def _compacted_fused_flat(X, Y, Cs_np, gammas_np,
         n_planning=shape(fr.n_planning), n_free=untracked,
         n_clipped=untracked, n_reverted=untracked,
         n_free_sv=shape(n_free_sv),
-        trace=jnp.zeros((nG, k, nC, 1), dtype), n_trace=zero,
-        steps_i=jnp.zeros((nG, k, nC, 1), jnp.int32),
-        steps_j=jnp.zeros((nG, k, nC, 1), jnp.int32),
-        steps_mu=jnp.zeros((nG, k, nC, 1), dtype))
+        **_trace_fields((nG, k, nC), dtype, ring_g))
+    if ring_g is not None:
+        # flat lane order == caller axis order here (no C sort on the
+        # fused path), so the meta enumerates the result axes directly
+        meta = [{"gamma": float(g), "label": int(c), "C": float(Cv)}
+                for g in gammas_np for c in range(k) for Cv in Cs_np]
+        _drain_grid_ring(diagnostics, ring_g, meta, SimpleNamespace(
+            iterations=res.iterations, kkt_gap=res.kkt_gap,
+            converged=res.converged, n_planning=res.n_planning,
+            n_unshrink=shape(fr.n_unshrink)))
+    return res
 
 
 def solve_grid_compacted(X, Y, Cs, gammas,
@@ -364,7 +451,7 @@ def solve_grid_compacted(X, Y, Cs, gammas,
                          block_l: int = 1024,
                          precompute: bool | None = None,
                          shrinking: bool = False, mesh=None,
-                         devices=None) -> SolveResult:
+                         devices=None, diagnostics=None) -> SolveResult:
     """Host-driven variant of :func:`solve_grid`: same (gamma, class, C)
     result axes, but the batch is re-compacted every ``chunk`` iterations so
     converged lanes stop consuming wall time.  This is the CPU throughput
@@ -401,6 +488,12 @@ def solve_grid_compacted(X, Y, Cs, gammas,
     ``mesh``/``devices`` (fused path only) lane-shard every chunk as in
     :func:`solve_grid`; host-side lane compaction between chunks stacks
     with the device split.
+
+    ``diagnostics`` (fused path only) turns on the flight recorder: the
+    chunked driver emits per-chunk ``chunk_solve`` phase events and EWMA
+    ``straggler_warning`` events, the per-chunk device rings are merged
+    into run-global per-lane trajectories, and ``trace``/``n_trace``
+    carry the Fig. 3 planning-ratio channel as in :func:`solve_grid`.
     """
     X = jnp.asarray(X)
     Y = jnp.asarray(Y)
@@ -417,7 +510,10 @@ def solve_grid_compacted(X, Y, Cs, gammas,
     if impl is not None:
         return _compacted_fused_flat(X, Y, Cs_np, gammas_np, cfg, chunk,
                                      impl, block_l, precompute, shrinking,
-                                     mesh)
+                                     mesh, diagnostics)
+    if diagnostics is not None:
+        raise ValueError("diagnostics rides the fused engine — set impl "
+                         "(e.g. impl='jnp') with diagnostics")
     if shrinking:
         cfg = resolve_shrink_cfg(cfg, True)
     order = np.argsort(Cs_np, kind="stable")
@@ -481,7 +577,6 @@ def solve_grid_compacted(X, Y, Cs, gammas,
         arr = out[f].reshape((nG, k, nC) + out[f].shape[2:])
         return jnp.asarray(arr, dtype)
 
-    zero = jnp.zeros((nG, k, nC), jnp.int32)
     return SolveResult(
         alpha=shape("alpha"), b=shape("b"), G=shape("G"),
         iterations=shape("iterations", jnp.int32),
@@ -492,10 +587,7 @@ def solve_grid_compacted(X, Y, Cs, gammas,
         n_clipped=shape("n_clipped", jnp.int32),
         n_reverted=shape("n_reverted", jnp.int32),
         n_free_sv=shape("n_free_sv", jnp.int32),
-        trace=jnp.zeros((nG, k, nC, 1), X.dtype), n_trace=zero,
-        steps_i=jnp.zeros((nG, k, nC, 1), jnp.int32),
-        steps_j=jnp.zeros((nG, k, nC, 1), jnp.int32),
-        steps_mu=jnp.zeros((nG, k, nC, 1), X.dtype))
+        **_trace_fields((nG, k, nC), X.dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -516,7 +608,7 @@ def solve_grid_svr(X, y, Cs, epsilons, gammas,
                    impl: str = "auto", block_l: int = 1024,
                    precompute: bool | None = None,
                    shrinking: bool = False, mesh=None,
-                   devices=None) -> FusedResult:
+                   devices=None, diagnostics=None) -> FusedResult:
     """Solve the full ε-SVR (gamma, epsilon, C) grid as one fused lane batch.
 
     ``X``: (l, d); ``y``: (l,) real targets; ``Cs``: (n_C,); ``epsilons``:
@@ -536,7 +628,9 @@ def solve_grid_svr(X, y, Cs, epsilons, gammas,
     ``mesh``/``devices`` shard the lane batch over devices exactly as in
     :func:`solve_grid` (doubled lanes promise objective parity vs the
     single-device engine, not bitwise iteration counts — see
-    :mod:`repro.core.sharded_lanes`).
+    :mod:`repro.core.sharded_lanes`).  ``diagnostics`` turns on the
+    flight recorder as in :func:`solve_grid`, with per-lane events keyed
+    by (gamma, epsilon, C).
     """
     X = jnp.asarray(X)
     y = jnp.asarray(y)
@@ -561,14 +655,31 @@ def solve_grid_svr(X, y, Cs, epsilons, gammas,
         bank_kw = dict(
             gram=jnp.exp(-gam_j[:, None, None] * sqdist(X)),
             gram_idx=jnp.repeat(jnp.arange(nG, dtype=jnp.int32), nE * nC))
-    if mesh is not None or devices is not None:
-        out = solve_fused_sharded_qp(
-            X, Pf, Lf, Uf, gf, cfg, mesh=mesh, devices=devices, impl=impl,
-            block_l=block_l, doubled=True, shrinking=shrinking, **bank_kw)
-    else:
-        out = solve_fused_batched_qp(X, Pf, Lf, Uf, gf, cfg, impl=impl,
-                                     block_l=block_l, doubled=True,
-                                     shrinking=shrinking, **bank_kw)
+    tel = None if diagnostics is None else diagnostics.ring_config
+    cm = (nullcontext() if diagnostics is None
+          else diagnostics.scope("solve_grid_svr", lanes=nG * nE * nC))
+    with cm:
+        if mesh is not None or devices is not None:
+            out = solve_fused_sharded_qp(
+                X, Pf, Lf, Uf, gf, cfg, mesh=mesh, devices=devices,
+                impl=impl, block_l=block_l, doubled=True,
+                shrinking=shrinking, telemetry=tel, **bank_kw)
+        else:
+            out = solve_fused_batched_qp(X, Pf, Lf, Uf, gf, cfg, impl=impl,
+                                         block_l=block_l, doubled=True,
+                                         shrinking=shrinking, telemetry=tel,
+                                         **bank_kw)
+        ring = None
+        if tel is not None:
+            out, ring = out
+        if diagnostics is not None:
+            jax.block_until_ready(out.alpha)
+    if ring is not None:
+        # flat lane order (gamma, eps, C) row-major == the result axes
+        meta = [{"gamma": float(g), "epsilon": float(e), "C": float(Cv)}
+                for g in np.asarray(gam_j) for e in np.asarray(eps_j)
+                for Cv in np.asarray(Cs_j)]
+        diagnostics.drain_ring(ring, meta, out)
     return jax.tree.map(
         lambda leaf: leaf.reshape((nG, nE, nC) + leaf.shape[1:]), out)
 
@@ -577,7 +688,7 @@ def solve_grid_oneclass(X, nus, gammas, cfg: SolverConfig = SolverConfig(),
                         *, impl: str = "auto", block_l: int = 1024,
                         precompute: bool | None = None,
                         shrinking: bool = False, mesh=None,
-                        devices=None) -> FusedResult:
+                        devices=None, diagnostics=None) -> FusedResult:
     """Solve the one-class (gamma, nu) grid as one fused lane batch.
 
     Every lane is the ν dual (``p = 0``, box ``[0, 1/(nu l)]``, ``sum(a) =
@@ -590,7 +701,9 @@ def solve_grid_oneclass(X, nus, gammas, cfg: SolverConfig = SolverConfig(),
     (``decision(x) = k(x, SVs) @ alpha + b``).  ``mesh``/``devices`` shard
     the lane batch over devices exactly as in :func:`solve_grid` (the lane
     cost proxy is the box width ``1/(nu l)``: small-nu lanes are the
-    stragglers and spread round-robin across shards).
+    stragglers and spread round-robin across shards).  ``diagnostics``
+    turns on the flight recorder as in :func:`solve_grid`, with per-lane
+    events keyed by (gamma, nu).
     """
     X = jnp.asarray(X)
     dtype = X.dtype
@@ -618,15 +731,29 @@ def solve_grid_oneclass(X, nus, gammas, cfg: SolverConfig = SolverConfig(),
         G0 = -jax.vmap(lambda g: jax.vmap(
             lambda a: qp_mod.make_rbf(X, g).matvec(a))(A0))(gam_j)
         G0 = G0.reshape(nG * nN, l)
-    if mesh is not None or devices is not None:
-        out = solve_fused_sharded_qp(
-            X, Pf, Lf, Uf, gf, cfg, mesh=mesh, devices=devices, impl=impl,
-            block_l=block_l, alpha0=alpha0, G0=G0, shrinking=shrinking,
-            **bank_kw)
-    else:
-        out = solve_fused_batched_qp(X, Pf, Lf, Uf, gf, cfg, impl=impl,
-                                     block_l=block_l, alpha0=alpha0, G0=G0,
-                                     shrinking=shrinking, **bank_kw)
+    tel = None if diagnostics is None else diagnostics.ring_config
+    cm = (nullcontext() if diagnostics is None
+          else diagnostics.scope("solve_grid_oneclass", lanes=nG * nN))
+    with cm:
+        if mesh is not None or devices is not None:
+            out = solve_fused_sharded_qp(
+                X, Pf, Lf, Uf, gf, cfg, mesh=mesh, devices=devices,
+                impl=impl, block_l=block_l, alpha0=alpha0, G0=G0,
+                shrinking=shrinking, telemetry=tel, **bank_kw)
+        else:
+            out = solve_fused_batched_qp(X, Pf, Lf, Uf, gf, cfg, impl=impl,
+                                         block_l=block_l, alpha0=alpha0,
+                                         G0=G0, shrinking=shrinking,
+                                         telemetry=tel, **bank_kw)
+        ring = None
+        if tel is not None:
+            out, ring = out
+        if diagnostics is not None:
+            jax.block_until_ready(out.alpha)
+    if ring is not None:
+        meta = [{"gamma": float(g), "nu": float(nu)}
+                for g in np.asarray(gam_j) for nu in nus_np]
+        diagnostics.drain_ring(ring, meta, out)
     return jax.tree.map(
         lambda leaf: leaf.reshape((nG, nN) + leaf.shape[1:]), out)
 

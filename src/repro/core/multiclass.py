@@ -93,7 +93,8 @@ def solve_ovr(kernel, Y: jax.Array, C,
 def solve_ovr_fused(X, Y: jax.Array, C, gamma,
                     cfg: SolverConfig = SolverConfig(), *,
                     impl: str = "auto", block_l: int = 1024,
-                    precompute: bool = False, mesh=None, devices=None):
+                    precompute: bool = False, mesh=None, devices=None,
+                    telemetry=None):
     """Solve all one-vs-rest heads through the fused two-pass batched engine.
 
     Unlike :func:`solve_ovr` this consumes the raw ``X`` (l, d); every
@@ -109,7 +110,10 @@ def solve_ovr_fused(X, Y: jax.Array, C, gamma,
     ``cfg.algorithm in ("smo", "pasmo")`` and ``plan_candidates == 1``.
     ``mesh``/``devices`` shard the class-head lanes over a device mesh
     (:mod:`repro.core.sharded_lanes`) — identical results, one while_loop
-    per device slab.
+    per device slab.  ``telemetry`` (a static
+    :class:`~repro.telemetry.ring.RingConfig`) turns on the fused
+    engine's flight recorder; the return value becomes the
+    ``(FusedResult, TelemetryRing)`` pair with class-leading ring leaves.
     """
     from repro.core.solver_fused import solve_fused_batched
     from repro.kernels import ops as kernel_ops
@@ -124,9 +128,11 @@ def solve_ovr_fused(X, Y: jax.Array, C, gamma,
         from repro.core.sharded_lanes import solve_fused_sharded
         return solve_fused_sharded(X, Y, C, gamma, cfg, mesh=mesh,
                                    devices=devices, impl=impl,
-                                   block_l=block_l, **bank_kw)
+                                   block_l=block_l, telemetry=telemetry,
+                                   **bank_kw)
     return solve_fused_batched(X, Y, C, gamma, cfg,
-                               impl=impl, block_l=block_l, **bank_kw)
+                               impl=impl, block_l=block_l,
+                               telemetry=telemetry, **bank_kw)
 
 
 def ovr_decision(Kq: jax.Array, alpha: jax.Array, b: jax.Array) -> jax.Array:

@@ -60,6 +60,7 @@ partials into the same seam.
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Optional, Tuple
 
@@ -78,6 +79,7 @@ else:  # older jax: experimental namespace, check_rep spelling
 from repro.core.solver import SolverConfig
 from repro.core.solver_fused import FusedResult, solve_fused_batched_qp
 from repro.launch.mesh import make_lane_mesh
+from repro.telemetry.ring import RingConfig, TelemetryRing
 
 
 def resolve_lane_mesh(mesh: Optional[Mesh] = None, devices=None,
@@ -123,10 +125,10 @@ def pad_lanes(A: jax.Array, pad: int, value=0.0) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("cfg", "mesh", "axis", "impl", "block_l",
-                                   "doubled", "shrinking"))
+                                   "doubled", "shrinking", "telemetry"))
 def _solve_sharded(X, P, L, U, gamma, cfg, mesh, axis, impl, block_l,
-                   alpha0, G0, gram, gram_idx, doubled, shrinking
-                   ) -> FusedResult:
+                   alpha0, G0, gram, gram_idx, doubled, shrinking,
+                   telemetry=None):
     nsh = mesh.shape[axis]
     X = jnp.asarray(X)
     P = jnp.asarray(P)
@@ -165,6 +167,8 @@ def _solve_sharded(X, P, L, U, gamma, cfg, mesh, axis, impl, block_l,
         operands += [jnp.asarray(gram), jnp.take(gidx, order)]
         in_specs += [rep, lane1]
 
+    collect = telemetry is not None
+
     def local_solve(Xl, *slab):
         it = iter(slab)
         Pl, Ll, Ul, gl = next(it), next(it), next(it), next(it)
@@ -177,17 +181,30 @@ def _solve_sharded(X, P, L, U, gamma, cfg, mesh, axis, impl, block_l,
         # per-shard termination, no collective anywhere in the hot loop
         r = solve_fused_batched_qp(Xl, Pl, Ll, Ul, gl, cfg, impl=impl,
                                    block_l=block_l, doubled=doubled,
-                                   shrinking=shrinking, **kw)
+                                   shrinking=shrinking, telemetry=telemetry,
+                                   **kw)
+        ring_leaves = ()
+        if collect:
+            r, ring = r
+            # every ring leaf is lane-leading, so per-shard rings ride
+            # the same lane specs as the result leaves and gather back
+            # in caller lane order below
+            ring_leaves = tuple(jax.tree.leaves(ring))
         return (r.alpha, r.b, r.G, r.iterations, r.objective, r.kkt_gap,
-                r.converged, r.n_planning, r.n_unshrink)
+                r.converged, r.n_planning, r.n_unshrink) + ring_leaves
 
+    n_ring = len(dataclasses.fields(TelemetryRing)) if collect else 0
     out = _shard_map(local_solve, mesh=mesh,
                      in_specs=tuple(in_specs),
-                     out_specs=(lane1,) * 9,
+                     out_specs=(lane1,) * (9 + n_ring),
                      **_SHARD_MAP_CHECK)(X, *operands)
 
     # gather-back: undo the schedule, strip the pad lanes
-    return FusedResult(*(jnp.take(leaf, inv[:B], axis=0) for leaf in out))
+    out = tuple(jnp.take(leaf, inv[:B], axis=0) for leaf in out)
+    res = FusedResult(*out[:9])
+    if collect:
+        return res, TelemetryRing(*out[9:])
+    return res
 
 
 def solve_fused_sharded_qp(X, P, L, U, gamma,
@@ -196,7 +213,8 @@ def solve_fused_sharded_qp(X, P, L, U, gamma,
                            axis: str = "data", impl: str = "auto",
                            block_l: int = 1024, alpha0=None, G0=None,
                            gram=None, gram_idx=None, doubled: bool = False,
-                           shrinking: bool = False) -> FusedResult:
+                           shrinking: bool = False,
+                           telemetry: Optional[RingConfig] = None):
     """Lane-sharded :func:`~repro.core.solver_fused.solve_fused_batched_qp`.
 
     Same problem layout and result contract as the batched engine — B
@@ -210,6 +228,11 @@ def solve_fused_sharded_qp(X, P, L, U, gamma,
     attached device) and a 1-D mesh is built.  Results come back in the
     caller's lane order with pad lanes stripped; per-lane objectives and
     iteration counts match the single-device engine exactly.
+
+    ``telemetry`` (static :class:`~repro.telemetry.ring.RingConfig`)
+    turns on the fused engine's flight recorder per shard; the per-shard
+    rings gather back in caller lane order (pad lanes stripped) and the
+    return value becomes ``(FusedResult, TelemetryRing)``.
     """
     assert (alpha0 is None) == (G0 is None), \
         "warm starts need the (alpha0, G0) pair"
@@ -217,7 +240,8 @@ def solve_fused_sharded_qp(X, P, L, U, gamma,
         "the Gram bank needs the (gram, gram_idx) pair"
     mesh = resolve_lane_mesh(mesh, devices, axis)
     return _solve_sharded(X, P, L, U, gamma, cfg, mesh, axis, impl, block_l,
-                          alpha0, G0, gram, gram_idx, doubled, shrinking)
+                          alpha0, G0, gram, gram_idx, doubled, shrinking,
+                          telemetry=telemetry)
 
 
 def solve_fused_sharded(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
@@ -225,7 +249,8 @@ def solve_fused_sharded(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
                         axis: str = "data", impl: str = "auto",
                         block_l: int = 1024, alpha0=None, G0=None,
                         gram=None, gram_idx=None,
-                        shrinking: bool = False) -> FusedResult:
+                        shrinking: bool = False,
+                        telemetry: Optional[RingConfig] = None):
     """Lane-sharded classification batch — the ``p = y`` instance of
     :func:`solve_fused_sharded_qp`, mirroring
     :func:`~repro.core.solver_fused.solve_fused_batched`.  ``C`` is a
@@ -241,4 +266,4 @@ def solve_fused_sharded(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
         X, Y, jnp.minimum(0.0, YC), jnp.maximum(0.0, YC), gamma, cfg,
         mesh=mesh, devices=devices, axis=axis, impl=impl, block_l=block_l,
         alpha0=alpha0, G0=G0, gram=gram, gram_idx=gram_idx, doubled=False,
-        shrinking=shrinking)
+        shrinking=shrinking, telemetry=telemetry)

@@ -35,6 +35,7 @@ a bitwise no-op on G and the loop condition is simply "any lane active".
 from __future__ import annotations
 
 import dataclasses
+from contextlib import nullcontext
 from functools import partial
 from typing import NamedTuple
 
@@ -48,6 +49,8 @@ from repro.core.qp import TAU
 from repro.core.solver import DEFAULT_SHRINK_EVERY, SolverConfig
 from repro.kernels import ops
 from repro.kernels import row_source
+from repro.telemetry.ring import (RingConfig, TelemetryRing, ring_init,
+                                  ring_update)
 
 
 @jax.tree_util.register_dataclass
@@ -281,13 +284,14 @@ def _take_lane(M, idx):
 
 
 @partial(jax.jit, static_argnames=("cfg", "impl", "block_l", "doubled",
-                                   "shrinking"))
+                                   "shrinking", "telemetry"))
 def solve_fused_batched_qp(X, P, L, U, gamma,
                            cfg: SolverConfig = SolverConfig(),
                            *, impl: str = "auto", block_l: int = 1024,
                            alpha0=None, G0=None, gram=None, gram_idx=None,
                            doubled: bool = False,
-                           shrinking: bool = False) -> FusedResult:
+                           shrinking: bool = False,
+                           telemetry: RingConfig | None = None):
     """Solve a batch of B *general* dual QPs over shared ``X`` in ONE
     while_loop: per-lane linear term ``P`` (B, n), per-coordinate box
     ``L``/``U`` (B, n), per-lane RBF ``gamma`` (scalar or (B,)).
@@ -343,6 +347,18 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
     the kernels); the wall-clock win on CPU/host comes from
     :func:`solve_fused_chunked_qp`, which periodically *compacts* rows and
     lanes so the kernels launch over the live prefix only.
+
+    ``telemetry`` (a static :class:`~repro.telemetry.ring.RingConfig`)
+    turns on the in-loop flight recorder: a
+    :class:`~repro.telemetry.ring.TelemetryRing` rides the while_loop
+    carry sampling per-lane KKT gap / active-set size / unshrink counts
+    every ``sample_every`` iterations (plus the freeze iteration) and
+    every accepted planning-step mu/mu* ratio — the classic engine's
+    Fig. 3 ``record_trace`` channel, per lane.  The return value becomes
+    the ``(FusedResult, TelemetryRing)`` pair.  With ``telemetry=None``
+    (default) no ring exists in the carry and the traced jaxpr is
+    byte-identical to the telemetry-free engine — the hot path pays
+    nothing when observability is off.
     """
     assert cfg.algorithm in ("smo", "pasmo")
     assert cfg.plan_candidates == 1
@@ -368,6 +384,14 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
     planning = cfg.algorithm == "pasmo"
     period = cfg.shrink_every if cfg.shrink_every > 0 else DEFAULT_SHRINK_EVERY
     lanes = jnp.arange(B)
+    # Flight recorder (static knob).  ``collect=False`` must leave the
+    # traced jaxpr byte-identical to the telemetry-free engine, so every
+    # telemetry hook below is a *Python-level* branch: no ring in the
+    # carry, no extra traced ops, and the named scopes collapse to
+    # nullcontext (jaxpr equations carry the name stack, so even scopes
+    # are gated).
+    collect = telemetry is not None
+    scope = jax.named_scope if collect else (lambda name: nullcontext())
     if bank:
         src = row_source.bank_source(gram, gram_idx, gamma, dup=doubled)
     else:
@@ -378,7 +402,11 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
     # fusions: (a) paired gathers/entries stack their index vectors and
     # gather once, and (b) the two alpha scatters merge into one.
 
-    def body(s: _BatchState) -> _BatchState:
+    def body(carry):
+        if collect:
+            s, ring = carry
+        else:
+            s = carry
         alpha, G = s.alpha, s.G
         idx2 = jnp.concatenate([lanes, lanes])
 
@@ -394,9 +422,11 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
 
         # ---- pass A: j-selection (k_i stays in VMEM / the bank) ------------
         a_i, _, L_i, U_i = at_idx(s.i)
-        j0, gain0 = ops.source_row_wss(src, G, alpha, L, U, s.i, a_i, L_i,
-                                       U_i, s.g_i, use_exact, impl=impl,
-                                       block_l=block_l, act=act_kw)
+        with scope("fused_pass_a"):
+            j0, gain0 = ops.source_row_wss(src, G, alpha, L, U, s.i, a_i,
+                                           L_i, U_i, s.g_i, use_exact,
+                                           impl=impl, block_l=block_l,
+                                           act=act_kw)
         a_j0, G_j0, L_j0, U_j0 = at_idx(j0)
 
         # ---- Alg. 3 extra candidate B^(t-2) (O(B d)) -----------------------
@@ -488,9 +518,10 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
             jnp.concatenate([mu, -mu]))
 
         # ---- pass B: k_i/k_j + update + next i + gap -----------------------
-        G_new, i_next, g_i_next, g_dn = ops.source_update_wss(
-            src, G, alpha_new, L, U, i_sel, j_sel, mu, impl=impl,
-            block_l=block_l, act=act_kw)
+        with scope("fused_pass_b"):
+            G_new, i_next, g_i_next, g_dn = ops.source_update_wss(
+                src, G, alpha_new, L, U, i_sel, j_sel, mu, impl=impl,
+                block_l=block_l, act=act_kw)
         gap_new = qp_mod.finite_gap(g_i_next - g_dn)
         if shrinking:
             # a lane only counts as converged when its mask was FULL at the
@@ -515,7 +546,7 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
             n_unshrink = s.n_unshrink
         gap = jnp.where(active, gap_new, s.gap)
 
-        return _BatchState(
+        new_s = _BatchState(
             alpha=alpha_new, G=G_new,
             i=jnp.where(active, i_next.astype(jnp.int32), s.i),
             g_i=jnp.where(active, g_i_next, s.g_i),
@@ -531,6 +562,21 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
             prev_ratio_ok=jnp.where(active, ratio_ok, s.prev_ratio_ok),
             n_planning=s.n_planning + (do_plan & active).astype(jnp.int32),
             act=act_new, n_unshrink=n_unshrink)
+        if not collect:
+            return new_s
+        # ---- flight recorder (O(B) only; see repro.telemetry.ring) ---------
+        with scope("telemetry_ring"):
+            if shrinking:
+                n_act = jnp.sum(act_new, axis=1).astype(jnp.int32)
+            else:
+                n_act = jnp.full((B,), n, jnp.int32)
+            ratio_v = ratio if planning else jnp.zeros_like(mu_smo)
+            ring = ring_update(
+                ring, telemetry, t=s.t, active=active,
+                newly_done=active & done, gap=gap, n_active=n_act,
+                n_unshrink=n_unshrink, plan_event=do_plan & active,
+                ratio=ratio_v)
+        return new_s, ring
 
     # ---- init ---------------------------------------------------------------
     if alpha0 is None:
@@ -558,27 +604,34 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
                      prev_ratio_ok=~fB, n_planning=zB,
                      act=act0, n_unshrink=zB)
 
-    s = jax.lax.while_loop(
-        lambda s: jnp.any(~s.done) & (s.t < cfg.max_iter), body, s0)
+    if collect:
+        ring0 = ring_init(telemetry, B, dtype)
+        s, ring = jax.lax.while_loop(
+            lambda c: jnp.any(~c[0].done) & (c[0].t < cfg.max_iter),
+            body, (s0, ring0))
+    else:
+        s = jax.lax.while_loop(
+            lambda s: jnp.any(~s.done) & (s.t < cfg.max_iter), body, s0)
 
     up = s.alpha < U
     dn = s.alpha > L
     g_up = jnp.max(jnp.where(up, s.G, -jnp.inf), axis=1)
     g_dn = jnp.min(jnp.where(dn, s.G, jnp.inf), axis=1)
-    return FusedResult(
+    res = FusedResult(
         alpha=s.alpha, b=qp_mod.safe_bias(g_up, g_dn), G=s.G,
         iterations=s.iters,
         objective=0.5 * (jnp.sum(P * s.alpha, axis=1)
                          + jnp.sum(s.G * s.alpha, axis=1)),
         kkt_gap=s.gap, converged=s.done, n_planning=s.n_planning,
         n_unshrink=s.n_unshrink)
+    return (res, ring) if collect else res
 
 
 def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
                         *, impl: str = "auto", block_l: int = 1024,
                         alpha0=None, G0=None, gram=None,
-                        gram_idx=None, shrinking: bool = False
-                        ) -> FusedResult:
+                        gram_idx=None, shrinking: bool = False,
+                        telemetry: RingConfig | None = None):
     """Solve a batch of B RBF *classification* QPs over shared ``X`` in ONE
     while_loop — the ``p = y`` instance of :func:`solve_fused_batched_qp`.
 
@@ -598,7 +651,8 @@ def solve_fused_batched(X, Y, C, gamma, cfg: SolverConfig = SolverConfig(),
     return solve_fused_batched_qp(
         X, Y, jnp.minimum(0.0, YC), jnp.maximum(0.0, YC), gamma, cfg,
         impl=impl, block_l=block_l, alpha0=alpha0, G0=G0, gram=gram,
-        gram_idx=gram_idx, doubled=False, shrinking=shrinking)
+        gram_idx=gram_idx, doubled=False, shrinking=shrinking,
+        telemetry=telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -614,13 +668,47 @@ def _pow2(n: int) -> int:
     return b
 
 
+def _merge_chunk_ring(rc: RingConfig, ring, live, it_off, un_off, tel):
+    """Fold one chunk's ring into the run-global host accumulators.
+
+    Chunk rings stamp chunk-local iteration counters and chunk-local
+    unshrink counts; ``it_off``/``un_off`` (per live lane, *before* this
+    chunk was accumulated) rebase them to run-global values.  Slot
+    assignment repeats the device-tier oldest-wins rule, so a chunked
+    run's per-lane sample stream matches what one long unchunked ring
+    would have kept.
+    """
+    m_live = len(live)
+    r = {k: np.asarray(getattr(ring, k))[:m_live] for k in (
+        "t", "gap", "n_active", "n_unshrink", "n_samples",
+        "ratio", "ratio_t", "n_ratio")}
+    tel_t, tel_gap, tel_act, tel_un, tel_ns, tel_r, tel_rt, tel_nr = tel
+    for k, lane in enumerate(live):
+        ns = int(min(r["n_samples"][k], rc.cap))
+        if ns:
+            # duplicate trailing slots resolve to the last (newest) write
+            slots = np.minimum(tel_ns[lane] + np.arange(ns), rc.cap - 1)
+            tel_t[lane, slots] = r["t"][k, :ns] + it_off[k]
+            tel_gap[lane, slots] = r["gap"][k, :ns]
+            tel_act[lane, slots] = r["n_active"][k, :ns]
+            tel_un[lane, slots] = r["n_unshrink"][k, :ns] + un_off[k]
+            tel_ns[lane] += int(r["n_samples"][k])
+        nr = int(min(r["n_ratio"][k], rc.ratio_cap))
+        if nr:
+            slots = np.minimum(tel_nr[lane] + np.arange(nr),
+                               rc.ratio_cap - 1)
+            tel_r[lane, slots] = r["ratio"][k, :nr]
+            tel_rt[lane, slots] = r["ratio_t"][k, :nr] + it_off[k]
+            tel_nr[lane] += int(r["n_ratio"][k])
+
+
 def solve_fused_chunked_qp(X, P, L, U, gamma,
                            cfg: SolverConfig = SolverConfig(), *,
                            impl: str = "auto", block_l: int = 1024,
                            chunk: int = 96, shrinking: bool = False,
                            doubled: bool = False, alpha0=None, G0=None,
                            gram=None, gram_idx=None, mesh=None,
-                           devices=None) -> FusedResult:
+                           devices=None, diagnostics=None):
     """Host-chunked :func:`solve_fused_batched_qp` with HARD compaction.
 
     The in-loop shrinking of the batched engine is *soft* — masked rows
@@ -661,6 +749,16 @@ def solve_fused_chunked_qp(X, P, L, U, gamma,
     :class:`FusedResult` whose ``iterations``/``n_planning``/
     ``n_unshrink`` accumulate across chunks and whose ``G`` is exact on
     every coordinate for every lane.
+
+    ``diagnostics`` (a :class:`repro.telemetry.Diagnostics`) turns on
+    the flight recorder at this host level: each chunk solve runs under
+    a phase scope (``chunk_solve`` events with wall seconds / live lane
+    and row counts), a :class:`repro.runtime.fault.StepMonitor` EWMA
+    over chunk wall-times emits ``straggler_warning`` events when a
+    chunk breaches the deadline factor, and — when
+    ``diagnostics.ring_config`` is set — the per-chunk device rings are
+    rebased to run-global iteration stamps and merged per original lane,
+    with the return value becoming ``(FusedResult, TelemetryRing)``.
     """
     assert (alpha0 is None) == (G0 is None), \
         "warm starts need the (alpha0, G0) pair"
@@ -709,6 +807,23 @@ def solve_fused_chunked_qp(X, P, L, U, gamma,
     live = np.arange(B)
     keep = np.arange(lb)
 
+    # ---- flight recorder (host tier) — zero work when diagnostics=None ----
+    rc = None if diagnostics is None else diagnostics.ring_config
+    monitor = None
+    tel = None
+    if diagnostics is not None:
+        import time as _time
+
+        from repro.runtime.fault import StepMonitor
+        monitor = StepMonitor(warmup_steps=1)
+    if rc is not None:
+        tel = (np.zeros((B, rc.cap), np.int32), np.zeros((B, rc.cap)),
+               np.zeros((B, rc.cap), np.int32),
+               np.zeros((B, rc.cap), np.int32), np.zeros(B, np.int32),
+               np.zeros((B, rc.ratio_cap)),
+               np.zeros((B, rc.ratio_cap), np.int32),
+               np.zeros(B, np.int32))
+
     def reconstruct(idx):
         """Exact full-width G = P - Q alpha for lanes ``idx``."""
         if bank:
@@ -737,7 +852,7 @@ def solve_fused_chunked_qp(X, P, L, U, gamma,
         return b, gap, obj
 
     max_rounds = 4 * max(1, -(-cfg.max_iter // max(1, chunk))) + 16
-    for _ in range(max_rounds):
+    for rnd in range(max_rounds):
         if len(live) == 0:
             break
         m, m_live = len(keep), len(live)
@@ -764,6 +879,9 @@ def solve_fused_chunked_qp(X, P, L, U, gamma,
             bank_kw = dict(gram=jnp.asarray(gsub, dtype),
                            gram_idx=jnp.asarray(gidx_np[lanes]))
 
+        if rc is not None:
+            bank_kw["telemetry"] = rc
+        t0 = 0.0 if diagnostics is None else _time.perf_counter()
         res = chunk_solver(
             X_sub, jnp.asarray(gather(P_np), dtype),
             jnp.asarray(gather(L_np), dtype),
@@ -772,6 +890,24 @@ def solve_fused_chunked_qp(X, P, L, U, gamma,
             block_l=block_l, alpha0=jnp.asarray(gather(alpha), dtype),
             G0=jnp.asarray(gather(G), dtype), doubled=doubled,
             shrinking=shrinking, **bank_kw)
+        ring = None
+        if rc is not None:
+            res, ring = res
+        if diagnostics is not None:
+            jax.block_until_ready(res.alpha)
+            dt = _time.perf_counter() - t0
+            diagnostics.event("phase", name="chunk_solve", seconds=dt,
+                              round=rnd, lanes=m_live, rows=m)
+            # EWMA straggler deadline over chunk wall-times — the same
+            # monitor the resilient LM step loop uses (runtime/fault.py)
+            if monitor.record(dt):
+                diagnostics.event(
+                    "straggler_warning", round=rnd, seconds=dt,
+                    deadline=monitor.deadline, lanes=live.tolist(),
+                    rows=m)
+        if ring is not None:
+            _merge_chunk_ring(rc, ring, live, out_iter[live],
+                              out_unshrink[live], tel)
 
         ra = np.asarray(res.alpha, np.float64)[:m_live]
         rg = np.asarray(res.G, np.float64)[:m_live]
@@ -858,7 +994,7 @@ def solve_fused_chunked_qp(X, P, L, U, gamma,
         out_obj[live] = obj_l
         out_conv[live] = gap_l <= eps
 
-    return FusedResult(
+    result = FusedResult(
         alpha=jnp.asarray(alpha, dtype), b=jnp.asarray(out_b, dtype),
         G=jnp.asarray(G, dtype),
         iterations=jnp.asarray(out_iter, jnp.int32),
@@ -867,3 +1003,13 @@ def solve_fused_chunked_qp(X, P, L, U, gamma,
         converged=jnp.asarray(out_conv),
         n_planning=jnp.asarray(out_plan, jnp.int32),
         n_unshrink=jnp.asarray(out_unshrink, jnp.int32))
+    if rc is None:
+        return result
+    tel_t, tel_gap, tel_act, tel_un, tel_ns, tel_r, tel_rt, tel_nr = tel
+    ring_out = TelemetryRing(
+        t=jnp.asarray(tel_t), gap=jnp.asarray(tel_gap, dtype),
+        n_active=jnp.asarray(tel_act), n_unshrink=jnp.asarray(tel_un),
+        n_samples=jnp.asarray(tel_ns),
+        ratio=jnp.asarray(tel_r, dtype), ratio_t=jnp.asarray(tel_rt),
+        n_ratio=jnp.asarray(tel_nr))
+    return result, ring_out

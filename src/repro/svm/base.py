@@ -28,7 +28,7 @@ class SVMEstimatorBase:
     def _init_common(self, *, algorithm: str, eps: float, max_iter: int,
                      plan_candidates: int, impl: str, engine: str,
                      precompute: bool, dtype, mesh=None,
-                     devices=None) -> None:
+                     devices=None, diagnostics=None) -> None:
         if engine not in ("auto", "fused", "batched", "sharded"):
             raise ValueError(f"engine must be auto|fused|batched|sharded, "
                              f"got {engine!r}")
@@ -46,10 +46,31 @@ class SVMEstimatorBase:
         self.precompute = precompute
         self.mesh = mesh
         self.devices = devices
+        self.diagnostics = diagnostics
         # f64 when x64 is on (the paper-accuracy setting), else a clean f32
         # fallback instead of per-call truncation warnings
         self.dtype = dtype if dtype is not None else (
             jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+
+    def _ring_config(self):
+        """Device-tier telemetry geometry, when the flight recorder is on.
+
+        The static :class:`~repro.telemetry.ring.RingConfig` of the
+        attached :class:`~repro.telemetry.Diagnostics` handle, or ``None``
+        — the engines then trace their telemetry-free jaxpr.  Only the
+        fused/sharded engines carry rings; on the classic batched engine a
+        ``diagnostics=`` handle still records host-tier fit phases.
+        """
+        if self.diagnostics is None:
+            return None
+        return self.diagnostics.ring_config
+
+    def _fit_scope(self, name: str, **meta):
+        """Host-tier phase scope around a fit, or a no-op without one."""
+        from contextlib import nullcontext
+        if self.diagnostics is None:
+            return nullcontext()
+        return self.diagnostics.scope(name, **meta)
 
     def _config(self) -> SolverConfig:
         return SolverConfig(algorithm=self.algorithm, eps=self.eps,

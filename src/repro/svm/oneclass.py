@@ -45,7 +45,7 @@ class OneClassSVM(SVMEstimatorBase):
                  max_iter: int = 1_000_000, plan_candidates: int = 1,
                  impl: str = "auto", engine: str = "auto",
                  precompute: bool = True, dtype=None, mesh=None,
-                 devices=None):
+                 devices=None, diagnostics=None):
         if not 0.0 < nu <= 1.0:
             raise ValueError(f"nu must be in (0, 1], got {nu!r}")
         self.nu = nu
@@ -53,7 +53,7 @@ class OneClassSVM(SVMEstimatorBase):
         self._init_common(algorithm=algorithm, eps=eps, max_iter=max_iter,
                           plan_candidates=plan_candidates, impl=impl,
                           engine=engine, precompute=precompute, dtype=dtype,
-                          mesh=mesh, devices=devices)
+                          mesh=mesh, devices=devices, diagnostics=diagnostics)
 
     def fit(self, X, y=None) -> "OneClassSVM":
         X = jnp.asarray(X, self.dtype)
@@ -65,33 +65,44 @@ class OneClassSVM(SVMEstimatorBase):
         qp = qp_mod.oneclass_qp(l, self.nu, self.dtype)
         a0 = qp_mod.oneclass_alpha0(l, self.nu, self.dtype)
 
-        if engine in ("fused", "sharded"):
-            bank_kw = {}
-            if self.precompute and ops.resolve_impl(self.impl) == "jnp":
-                K = ops.gram(X, gamma=self.gamma_,
-                             impl=self.impl).astype(self.dtype)
-                G0 = -(K @ a0)
-                bank_kw = dict(gram=K[None],
-                               gram_idx=jnp.zeros((1,), jnp.int32))
+        tel = self._ring_config()
+        ring = None
+        with self._fit_scope("oneclass_fit", engine=engine,
+                             rows=int(X.shape[0])):
+            if engine in ("fused", "sharded"):
+                bank_kw = {}
+                if self.precompute and ops.resolve_impl(self.impl) == "jnp":
+                    K = ops.gram(X, gamma=self.gamma_,
+                                 impl=self.impl).astype(self.dtype)
+                    G0 = -(K @ a0)
+                    bank_kw = dict(gram=K[None],
+                                   gram_idx=jnp.zeros((1,), jnp.int32))
+                else:
+                    G0 = -qp_mod.make_rbf(X, self.gamma_).matvec(a0)
+                if engine == "sharded":
+                    solver = partial(solve_fused_sharded_qp, mesh=self.mesh,
+                                     devices=self.devices)
+                else:
+                    solver = solve_fused_batched_qp
+                out = solver(
+                    X, qp.p[None], qp.bounds.lower[None],
+                    qp.bounds.upper[None], self.gamma_, cfg, impl=self.impl,
+                    alpha0=a0[None], G0=G0[None], telemetry=tel, **bank_kw)
+                if tel is not None:
+                    out, ring = out
+                res = jax.tree.map(lambda leaf: leaf[0], out)
             else:
-                G0 = -qp_mod.make_rbf(X, self.gamma_).matvec(a0)
-            if engine == "sharded":
-                solver = partial(solve_fused_sharded_qp, mesh=self.mesh,
-                                 devices=self.devices)
-            else:
-                solver = solve_fused_batched_qp
-            res = solver(
-                X, qp.p[None], qp.bounds.lower[None], qp.bounds.upper[None],
-                self.gamma_, cfg, impl=self.impl,
-                alpha0=a0[None], G0=G0[None], **bank_kw)
-            res = jax.tree.map(lambda leaf: leaf[0], res)
-        else:
-            if self.precompute:
-                K = ops.gram(X, gamma=self.gamma_, impl=self.impl)
-                kern = qp_mod.PrecomputedKernel(K.astype(self.dtype))
-            else:
-                kern = qp_mod.make_rbf(X, self.gamma_)
-            res = solve_qp(kern, qp, cfg, alpha0=a0)
+                if self.precompute:
+                    K = ops.gram(X, gamma=self.gamma_, impl=self.impl)
+                    kern = qp_mod.PrecomputedKernel(K.astype(self.dtype))
+                else:
+                    kern = qp_mod.make_rbf(X, self.gamma_)
+                res = solve_qp(kern, qp, cfg, alpha0=a0)
+            if self.diagnostics is not None:
+                jax.block_until_ready(res.alpha)
+        if ring is not None:
+            self.diagnostics.drain_ring(
+                ring, [{"gamma": self.gamma_, "nu": float(self.nu)}], out)
         self.fit_result_ = res
         self.engine_ = engine
         self.alpha_ = res.alpha

@@ -60,7 +60,13 @@ class SVC(SVMEstimatorBase):
     the class heads over a device mesh
     (:mod:`repro.core.sharded_lanes`) — identical fit, one while_loop per
     device slab; ``mesh``/``devices`` pin the mesh (default: every
-    attached device).
+    attached device).  ``diagnostics`` (a
+    :class:`~repro.telemetry.Diagnostics` handle) turns on the flight
+    recorder: fit phases are timed on the host, and on the fused/sharded
+    engines each class head drains a per-lane
+    :class:`~repro.telemetry.ring.TelemetryRing` (KKT-gap trajectory,
+    active-set size, planning mu/mu* ratios) into the handle's JSONL sink
+    — render it with ``python -m repro.launch.telemetry_report``.
     """
 
     def __init__(self, C: Union[float, np.ndarray] = 1.0,
@@ -70,7 +76,7 @@ class SVC(SVMEstimatorBase):
                  max_iter: int = 1_000_000, plan_candidates: int = 1,
                  impl: str = "auto", engine: str = "auto",
                  precompute: bool = True, dtype=None, mesh=None,
-                 devices=None):
+                 devices=None, diagnostics=None):
         if not (class_weight is None or class_weight == "balanced"
                 or isinstance(class_weight, dict)):
             raise ValueError("class_weight must be None, 'balanced' or a "
@@ -81,7 +87,7 @@ class SVC(SVMEstimatorBase):
         self._init_common(algorithm=algorithm, eps=eps, max_iter=max_iter,
                           plan_candidates=plan_candidates, impl=impl,
                           engine=engine, precompute=precompute, dtype=dtype,
-                          mesh=mesh, devices=devices)
+                          mesh=mesh, devices=devices, diagnostics=diagnostics)
 
     # -- fitting ------------------------------------------------------------
 
@@ -127,35 +133,54 @@ class SVC(SVMEstimatorBase):
         else:
             Y = mc.ovr_labels(y_idx, k, self.dtype)
 
-        if engine in ("fused", "sharded"):
-            shard_kw = {}
-            if engine == "sharded":
-                shard_kw = dict(mesh=self.mesh, devices=self.devices)
-                if self.mesh is None and self.devices is None:
-                    shard_kw["devices"] = tuple(jax.devices())
-            if k == 2:
-                C_arg = (C_bin[None, :] if self.class_weight is not None
-                         else C_bin)
-                res = mc.solve_ovr_fused(X, yb[None, :], C_arg,
-                                         self.gamma_, cfg, impl=self.impl,
-                                         precompute=self.precompute,
-                                         **shard_kw)
-                res = jax.tree.map(lambda leaf: leaf[0], res)
+        tel = self._ring_config()
+        ring = None
+        with self._fit_scope("svc_fit", engine=engine, n_class=k,
+                             rows=int(X.shape[0])):
+            if engine in ("fused", "sharded"):
+                shard_kw = {}
+                if engine == "sharded":
+                    shard_kw = dict(mesh=self.mesh, devices=self.devices)
+                    if self.mesh is None and self.devices is None:
+                        shard_kw["devices"] = tuple(jax.devices())
+                if k == 2:
+                    C_arg = (C_bin[None, :] if self.class_weight is not None
+                             else C_bin)
+                    out = mc.solve_ovr_fused(X, yb[None, :], C_arg,
+                                             self.gamma_, cfg, impl=self.impl,
+                                             precompute=self.precompute,
+                                             telemetry=tel, **shard_kw)
+                else:
+                    out = mc.solve_ovr_fused(X, Y, C_ovr,
+                                             self.gamma_, cfg, impl=self.impl,
+                                             precompute=self.precompute,
+                                             telemetry=tel, **shard_kw)
+                if tel is not None:
+                    out, ring = out
+                res = (jax.tree.map(lambda leaf: leaf[0], out)
+                       if k == 2 else out)
             else:
-                res = mc.solve_ovr_fused(X, Y, C_ovr,
-                                         self.gamma_, cfg, impl=self.impl,
-                                         precompute=self.precompute,
-                                         **shard_kw)
-        else:
-            if self.precompute:
-                K = ops.gram(X, gamma=self.gamma_, impl=self.impl)
-                kern = qp_mod.PrecomputedKernel(K.astype(self.dtype))
-            else:
-                kern = qp_mod.make_rbf(X, self.gamma_)
-            if k == 2:
-                res = solve(kern, yb, C_bin, cfg)
-            else:
-                res = mc.solve_ovr(kern, Y, C_ovr, cfg)
+                if self.precompute:
+                    K = ops.gram(X, gamma=self.gamma_, impl=self.impl)
+                    kern = qp_mod.PrecomputedKernel(K.astype(self.dtype))
+                else:
+                    kern = qp_mod.make_rbf(X, self.gamma_)
+                if k == 2:
+                    res = solve(kern, yb, C_bin, cfg)
+                else:
+                    res = mc.solve_ovr(kern, Y, C_ovr, cfg)
+            if self.diagnostics is not None:
+                jax.block_until_ready(res.alpha)
+        if ring is not None:
+            # one lane per class head (the lone head of a binary fit is the
+            # "classes_[1] vs rest" problem, label index 1)
+            Cv = np.asarray(self.C, float).reshape(-1)
+            heads = [1] if k == 2 else range(k)
+            meta = [{"gamma": self.gamma_, "label": int(c),
+                     **({} if self.class_weight is not None else
+                        {"C": float(Cv[c] if Cv.size > 1 else Cv[0])})}
+                    for c in heads]
+            self.diagnostics.drain_ring(ring, meta, out)
         self.fit_result_: Union[SolveResult, FusedResult] = res
         self.engine_ = engine
         self.alpha_ = res.alpha          # (l,) binary, (k, l) one-vs-rest

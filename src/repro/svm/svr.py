@@ -56,14 +56,14 @@ class SVR(SVMEstimatorBase):
                  max_iter: int = 1_000_000, plan_candidates: int = 1,
                  impl: str = "auto", engine: str = "auto",
                  precompute: bool = True, dtype=None, mesh=None,
-                 devices=None):
+                 devices=None, diagnostics=None):
         self.C = C
         self.epsilon = epsilon
         self.gamma = gamma
         self._init_common(algorithm=algorithm, eps=eps, max_iter=max_iter,
                           plan_candidates=plan_candidates, impl=impl,
                           engine=engine, precompute=precompute, dtype=dtype,
-                          mesh=mesh, devices=devices)
+                          mesh=mesh, devices=devices, diagnostics=diagnostics)
 
     def fit(self, X, y) -> "SVR":
         X = jnp.asarray(X, self.dtype)
@@ -74,28 +74,40 @@ class SVR(SVMEstimatorBase):
         engine = self._resolve_engine()
         qp = qp_mod.svr_qp(y, float(self.C), float(self.epsilon))
 
-        if engine in ("fused", "sharded"):
-            bank_kw = {}
-            if self.precompute and ops.resolve_impl(self.impl) == "jnp":
-                K = ops.gram(X, gamma=self.gamma_, impl=self.impl)
-                bank_kw = dict(gram=K[None].astype(self.dtype),
-                               gram_idx=jnp.zeros((1,), jnp.int32))
-            if engine == "sharded":
-                solver = partial(solve_fused_sharded_qp, mesh=self.mesh,
-                                 devices=self.devices)
+        tel = self._ring_config()
+        ring = None
+        with self._fit_scope("svr_fit", engine=engine, rows=int(X.shape[0])):
+            if engine in ("fused", "sharded"):
+                bank_kw = {}
+                if self.precompute and ops.resolve_impl(self.impl) == "jnp":
+                    K = ops.gram(X, gamma=self.gamma_, impl=self.impl)
+                    bank_kw = dict(gram=K[None].astype(self.dtype),
+                                   gram_idx=jnp.zeros((1,), jnp.int32))
+                if engine == "sharded":
+                    solver = partial(solve_fused_sharded_qp, mesh=self.mesh,
+                                     devices=self.devices)
+                else:
+                    solver = solve_fused_batched_qp
+                out = solver(
+                    X, qp.p[None], qp.bounds.lower[None],
+                    qp.bounds.upper[None], self.gamma_, cfg, impl=self.impl,
+                    doubled=True, telemetry=tel, **bank_kw)
+                if tel is not None:
+                    out, ring = out
+                res = jax.tree.map(lambda leaf: leaf[0], out)
             else:
-                solver = solve_fused_batched_qp
-            res = solver(
-                X, qp.p[None], qp.bounds.lower[None], qp.bounds.upper[None],
-                self.gamma_, cfg, impl=self.impl, doubled=True, **bank_kw)
-            res = jax.tree.map(lambda leaf: leaf[0], res)
-        else:
-            if self.precompute:
-                K = ops.gram(X, gamma=self.gamma_, impl=self.impl)
-                base = qp_mod.PrecomputedKernel(K.astype(self.dtype))
-            else:
-                base = qp_mod.make_rbf(X, self.gamma_)
-            res = solve_qp(qp_mod.DoubledKernel(base), qp, cfg)
+                if self.precompute:
+                    K = ops.gram(X, gamma=self.gamma_, impl=self.impl)
+                    base = qp_mod.PrecomputedKernel(K.astype(self.dtype))
+                else:
+                    base = qp_mod.make_rbf(X, self.gamma_)
+                res = solve_qp(qp_mod.DoubledKernel(base), qp, cfg)
+            if self.diagnostics is not None:
+                jax.block_until_ready(res.alpha)
+        if ring is not None:
+            self.diagnostics.drain_ring(
+                ring, [{"gamma": self.gamma_, "C": float(self.C),
+                        "epsilon": float(self.epsilon)}], out)
         self.fit_result_ = res
         self.engine_ = engine
         self.alpha_ = res.alpha                    # (2l,) doubled dual

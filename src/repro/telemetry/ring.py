@@ -1,0 +1,144 @@
+"""Device-tier telemetry: bounded per-lane ring buffers for the fused engine.
+
+The fused batched solver (:mod:`repro.core.solver_fused`) runs a whole
+(gamma, class, C) grid inside ONE ``lax.while_loop`` and, without help,
+only final scalars escape.  :class:`TelemetryRing` is a small pytree of
+bounded per-lane buffers carried through the loop state that samples the
+iteration dynamics the paper actually argues about:
+
+* every ``sample_every`` iterations (plus a forced sample on the
+  iteration a lane freezes): KKT gap, active-set size under shrinking,
+  and the running unshrink counter;
+* on every *accepted* planning step: the mu/mu* ratio — the classic
+  engine's Fig. 3 ``record_trace`` channel, generalized to B lanes.
+
+Overflow follows the classic trace precedent (oldest-wins): the write
+slot is ``min(count, cap - 1)``, so the first ``cap - 1`` samples are
+kept verbatim and the last slot always holds the newest sample, while
+the count keeps incrementing so overflow is detectable
+(``n_samples > cap``).
+
+:class:`RingConfig` is frozen/hashable so it can ride ``jit`` static
+arguments; ``telemetry=None`` at the solver layer means "no ring in the
+carry at all" — the traced jaxpr must stay byte-identical to the
+telemetry-free engine (asserted in ``tests/test_telemetry.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RingConfig:
+    """Static (hashable) ring geometry.
+
+    ``sample_every`` is the sampling period in loop iterations;
+    ``cap`` bounds the sampled channels and ``ratio_cap`` the
+    planning-ratio event channel (both per lane).
+    """
+
+    sample_every: int = 64
+    cap: int = 128
+    ratio_cap: int = 128
+
+    def __post_init__(self):
+        assert self.sample_every >= 1
+        assert self.cap >= 1 and self.ratio_cap >= 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TelemetryRing:
+    """Per-lane ring buffers (all leaves lane-leading, shard-safe).
+
+    Sampled channels (written every ``sample_every`` iterations and on
+    lane freeze): ``t`` (iteration stamp), ``gap`` (KKT gap),
+    ``n_active`` (active-set size; the full width when shrinking is
+    off), ``n_unshrink`` (running unshrink-event counter).  Event
+    channel (written on accepted planning steps): ``ratio`` = mu/mu*
+    with its ``ratio_t`` stamp.  ``n_samples``/``n_ratio`` count total
+    writes and may exceed the caps (oldest-wins overflow).
+    """
+
+    t: jax.Array           # (B, cap) int32
+    gap: jax.Array         # (B, cap)
+    n_active: jax.Array    # (B, cap) int32
+    n_unshrink: jax.Array  # (B, cap) int32
+    n_samples: jax.Array   # (B,) int32
+    ratio: jax.Array       # (B, ratio_cap)
+    ratio_t: jax.Array     # (B, ratio_cap) int32
+    n_ratio: jax.Array     # (B,) int32
+
+
+def ring_init(cfg: RingConfig, B: int, dtype) -> TelemetryRing:
+    zi = jnp.zeros((B, cfg.cap), jnp.int32)
+    return TelemetryRing(
+        t=zi, gap=jnp.zeros((B, cfg.cap), dtype), n_active=zi,
+        n_unshrink=zi, n_samples=jnp.zeros((B,), jnp.int32),
+        ratio=jnp.zeros((B, cfg.ratio_cap), dtype),
+        ratio_t=jnp.zeros((B, cfg.ratio_cap), jnp.int32),
+        n_ratio=jnp.zeros((B,), jnp.int32))
+
+
+def ring_update(ring: TelemetryRing, cfg: RingConfig, *, t, active,
+                newly_done, gap, n_active, n_unshrink, plan_event,
+                ratio) -> TelemetryRing:
+    """One in-loop telemetry step (pure O(B) algebra, no row-width work).
+
+    ``t`` is the scalar loop counter; every other argument is (B,).
+    ``active`` marks lanes live *entering* the iteration, ``newly_done``
+    lanes that froze on it (forces a final sample so the convergence
+    point is always captured), ``plan_event`` accepted planning steps.
+    """
+    B = ring.n_samples.shape[0]
+    lanes = jnp.arange(B)
+    ti = jnp.asarray(t, jnp.int32)
+
+    write = active & (((ti % cfg.sample_every) == 0) | newly_done)
+    slot = jnp.minimum(ring.n_samples, cfg.cap - 1)
+
+    def wr(buf, val):
+        cur = buf[lanes, slot]
+        val = val.astype(buf.dtype)
+        return buf.at[lanes, slot].set(jnp.where(write, val, cur))
+
+    ev = plan_event & active
+    rslot = jnp.minimum(ring.n_ratio, cfg.ratio_cap - 1)
+
+    def wr_ev(buf, val):
+        cur = buf[lanes, rslot]
+        val = val.astype(buf.dtype)
+        return buf.at[lanes, rslot].set(jnp.where(ev, val, cur))
+
+    # the scatters are the expensive part and fire on a small fraction
+    # of iterations (every sample_every-th, lane freezes, accepted
+    # planning steps) — cond them out so the common iteration pays only
+    # the O(B) predicates and counter bumps
+    t_b, gap_b, na_b, nu_b = jax.lax.cond(
+        jnp.any(write),
+        lambda bufs: (wr(bufs[0], jnp.broadcast_to(ti, (B,))),
+                      wr(bufs[1], gap), wr(bufs[2], n_active),
+                      wr(bufs[3], n_unshrink)),
+        lambda bufs: bufs,
+        (ring.t, ring.gap, ring.n_active, ring.n_unshrink))
+    ratio_b, rt_b = jax.lax.cond(
+        jnp.any(ev),
+        lambda bufs: (wr_ev(bufs[0], ratio),
+                      wr_ev(bufs[1], jnp.broadcast_to(ti, (B,)))),
+        lambda bufs: bufs,
+        (ring.ratio, ring.ratio_t))
+
+    return TelemetryRing(
+        t=t_b, gap=gap_b, n_active=na_b, n_unshrink=nu_b,
+        n_samples=ring.n_samples + write.astype(jnp.int32),
+        ratio=ratio_b, ratio_t=rt_b,
+        n_ratio=ring.n_ratio + ev.astype(jnp.int32))
+
+
+def ring_slice(ring: TelemetryRing, idx) -> TelemetryRing:
+    """Lane-subset view (all leaves are lane-leading)."""
+    return jax.tree.map(lambda leaf: leaf[idx], ring)
