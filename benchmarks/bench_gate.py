@@ -25,6 +25,16 @@ generations where absolute wall times do not):
   near-free; its per-record tolerance bounds the allowed recorder cost
   at ~10%.  (Telemetry *off* is gated structurally instead: the jaxpr is
   asserted byte-identical to pre-telemetry in ``tests/test_telemetry.py``.)
+* ``conjugate_iters_ratio`` — iters_pasmo / iters_conjugate on the
+  chess-board problem (ISSUE 9): an ITERATION-COUNT ratio, deterministic
+  per (jax version, dtype), so host noise can't move it.  Bar: >= 1.1x —
+  the per-record tolerance in ``BENCH_grid_quick.json`` maps the
+  measured ~1.75x record down to exactly that floor.
+
+A fresh record whose ``"errors"`` list is non-empty is PARTIAL — some
+bench entry raised and ``benchmarks.run`` already exited non-zero; the
+gate refuses to pass judgement on it (the surviving ratios may be fine,
+but "green gate over a failed bench" is how silent coverage loss starts).
 
 On any failure the gate prints the stored-vs-fresh **environment
 fingerprint** diff (machine/backend/device provenance stamped into every
@@ -55,7 +65,7 @@ import sys
 
 METRICS = ("fused_batched_vs_sequential", "doubled_row_parity",
            "shrinking_speedup", "sharded_lanes_speedup",
-           "telemetry_overhead")
+           "telemetry_overhead", "conjugate_iters_ratio")
 DEFAULT_TOLERANCE = 0.25
 
 
@@ -99,6 +109,17 @@ def gate(fresh_path: str, record_path: str) -> int:
         fresh = json.load(f)
     with open(record_path) as f:
         record = json.load(f)
+
+    errors = fresh.get("errors") or []
+    if errors:
+        print(f"bench_gate: fresh record is PARTIAL — {len(errors)} bench "
+              "entr" + ("y" if len(errors) == 1 else "ies") + " failed:")
+        for e in errors:
+            print(f"  {e['entry']}: {e['error']}")
+        if skip:
+            print("bench_gate: partial record IGNORED (BENCH_GATE_SKIP set)")
+            return 0
+        return 1
 
     rec_by_key = {_config_key(e): e for e in record["configs"]}
     checked = 0

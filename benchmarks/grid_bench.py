@@ -62,8 +62,19 @@ Sharded-vs-fused objective parity to 1e-6 on every lane is asserted
 before any timing.  On a single device the entry is skipped (the gate
 skips missing configs gracefully).
 
+Each profile also carries a **conjugate** entry (ISSUE 9): Conjugate-SMO
+(``step="conjugate"`` over the plain-SMO base) vs the planning-ahead
+default on the chess-board problem, gated on the deterministic
+``conjugate_iters_ratio`` iteration-count ratio (see the ``CONJUGATE``
+spec below and ``bench_gate.py``).
+
 ``run(profile=..., json_path=...)`` also emits the machine-readable
 ``BENCH_grid.json`` perf-trajectory record (see ``benchmarks.run --quick``).
+Any entry that raises is recorded in the JSON's ``"errors"`` list (the
+record is still written for post-mortem, marked partial) and ``run()``
+re-raises at the end, so ``benchmarks.run`` exits non-zero instead of
+shipping a silently-partial record; ``bench_gate.py`` likewise refuses
+fresh records with a non-empty ``"errors"`` list.
 """
 
 import json
@@ -156,6 +167,19 @@ SHRINK = {
                   Cs=[1.0, 256.0], repeat=3, chunk=256, eps=1e-5),
     "full": dict(l=1024, d=2, k=2, n_gamma=2, g_range=(0.3, 1.0),
                  Cs=[1.0, 256.0], repeat=3, chunk=256, eps=1e-5),
+}
+
+
+# Conjugate entry per profile (ISSUE 9): the fused engine on the paper's
+# chess-board problem, ``step="conjugate"`` (over the plain-SMO base) vs
+# the planning-ahead default.  The gated ``conjugate_iters_ratio`` =
+# iters_pasmo / iters_conjugate is an ITERATION-COUNT ratio, not a wall
+# time — deterministic per (jax version, dtype), so its gate is immune to
+# host noise.  Bar: >= 1.1x (measured ~1.75x on the quick config; the
+# per-record tolerance in BENCH_grid_quick.json encodes the 1.1 floor).
+CONJUGATE = {
+    "quick": dict(n=240, C=1000.0, gamma=0.5, eps=1e-3, repeat=2),
+    "full": dict(n=240, C=1000.0, gamma=0.5, eps=1e-3, repeat=3),
 }
 
 
@@ -342,9 +366,53 @@ def _telemetry_bench(spec: dict) -> dict:
     }
 
 
+def _conjugate_bench(spec: dict) -> dict:
+    """Conjugate-SMO vs PA-SMO iteration counts on the chess-board (fused
+    jnp engine, one lane); also times both solves for the trajectory."""
+    from repro.core.solver_fused import solve_fused_batched
+    from repro.svm.data import chessboard
+    Xn, yn = chessboard(spec["n"], seed=0)
+    X, Y = jnp.asarray(Xn), jnp.asarray(yn)[None, :]
+    C, gamma = spec["C"], spec["gamma"]
+    base = dict(eps=spec["eps"], max_iter=500_000)
+    cfg_pa = SolverConfig(algorithm="pasmo", **base)
+    cfg_cj = SolverConfig(algorithm="smo", step="conjugate", **base)
+    kw = dict(impl="jnp")
+    r_pa = solve_fused_batched(X, Y, C, gamma, cfg_pa, **kw)
+    r_cj = solve_fused_batched(X, Y, C, gamma, cfg_cj, **kw)
+    assert bool(r_pa.converged[0]) and bool(r_cj.converged[0])
+    np.testing.assert_allclose(np.asarray(r_cj.objective),
+                               np.asarray(r_pa.objective),
+                               rtol=1e-6, atol=1e-9)
+    it_pa, it_cj = int(r_pa.iterations[0]), int(r_cj.iterations[0])
+    fns = {
+        "fused_pasmo_chessboard": lambda: jax.block_until_ready(
+            solve_fused_batched(X, Y, C, gamma, cfg_pa, **kw).alpha),
+        "fused_conjugate_chessboard": lambda: jax.block_until_ready(
+            solve_fused_batched(X, Y, C, gamma, cfg_cj, **kw).alpha),
+    }
+    secs, meds = _interleaved_time(fns, spec["repeat"])
+    return {
+        "config": {"l": spec["n"], "d": 2, "k": 1, "n_gamma": 1,
+                   "g_range": (gamma, gamma), "Cs": [C],
+                   "repeat": spec["repeat"], "conjugate": True},
+        "lanes": 1,
+        "n_qp": 1,
+        "eps": spec["eps"],
+        "iterations": {"pasmo": it_pa, "conjugate": it_cj},
+        "seconds": secs,
+        "seconds_median": meds,
+        "speedups": {"conjugate_iters_ratio": it_pa / it_cj},
+    }
+
+
 def _sharded_bench(spec: dict):
-    """Lane-sharded vs single-device fused engine; None on one device."""
+    """Lane-sharded vs single-device fused engine; None on one device
+    (printed as a skip — the gate tolerates the missing config)."""
     if len(jax.devices()) < 2:
+        print("grid_bench: single device — sharded entry skipped "
+              "(run under XLA_FLAGS=--xla_force_host_platform_"
+              "device_count=8 to measure it)")
         return None
     from repro.core.sharded_lanes import resolve_lane_mesh
     from repro.svm.data import xor_gaussians
@@ -411,6 +479,55 @@ def _interleaved_time(fns, repeat):
             {name: float(np.median(s)) for name, s in samples.items()})
 
 
+def _profile_bench(spec: dict, cfg: SolverConfig) -> dict:
+    l, d, k, ng = spec["l"], spec["d"], spec["k"], spec["n_gamma"]
+    X, Y, gammas, Cs = _workload(l, d, k, ng, spec["g_range"], spec["Cs"])
+    lanes = ng * k
+    n_qp = lanes * len(Cs)
+
+    res = grid_mod.solve_grid(X, Y, Cs, gammas, cfg, impl="jnp")
+    assert bool(jnp.all(res.converged))
+
+    fns = {
+        "vmapped": lambda: jax.block_until_ready(
+            grid_mod.solve_grid(X, Y, Cs, gammas, cfg).alpha),
+        "compacted": lambda: jax.block_until_ready(
+            grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg).alpha),
+        "fused_batched": lambda: jax.block_until_ready(
+            grid_mod.solve_grid(X, Y, Cs, gammas, cfg,
+                                impl="jnp").alpha),
+        "compacted_fused": lambda: jax.block_until_ready(
+            grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg,
+                                          impl="jnp").alpha),
+    }
+    if spec["sequential"]:
+        fns["sequential"] = lambda: _sequential(X, Y, gammas, Cs, cfg)
+
+    secs, meds = _interleaved_time(fns, spec["repeat"])
+    speedups = {
+        "fused_batched_vs_vmapped": meds["vmapped"]
+                                    / meds["fused_batched"],
+        "compacted_fused_vs_vmapped": meds["vmapped"]
+                                      / meds["compacted_fused"],
+    }
+    if "sequential" in secs:
+        speedups["fused_batched_vs_sequential"] = (
+            meds["sequential"] / meds["fused_batched"])
+        speedups["compacted_vs_sequential"] = (
+            meds["sequential"] / meds["compacted"])
+    return {
+        "config": {kk: spec[kk] for kk in
+                   ("l", "d", "k", "n_gamma", "g_range", "Cs",
+                    "repeat")},
+        "lanes": lanes,
+        "n_qp": n_qp,
+        "eps": cfg.eps,
+        "seconds": secs,
+        "seconds_median": meds,
+        "speedups": speedups,
+    }
+
+
 def run_bench(profile: str = "full") -> dict:
     cfg = SolverConfig(eps=1e-3)
     bench = {
@@ -424,65 +541,33 @@ def run_bench(profile: str = "full") -> dict:
         # drift is diagnosable from the two JSON files alone
         "fingerprint": env_fingerprint(),
         "configs": [],
+        # entries that raised, as {"entry", "error"} — a non-empty list
+        # marks the record PARTIAL: ``run()`` re-raises after writing the
+        # JSON so the runner exits non-zero, and bench_gate refuses to
+        # gate against a partial fresh record
+        "errors": [],
     }
+
+    def add_entry(name, fn):
+        try:
+            entry = fn()
+        except Exception as exc:
+            bench["errors"].append(
+                {"entry": name, "error": f"{type(exc).__name__}: {exc}"})
+            print(f"grid_bench: entry '{name}' FAILED — "
+                  f"{type(exc).__name__}: {exc}", flush=True)
+            return
+        if entry is not None:
+            bench["configs"].append(entry)
+
     for spec in PROFILES[profile]:
-        l, d, k, ng = spec["l"], spec["d"], spec["k"], spec["n_gamma"]
-        X, Y, gammas, Cs = _workload(l, d, k, ng, spec["g_range"],
-                                     spec["Cs"])
-        lanes = ng * k
-        n_qp = lanes * len(Cs)
-
-        res = grid_mod.solve_grid(X, Y, Cs, gammas, cfg, impl="jnp")
-        assert bool(jnp.all(res.converged))
-
-        fns = {
-            "vmapped": lambda: jax.block_until_ready(
-                grid_mod.solve_grid(X, Y, Cs, gammas, cfg).alpha),
-            "compacted": lambda: jax.block_until_ready(
-                grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg).alpha),
-            "fused_batched": lambda: jax.block_until_ready(
-                grid_mod.solve_grid(X, Y, Cs, gammas, cfg,
-                                    impl="jnp").alpha),
-            "compacted_fused": lambda: jax.block_until_ready(
-                grid_mod.solve_grid_compacted(X, Y, Cs, gammas, cfg,
-                                              impl="jnp").alpha),
-        }
-        if spec["sequential"]:
-            fns["sequential"] = lambda: _sequential(X, Y, gammas, Cs, cfg)
-
-        secs, meds = _interleaved_time(fns, spec["repeat"])
-        speedups = {
-            "fused_batched_vs_vmapped": meds["vmapped"]
-                                        / meds["fused_batched"],
-            "compacted_fused_vs_vmapped": meds["vmapped"]
-                                          / meds["compacted_fused"],
-        }
-        if "sequential" in secs:
-            speedups["fused_batched_vs_sequential"] = (
-                meds["sequential"] / meds["fused_batched"])
-            speedups["compacted_vs_sequential"] = (
-                meds["sequential"] / meds["compacted"])
-        bench["configs"].append({
-            "config": {kk: spec[kk] for kk in
-                       ("l", "d", "k", "n_gamma", "g_range", "Cs",
-                        "repeat")},
-            "lanes": lanes,
-            "n_qp": n_qp,
-            "eps": cfg.eps,
-            "seconds": secs,
-            "seconds_median": meds,
-            "speedups": speedups,
-        })
-    bench["configs"].append(_row_pass_bench(ROW_PASS[profile]))
-    bench["configs"].append(_telemetry_bench(TELEMETRY[profile]))
-    bench["configs"].append(_shrink_bench(SHRINK[profile]))
-    sharded = _sharded_bench(SHARDED[profile])
-    if sharded is not None:
-        bench["configs"].append(sharded)
-    else:
-        print("grid_bench: single device — sharded entry skipped "
-              "(run under XLA_FLAGS=--xla_force_host_platform_"
-              "device_count=8 to measure it)")
+        add_entry(f"profile_l{spec['l']}",
+                  lambda spec=spec: _profile_bench(spec, cfg))
+    add_entry("row_pass", lambda: _row_pass_bench(ROW_PASS[profile]))
+    add_entry("telemetry", lambda: _telemetry_bench(TELEMETRY[profile]))
+    add_entry("shrink", lambda: _shrink_bench(SHRINK[profile]))
+    add_entry("conjugate", lambda: _conjugate_bench(CONJUGATE[profile]))
+    add_entry("sharded", lambda: _sharded_bench(SHARDED[profile]))
     return bench
 
 
@@ -508,4 +593,15 @@ def run(profile: str = "full", json_path: str = None):
         with open(json_path, "w") as f:
             json.dump(bench, f, indent=2, sort_keys=True)
             f.write("\n")
+    if bench["errors"]:
+        # the partial record is on disk (marked via its "errors" field)
+        # for post-mortem, but the run must not pass: re-raise so
+        # benchmarks.run counts the failure and exits non-zero
+        detail = "; ".join(f"{e['entry']}: {e['error']}"
+                           for e in bench["errors"])
+        raise RuntimeError(
+            f"{len(bench['errors'])} grid bench entr"
+            f"{'y' if len(bench['errors']) == 1 else 'ies'} failed "
+            f"(partial record{' at ' + json_path if json_path else ''}): "
+            f"{detail}")
     return rows_from_bench(bench)

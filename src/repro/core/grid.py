@@ -256,6 +256,13 @@ def solve_grid(X, Y, Cs, gammas, cfg: SolverConfig = SolverConfig(), *,
     sentinel while reporting the free-SV count in ``n_free_sv`` (see
     module notes).
 
+    ``cfg.step == "conjugate"`` (with ``cfg.algorithm == "smo"``) selects
+    the Conjugate-SMO two-direction step in EITHER engine — the config is
+    static, so the knob threads through unchanged; on the fused path the
+    per-lane conjugate carry resets at chunk boundaries in
+    :func:`solve_grid_compacted` (a fresh direction history, exactly like
+    the planning history).
+
     With ``warm_start=True`` the vmapped engine solves the C-axis in
     ascending order (results are scattered back to input order), chaining
     each solve from the previous optimum; ``warm_start=False`` gives

@@ -233,6 +233,10 @@ def solve_fused_sharded_qp(X, P, L, U, gamma,
     turns on the fused engine's flight recorder per shard; the per-shard
     rings gather back in caller lane order (pad lanes stripped) and the
     return value becomes ``(FusedResult, TelemetryRing)``.
+
+    ``cfg.step == "conjugate"`` rides through unchanged (the config is
+    static and the conjugate carry is per lane, so the per-shard body is
+    still byte-for-byte the batched engine).
     """
     assert (alpha0 is None) == (G0 is None), \
         "warm starts need the (alpha0, G0) pair"

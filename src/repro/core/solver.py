@@ -54,11 +54,18 @@ class SolverConfig:
     shrink_every: int = 0          # 0 = off; else re-evaluate mask every k its
     record_steps: bool = False     # record (i, j, mu) per iteration (debug /
     step_cap: int = 4096           # trajectory-parity tests)
+    step: str = "plain"            # plain | conjugate (Conjugate-SMO 2-dir)
 
     def __post_init__(self):
         assert self.algorithm in ("smo", "pasmo", "pasmo_simple", "overshoot")
         assert self.wss in ("wss2", "mvp")
         assert self.plan_candidates >= 1
+        assert self.step in ("plain", "conjugate")
+        # The conjugate step *replaces* the planning-ahead machinery (both
+        # re-use the previous working set as the second direction), so it
+        # only composes with the plain SMO base algorithm.
+        assert self.step == "plain" or self.algorithm == "smo", \
+            "step='conjugate' requires algorithm='smo'"
 
 
 class SolverState(NamedTuple):
@@ -73,6 +80,8 @@ class SolverState(NamedTuple):
     p_smo: jax.Array          # bool: previous iteration performed a SMO step
     prev_free: jax.Array      # bool: ... and it was free
     prev_ratio_ok: jax.Array  # bool: last planning ratio in [1-eta, 1+eta]
+    dir_u: jax.Array          # (l,) Q (e_pi - e_pj) of the previous step
+    conj_ok: jax.Array        # bool: prev direction usable as conjugate
     active: jax.Array         # (l,) bool soft-shrinking mask
     n_planning: jax.Array     # int32 counters
     n_free: jax.Array
@@ -156,6 +165,7 @@ def _make_body(kernel, p, bounds: Bounds, diag, cfg: SolverConfig):
     eps = jnp.asarray(cfg.eps, dtype)
     eta = cfg.eta
     planning_enabled = cfg.algorithm in ("pasmo", "pasmo_simple")
+    conjugate = cfg.step == "conjugate"
 
     def body(s: SolverState) -> SolverState:
         alpha, G = s.alpha, s.G
@@ -267,6 +277,46 @@ def _make_body(kernel, p, bounds: Bounds, diag, cfg: SolverConfig):
                 any_feasible = any_feasible | feasible
             do_plan = allow & any_feasible
 
+        mu2v = jnp.asarray(0.0, dtype)
+        if conjugate:
+            # Conjugate-SMO step: solve the exact 2x2 subproblem on the
+            # current WSS direction v1 = e_i - e_j and the previous update
+            # direction v2 = e_pi - e_pj.  Q v2 is carried in ``dir_u`` from
+            # the previous iteration, so all five restriction terms are O(1)
+            # gathers — no extra kernel rows.
+            cpi, cpj = s.hist_i[0], s.hist_j[0]
+            w2 = jnp.take(G, cpi) - jnp.take(G, cpj)
+            q22 = jnp.take(s.dir_u, cpi) - jnp.take(s.dir_u, cpj)
+            q12 = jnp.take(s.dir_u, i) - jnp.take(s.dir_u, j)
+            terms = step_mod.PlanningTerms(w1=l, w2=w2, Q11=q11, Q22=q22,
+                                           Q12=q12)
+            mu1c, mu2c, okdet = step_mod.conjugate_step(terms)
+
+            def moved(c):
+                # net displacement of coordinate c under (mu1c v1 + mu2c v2);
+                # indicator arithmetic handles overlapping pairs exactly
+                return (mu1c * ((c == i).astype(dtype)
+                                - (c == j).astype(dtype))
+                        + mu2c * ((c == cpi).astype(dtype)
+                                  - (c == cpj).astype(dtype)))
+
+            def interior(c):
+                a_c = jnp.take(alpha, c) + moved(c)
+                return ((jnp.take(bounds.lower, c) < a_c)
+                        & (a_c < jnp.take(bounds.upper, c)))
+
+            inter = interior(i) & interior(j) & interior(cpi) & interior(cpj)
+            # exact gain of the unconstrained 2-direction step; must dominate
+            # the 1-D Newton gain along v1 (true for a PD 2x2 system — the
+            # check guards near-degenerate numerics only)
+            g2 = 0.5 * (l * mu1c + w2 * mu2c)
+            g1 = step_mod.gain_newton(l, q11)
+            accept = (s.conj_ok & (s.n_hist >= 1) & okdet & inter
+                      & (g2 + TAU >= g1))
+            do_plan = accept
+            mu_plan = mu1c
+            mu2v = jnp.where(accept, mu2c, jnp.asarray(0.0, dtype))
+
         mu = jnp.where(do_plan, mu_plan, mu_smo)
         reverted = (s.prev_free if cfg.algorithm == "pasmo" else s.p_smo)
         reverted = reverted & ~do_plan & jnp.asarray(planning_enabled)
@@ -276,6 +326,11 @@ def _make_body(kernel, p, bounds: Bounds, diag, cfg: SolverConfig):
         # ------------------------------------------------------------------
         alpha_new = alpha.at[i].add(mu).at[j].add(-mu)
         G_new = G - mu * (row_i - row_j)
+        if conjugate:
+            # rejected conjugate steps have mu2v == 0, so the extra scatter /
+            # axpy are exact no-ops and G stays bitwise on the SMO trajectory
+            alpha_new = alpha_new.at[cpi].add(mu2v).at[cpj].add(-mu2v)
+            G_new = G_new - mu2v * s.dir_u
 
         # ------------------------------------------------------------------
         # Bookkeeping, shrinking, stopping
@@ -302,6 +357,7 @@ def _make_body(kernel, p, bounds: Bounds, diag, cfg: SolverConfig):
             steps_i, steps_j, steps_mu = s.steps_i, s.steps_j, s.steps_mu
 
         active = s.active
+        refresh = unshrunk = jnp.asarray(False)
         if cfg.shrink_every > 0:
             refresh = (s.t % cfg.shrink_every) == (cfg.shrink_every - 1)
             active = jnp.where(refresh, _shrink_mask(G_new, alpha_new, bounds),
@@ -309,8 +365,20 @@ def _make_body(kernel, p, bounds: Bounds, diag, cfg: SolverConfig):
             gap_masked = qp_mod.finite_gap(
                 qp_mod.kkt_gap(G_new, alpha_new, bounds, active))
             # unshrink when the masked problem looks solved
-            active = jnp.where(gap_masked <= eps, jnp.ones_like(active),
-                               active)
+            unshrunk = gap_masked <= eps
+            active = jnp.where(unshrunk, jnp.ones_like(active), active)
+
+        if conjugate:
+            # Q v of this step's WSS direction, for the next iteration's 2x2
+            # restriction.  Reset-on-clip convention (arXiv 2003.08719): the
+            # direction survives only through free steps — a clipped fallback
+            # or any shrink-mask refresh / unshrink event clears it.
+            dir_u = row_i - row_j
+            conj_ok = do_plan | free_smo
+            if cfg.shrink_every > 0:
+                conj_ok = conj_ok & ~refresh & ~unshrunk
+        else:
+            dir_u, conj_ok = s.dir_u, s.conj_ok
 
         gap = qp_mod.finite_gap(qp_mod.kkt_gap(G_new, alpha_new, bounds))
         done = gap <= eps
@@ -322,6 +390,7 @@ def _make_body(kernel, p, bounds: Bounds, diag, cfg: SolverConfig):
             p_smo=~do_plan,
             prev_free=(~do_plan) & free_smo,
             prev_ratio_ok=jnp.where(do_plan, ratio_ok, s.prev_ratio_ok),
+            dir_u=dir_u, conj_ok=conj_ok,
             active=active,
             n_planning=s.n_planning + do_plan.astype(jnp.int32),
             n_free=s.n_free + ((~do_plan) & free_smo).astype(jnp.int32),
@@ -360,6 +429,9 @@ def init_state(kernel, p, bounds: Bounds, cfg: SolverConfig,
         n_hist=jnp.asarray(0, jnp.int32),
         p_smo=jnp.asarray(True), prev_free=jnp.asarray(False),
         prev_ratio_ok=jnp.asarray(True),
+        # (1,) placeholder when the conjugate step is off (trace-cap trick)
+        dir_u=jnp.zeros((n if cfg.step == "conjugate" else 1,), dtype),
+        conj_ok=jnp.asarray(False),
         active=jnp.ones((n,), bool),
         n_planning=jnp.asarray(0, jnp.int32),
         n_free=jnp.asarray(0, jnp.int32),

@@ -94,6 +94,8 @@ def solve_fused(X, y, C, gamma, cfg: SolverConfig = SolverConfig(),
                 *, impl: str = "auto", block_l: int = 1024) -> FusedResult:
     assert cfg.algorithm in ("smo", "pasmo")
     assert cfg.plan_candidates == 1
+    assert cfg.step == "plain", \
+        "step='conjugate' is a lane-batched mode (solve_fused_batched_qp)"
     assert cfg.wss == "wss2", \
         "the fused passes hardcode WSS2 selection (use the standard solver)"
     assert not (cfg.record_trace or cfg.record_steps), \
@@ -278,6 +280,20 @@ class _BatchState(NamedTuple):
     n_unshrink: jax.Array     # (B,) unshrink (reactivation) events
 
 
+class _ConjState(NamedTuple):
+    """Per-lane Conjugate-SMO carry (``cfg.step == "conjugate"`` only).
+
+    Rides the while_loop carry *next to* the batch state, exactly like the
+    telemetry ring: with ``step="plain"`` it does not exist, so the plain
+    engine's traced jaxpr stays byte-identical to the pre-conjugate
+    goldens under ``tests/golden/``.
+    """
+
+    u: jax.Array    # (B, n) Q (e_pi - e_pj): previous direction's Q-product
+                    # (pass B's in-VMEM row difference k_i - k_j)
+    ok: jax.Array   # (B,) direction valid (reset on clip / shrink events)
+
+
 def _take_lane(M, idx):
     """Per-lane gather: M (B, l), idx (B,) -> (B,)."""
     return jnp.take_along_axis(M, idx[:, None], axis=1)[:, 0]
@@ -359,6 +375,23 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
     (default) no ring exists in the carry and the traced jaxpr is
     byte-identical to the telemetry-free engine — the hot path pays
     nothing when observability is off.
+
+    ``cfg.step == "conjugate"`` (plain-SMO lanes only) enables the
+    Conjugate-SMO two-direction step: each iteration solves the exact 2x2
+    subproblem spanned by the current WSS direction and the *previous*
+    update direction, whose Q-product is carried per lane as a
+    :class:`_ConjState` element riding the while_loop carry next to the
+    batch state (like the ring, Python-gated: with ``step="plain"`` the
+    traced jaxpr is byte-identical to the pre-conjugate engine).  The
+    conjugate step is accepted only when the carried direction is valid,
+    the 2x2 minor is safely positive definite, all four touched
+    coordinates stay strictly interior, and the exact 2-D gain dominates
+    the 1-D Newton gain; otherwise the lane falls back to the plain
+    clipped SMO step bitwise.  The direction resets on clipped steps,
+    shrink-mask refreshes and unshrink events (reset-on-clip).  Accepted
+    steps are counted in ``FusedResult.n_planning`` and surface on the
+    telemetry plan-event/ratio channels (planning and conjugate are
+    mutually exclusive — ``SolverConfig`` forbids ``pasmo`` here).
     """
     assert cfg.algorithm in ("smo", "pasmo")
     assert cfg.plan_candidates == 1
@@ -382,6 +415,11 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
     eps = cfg.eps
     eta = cfg.eta
     planning = cfg.algorithm == "pasmo"
+    # Conjugate-SMO (static knob, cfg asserts algorithm == "smo"): like the
+    # ring, the extra carried state is a *separate* carry element gated at
+    # the Python level, so step="plain" traces byte-identical to the
+    # pre-conjugate engine.
+    conjugate = cfg.step == "conjugate"
     period = cfg.shrink_every if cfg.shrink_every > 0 else DEFAULT_SHRINK_EVERY
     lanes = jnp.arange(B)
     # Flight recorder (static knob).  ``collect=False`` must leave the
@@ -403,7 +441,12 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
     # gather once, and (b) the two alpha scatters merge into one.
 
     def body(carry):
-        if collect:
+        conj = ring = None
+        if collect and conjugate:
+            s, conj, ring = carry
+        elif conjugate:
+            s, conj = carry
+        elif collect:
             s, ring = carry
         else:
             s = carry
@@ -507,6 +550,47 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
                                  (ratio >= 1.0 - eta) & (ratio <= 1.0 + eta),
                                  s.prev_ratio_ok)
 
+        if conjugate:
+            # ---- Conjugate-SMO 2x2 step (O(B), no extra kernel rows) -------
+            # Directions: v1 = e_i - e_j (current WSS pair), v2 = e_pi - e_pj
+            # (previous pair).  Q v2 is carried in ``conj.u`` — pass B's
+            # in-VMEM row difference from last iteration — so every
+            # restriction term below is a per-lane gather.
+            a_pi, G_pi, L_pi, U_pi = at_idx(s.pi)
+            a_pj, G_pj, L_pj, U_pj = at_idx(s.pj)
+            w2 = G_pi - G_pj
+            q22 = _take_lane(conj.u, s.pi) - _take_lane(conj.u, s.pj)
+            q12 = _take_lane(conj.u, i_sel) - _take_lane(conj.u, j_sel)
+            terms = step_mod.PlanningTerms(w1=lw, w2=w2, Q11=q11, Q22=q22,
+                                           Q12=q12)
+            mu1c, mu2c, okdet = step_mod.conjugate_step(terms)
+
+            def moved(c):
+                # net displacement of coordinate c under mu1c v1 + mu2c v2;
+                # indicator arithmetic handles overlapping pairs exactly
+                return (mu1c * ((c == i_sel).astype(dtype)
+                                - (c == j_sel).astype(dtype))
+                        + mu2c * ((c == s.pi).astype(dtype)
+                                  - (c == s.pj).astype(dtype)))
+
+            def interior(c, a_c, L_c, U_c):
+                a2 = a_c + moved(c)
+                return (L_c < a2) & (a2 < U_c)
+
+            inter = (interior(i_sel, a_isel, L_isel, U_isel)
+                     & interior(j_sel, a_jsel, L_jsel, U_jsel)
+                     & interior(s.pi, a_pi, L_pi, U_pi)
+                     & interior(s.pj, a_pj, L_pj, U_pj))
+            # exact gain of the unconstrained 2-direction solve; it
+            # dominates the 1-D Newton gain along v1 for a PD minor, so
+            # the comparison guards near-degenerate numerics only
+            g2 = 0.5 * (lw * mu1c + w2 * mu2c)
+            g1 = step_mod.gain_newton(lw, q11)
+            do_plan = (conj.ok & (s.n_hist >= 1) & okdet & inter
+                       & (g2 + TAU >= g1))
+            mu_plan = jnp.where(do_plan, mu1c, mu_smo)
+            ratio = mu1c / jnp.where(jnp.abs(mu_star) > 0, mu_star, 1.0)
+
         # lane freeze: converged lanes take a zero step — pass B becomes a
         # bitwise no-op on their G, alpha is untouched.  Both working-set
         # coordinates update through ONE stacked scatter.  The isfinite
@@ -514,14 +598,29 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
         # event left it with a stale -inf g_i (empty masked I_up).
         mu = jnp.where(active & jnp.isfinite(lw),
                        jnp.where(do_plan, mu_plan, mu_smo), 0.0)
-        alpha_new = alpha.at[idx2, jnp.concatenate([i_sel, j_sel])].add(
-            jnp.concatenate([mu, -mu]))
+        if conjugate:
+            # second-direction coefficient; 0 on rejected/frozen lanes, so
+            # both the extra scatter coordinates and pass B's axpy against
+            # ``conj.u`` are exact no-ops there (lane freeze stays bitwise)
+            mu2v = jnp.where(active & jnp.isfinite(lw) & do_plan, mu2c, 0.0)
+            idx4 = jnp.concatenate([idx2, idx2])
+            alpha_new = alpha.at[
+                idx4, jnp.concatenate([i_sel, j_sel, s.pi, s.pj])].add(
+                jnp.concatenate([mu, -mu, mu2v, -mu2v]))
+        else:
+            alpha_new = alpha.at[idx2, jnp.concatenate([i_sel, j_sel])].add(
+                jnp.concatenate([mu, -mu]))
 
         # ---- pass B: k_i/k_j + update + next i + gap -----------------------
         with scope("fused_pass_b"):
-            G_new, i_next, g_i_next, g_dn = ops.source_update_wss(
-                src, G, alpha_new, L, U, i_sel, j_sel, mu, impl=impl,
-                block_l=block_l, act=act_kw)
+            if conjugate:
+                G_new, i_next, g_i_next, g_dn, r_new = ops.source_update_wss(
+                    src, G, alpha_new, L, U, i_sel, j_sel, mu, impl=impl,
+                    block_l=block_l, act=act_kw, dirv=conj.u, mu2=mu2v)
+            else:
+                G_new, i_next, g_i_next, g_dn = ops.source_update_wss(
+                    src, G, alpha_new, L, U, i_sel, j_sel, mu, impl=impl,
+                    block_l=block_l, act=act_kw)
         gap_new = qp_mod.finite_gap(g_i_next - g_dn)
         if shrinking:
             # a lane only counts as converged when its mask was FULL at the
@@ -546,6 +645,19 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
             n_unshrink = s.n_unshrink
         gap = jnp.where(active, gap_new, s.gap)
 
+        if conjugate:
+            # next iteration's carried direction: Q (e_i - e_j) is exactly
+            # pass B's in-VMEM row difference, returned for free.  The
+            # direction is reset (ok = False) whenever the step clipped
+            # (plain SMO hit the box), the shrink mask refreshed, or the
+            # lane unshrunk — per Conjugate-SMO's reset-on-clip rule.
+            cu_new = jnp.where(active[:, None], r_new, conj.u)
+            c_ok = do_plan | free_smo
+            if shrinking:
+                c_ok = c_ok & ~refresh & ~(locally_done & ~full_now)
+            c_ok = jnp.where(active, c_ok, conj.ok)
+            conj_new = _ConjState(u=cu_new, ok=c_ok)
+
         new_s = _BatchState(
             alpha=alpha_new, G=G_new,
             i=jnp.where(active, i_next.astype(jnp.int32), s.i),
@@ -563,20 +675,24 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
             n_planning=s.n_planning + (do_plan & active).astype(jnp.int32),
             act=act_new, n_unshrink=n_unshrink)
         if not collect:
-            return new_s
+            return (new_s, conj_new) if conjugate else new_s
         # ---- flight recorder (O(B) only; see repro.telemetry.ring) ---------
         with scope("telemetry_ring"):
             if shrinking:
                 n_act = jnp.sum(act_new, axis=1).astype(jnp.int32)
             else:
                 n_act = jnp.full((B,), n, jnp.int32)
-            ratio_v = ratio if planning else jnp.zeros_like(mu_smo)
+            # conjugate reuses the planning channels (the modes are mutually
+            # exclusive): plan_event/n_planning count accepted conjugate
+            # steps and ratio samples mu1/mu* for accepted steps.
+            ratio_v = (ratio if (planning or conjugate)
+                       else jnp.zeros_like(mu_smo))
             ring = ring_update(
                 ring, telemetry, t=s.t, active=active,
                 newly_done=active & done, gap=gap, n_active=n_act,
                 n_unshrink=n_unshrink, plan_event=do_plan & active,
                 ratio=ratio_v)
-        return new_s, ring
+        return (new_s, conj_new, ring) if conjugate else (new_s, ring)
 
     # ---- init ---------------------------------------------------------------
     if alpha0 is None:
@@ -604,7 +720,16 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
                      prev_ratio_ok=~fB, n_planning=zB,
                      act=act0, n_unshrink=zB)
 
-    if collect:
+    if conjugate:
+        conj0 = _ConjState(u=jnp.zeros((B, n), dtype),
+                           ok=jnp.zeros((B,), bool))
+        cond = lambda c: jnp.any(~c[0].done) & (c[0].t < cfg.max_iter)
+        if collect:
+            ring0 = ring_init(telemetry, B, dtype)
+            s, _, ring = jax.lax.while_loop(cond, body, (s0, conj0, ring0))
+        else:
+            s, _ = jax.lax.while_loop(cond, body, (s0, conj0))
+    elif collect:
         ring0 = ring_init(telemetry, B, dtype)
         s, ring = jax.lax.while_loop(
             lambda c: jnp.any(~c[0].done) & (c[0].t < cfg.max_iter),

@@ -120,6 +120,26 @@ def double_step_gain(mu1, t: PlanningTerms):
             + 0.5 * t.w2 * t.w2 / q22)
 
 
+def conjugate_step(t: PlanningTerms):
+    """Conjugate-SMO 2-direction step (arXiv 2003.08719, §3).
+
+    Solve the unconstrained 2x2 system on ``(v_B1, v_prev)`` exactly:
+    ``mu1 = (Q22 w1 - Q12 w2) / det``, ``mu2 = (Q11 w2 - Q12 w1) / det``.
+    Unlike :func:`planning_step` (which *plans* a future greedy step), both
+    components are applied now — v_prev is the previous iteration's update
+    direction, so the pair is conjugate in the K-metric when accepted.
+    Returns ``(mu1, mu2, ok)``; ``ok`` is False on a degenerate 2x2 system
+    (parallel directions, e.g. the WSS pair repeating) and the caller falls
+    back to the plain clipped SMO step.
+    """
+    det = t.Q11 * t.Q22 - t.Q12 * t.Q12
+    ok = (det > TAU) & (t.Q22 > TAU)
+    safe = jnp.where(ok, det, 1.0)
+    mu1 = (t.Q22 * t.w1 - t.Q12 * t.w2) / safe
+    mu2 = (t.Q11 * t.w2 - t.Q12 * t.w1) / safe
+    return jnp.where(ok, mu1, 0.0), jnp.where(ok, mu2, 0.0), ok
+
+
 def overshoot_step(l, Qtt, bounds: StepBounds, factor: float = 1.1):
     """§7.3 heuristic: clip ``factor * mu*`` instead of ``mu*``.
 

@@ -229,7 +229,8 @@ def rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i,
 
 def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
                            mu, gammas, *, impl: str = "auto",
-                           block_l: int = 1024, dup: bool = False, act=None):
+                           block_l: int = 1024, dup: bool = False, act=None,
+                           dirv=None, mu2=None):
     """Batched pass B: returns (G_new (B, n), i_next, g_i_next, g_dn).
 
     Recomputes both *base* rows k_i/k_j against the shared X (no HBM
@@ -237,34 +238,55 @@ def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
     unchanged.  ``dup`` selects the doubled ε-SVR operator exactly as in
     :func:`rbf_row_wss_batched` (in-kernel half reads, l-wide matmuls).
     ``act`` optionally restricts the next-i scan and gap endpoints (the
-    gradient update is never masked).
+    gradient update is never masked).  ``dirv``/``mu2`` engage the
+    Conjugate-SMO second-direction axpy and grow the return by
+    ``r = k_i - k_j`` (at full lane-state width) — see
+    :func:`repro.kernels.ref.update_wss_batched_from_rows`.
     """
     impl = resolve_impl(impl)
     if impl == "jnp":
         return ref_ops.rbf_update_wss_batched(X, sqn, G, alpha_new, L, U,
                                               XQi, sqqi, XQj, sqqj, mu,
-                                              gammas, dup=dup, act=act)
+                                              gammas, dup=dup, act=act,
+                                              dirv=dirv, mu2=mu2)
     l, d = X.shape
     H = 2 if dup else 1
     B = G.shape[0]
     lpad, dpad = pad_dims(l, d, block_l)
     bpad = pad_lanes(B)
     dtype = X.dtype
-    scal = jnp.stack([sqqi, sqqj, jnp.broadcast_to(mu, (B,)),
-                      jnp.broadcast_to(gammas, (B,))], axis=1).astype(dtype)
+    conj = dirv is not None
+    if conj:
+        scal = jnp.stack([sqqi, sqqj, jnp.broadcast_to(mu, (B,)),
+                          jnp.broadcast_to(gammas, (B,)),
+                          jnp.broadcast_to(mu2, (B,))],
+                         axis=1).astype(dtype)
+        # the doubled operator's direction rows are half-symmetric (tiled
+        # base rows), so the kernels carry the base half only
+        dirv_row = _pad_bl(dirv[:, :l].astype(dtype), bpad, lpad)
+    else:
+        scal = jnp.stack([sqqi, sqqj, jnp.broadcast_to(mu, (B,)),
+                          jnp.broadcast_to(gammas, (B,))],
+                         axis=1).astype(dtype)
+        dirv_row = None
     act_st = (None if act is None
               else _stack_halves(act.astype(dtype), H, bpad, lpad))
-    G_new, bmax, barg, bmin = rbf_update_wss_batched_pallas(
+    out = rbf_update_wss_batched_pallas(
         _pad_d(_pad_l(X, lpad), dpad), _pad_l(sqn, lpad),
         _stack_halves(G, H, bpad, lpad),
         _stack_halves(alpha_new, H, bpad, lpad),
         _stack_halves(L, H, bpad, lpad), _stack_halves(U, H, bpad, lpad),
         _pad_b(_pad_d(XQi, dpad), bpad), _pad_b(_pad_d(XQj, dpad), bpad),
-        _pad_b(scal, bpad), act_st,
+        _pad_b(scal, bpad), act_st, dirv_row,
         block_l=block_l, interpret=(impl == "interpret"), base_l=l)
+    G_new, bmax, barg, bmin = out[:4]
     i_next, g_i_next = _first_max(bmax, barg)
-    return (_unstack_halves(G_new, B, l), i_next[:B], g_i_next[:B],
-            jnp.min(bmin, axis=1)[:B])
+    res = (_unstack_halves(G_new, B, l), i_next[:B], g_i_next[:B],
+           jnp.min(bmin, axis=1)[:B])
+    if conj:
+        r = out[4][:B, :l]
+        return res + (ref_ops.tile_rows(r) if dup else r,)
+    return res
 
 
 def row_wss_batched_rows(KR, G, alpha, L, U, a_i, L_i, U_i, g_i, i_idx,
@@ -302,34 +324,49 @@ def row_wss_batched_rows(KR, G, alpha, L, U, a_i, L_i, U_i, g_i, i_idx,
 
 def update_wss_batched_rows(KRi, KRj, G, alpha_new, L, U, mu, *,
                             impl: str = "auto", block_l: int = 1024,
-                            dup: bool = False, act=None):
+                            dup: bool = False, act=None, dirv=None,
+                            mu2=None):
     """Batched pass B from pre-gathered *base* rows — the Gram-bank row
-    source.  Same contract as :func:`rbf_update_wss_batched`."""
+    source.  Same contract as :func:`rbf_update_wss_batched` (including
+    the ``dirv``/``mu2`` Conjugate-SMO extension)."""
     impl = resolve_impl(impl)
     if impl == "jnp":
         ki = ref_ops.tile_rows(KRi) if dup else KRi
         kj = ref_ops.tile_rows(KRj) if dup else KRj
         return ref_ops.update_wss_batched_from_rows(G, ki, kj, mu,
                                                     alpha_new, L, U,
-                                                    act=act)
+                                                    act=act, dirv=dirv,
+                                                    mu2=mu2)
     B, l = KRi.shape
     H = 2 if dup else 1
     lpad = pad_dims(l, 1, block_l)[0]
     bpad = pad_lanes(B)
     dtype = KRi.dtype
-    scal = jnp.broadcast_to(mu, (B,)).astype(dtype)[:, None]
+    conj = dirv is not None
+    if conj:
+        scal = jnp.stack([jnp.broadcast_to(mu, (B,)),
+                          jnp.broadcast_to(mu2, (B,))], axis=1).astype(dtype)
+        dirv_row = _pad_bl(dirv[:, :l].astype(dtype), bpad, lpad)
+    else:
+        scal = jnp.broadcast_to(mu, (B,)).astype(dtype)[:, None]
+        dirv_row = None
     act_st = (None if act is None
               else _stack_halves(act.astype(dtype), H, bpad, lpad))
-    G_new, bmax, barg, bmin = update_wss_batched_rows_pallas(
+    out = update_wss_batched_rows_pallas(
         _pad_bl(KRi, bpad, lpad), _pad_bl(KRj, bpad, lpad),
         _stack_halves(G, H, bpad, lpad),
         _stack_halves(alpha_new, H, bpad, lpad),
         _stack_halves(L, H, bpad, lpad), _stack_halves(U, H, bpad, lpad),
-        _pad_b(scal, bpad), act_st,
+        _pad_b(scal, bpad), act_st, dirv_row,
         block_l=block_l, interpret=(impl == "interpret"), base_l=l)
+    G_new, bmax, barg, bmin = out[:4]
     i_next, g_i_next = _first_max(bmax, barg)
-    return (_unstack_halves(G_new, B, l), i_next[:B], g_i_next[:B],
-            jnp.min(bmin, axis=1)[:B])
+    res = (_unstack_halves(G_new, B, l), i_next[:B], g_i_next[:B],
+           jnp.min(bmin, axis=1)[:B])
+    if conj:
+        r = out[4][:B, :l]
+        return res + (ref_ops.tile_rows(r) if dup else r,)
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -358,12 +395,19 @@ def source_row_wss(src: RowSource, G, alpha, L, U, i_idx, a_i, L_i, U_i,
 
 
 def source_update_wss(src: RowSource, G, alpha_new, L, U, i_idx, j_idx, mu,
-                      *, impl: str = "auto", block_l: int = 1024, act=None):
+                      *, impl: str = "auto", block_l: int = 1024, act=None,
+                      dirv=None, mu2=None):
     """Batched pass B against any :class:`~repro.kernels.row_source.RowSource`.
 
     ``act`` is an optional (B, n) active-set mask (soft shrinking; the
     gradient update itself is never masked).
     Returns (G_new (B, n), i_next (B,), g_i_next (B,), g_dn (B,)).
+
+    ``dirv``/``mu2`` (Conjugate-SMO): apply the extra per-lane axpy
+    ``- mu2 dirv`` to the gradient in the same pass and grow the return by
+    ``r = k_i - k_j`` (B, n) — the direction Q-product the caller carries
+    into the next iteration.  Left at ``None`` the contract (and the
+    traced jaxpr) is exactly the plain 4-tuple.
     """
     B = G.shape[0]
     stacked = jnp.concatenate([i_idx, j_idx])
@@ -372,12 +416,12 @@ def source_update_wss(src: RowSource, G, alpha_new, L, U, i_idx, j_idx, mu,
         return update_wss_batched_rows(rows[:B], rows[B:], G, alpha_new,
                                        L, U, mu, impl=impl,
                                        block_l=block_l, dup=src.dup,
-                                       act=act)
+                                       act=act, dirv=dirv, mu2=mu2)
     XQ, sqq = src.query(stacked)
     return rbf_update_wss_batched(src.X, src.sqn, G, alpha_new, L, U,
                                   XQ[:B], sqq[:B], XQ[B:], sqq[B:], mu,
                                   src.gammas, impl=impl, block_l=block_l,
-                                  dup=src.dup, act=act)
+                                  dup=src.dup, act=act, dirv=dirv, mu2=mu2)
 
 
 def gram(X1, X2=None, gamma=1.0, *, impl: str = "auto",

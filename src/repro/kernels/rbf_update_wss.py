@@ -61,7 +61,7 @@ def _kernel(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, ki_ref, alpha_ref,
 
 
 def _update_from_rows(k_i, k_j, G, alpha, L, U, mu, b, *, block_l: int,
-                      base_l: int, act=None):
+                      base_l: int, act=None, dirv=None, mu2=None):
     """Shared pass-B algebra over the (H, B, BL) state halves.
 
     ``k_i``/``k_j`` are the (B, BL) *base* row tiles — the doubled ε-SVR
@@ -71,11 +71,17 @@ def _update_from_rows(k_i, k_j, G, alpha, L, U, mu, b, *, block_l: int,
     in-kernel lane freeze).  ``act`` is an optional (H, B, BL) active-set
     tile in the data dtype (1.0/0.0) restricting the next-i scan and the
     gap endpoints; the gradient update itself stays unmasked — soft
-    shrinking keeps G exact on every coordinate.  Returns
+    shrinking keeps G exact on every coordinate.  ``dirv``/``mu2`` engage
+    the Conjugate-SMO second direction: ``dirv`` is the carried (H, B, BL)
+    previous-direction Q-product tile and the update gains the in-register
+    axpy ``- mu2 dirv`` (``mu2 == 0`` on rejected steps keeps the lane
+    freeze / plain trajectory bitwise).  Returns
     (G_new (H, B, BL), bmax (B, 1), barg (B, 1) int32, bmin (B, 1)).
     """
     H = G.shape[0]
     G_new = G - mu[None] * (k_i - k_j)[None]
+    if dirv is not None:
+        G_new = G_new - mu2[None] * dirv
     best = barg = bmin = None
     for h in range(H):
         up = alpha[h] < U[h]
@@ -97,7 +103,8 @@ def _update_from_rows(k_i, k_j, G, alpha, L, U, mu, b, *, block_l: int,
     return G_new, best[:, None], barg[:, None], bmin[:, None]
 
 
-def _kernel_batched(*refs, block_l: int, base_l: int, masked: bool = False):
+def _kernel_batched(*refs, block_l: int, base_l: int, masked: bool = False,
+                    conj: bool = False):
     """Lane-batched pass B (rbf source): recompute BOTH base rows k_i, k_j
     against the shared X tile (two (B, d) x (d, BL) matmuls), update every
     state half in-register, and emit the per-lane next-i argmax plus both
@@ -108,16 +115,28 @@ def _kernel_batched(*refs, block_l: int, base_l: int, masked: bool = False):
     ride along as masked no-ops until every lane is done.  With
     ``masked=True`` an (H, B, BL) active-set tile rides first in the ref
     list and restricts the next-i scan / gap endpoints (soft shrinking).
+    With ``conj=True`` (Conjugate-SMO) a (B, BL) previous-direction tile
+    ``dirv`` rides after U, the per-lane scalars gain ``mu2``, the update
+    gains the axpy ``- mu2 dirv`` and the *base* row difference
+    ``r = k_i - k_j`` — next iteration's direction — is emitted as a fifth
+    output (base width: the doubled halves tile it outside the kernel).
     """
     act_ref, refs = (refs[0], refs[1:]) if masked else (None, refs)
-    (xqi_ref, xqj_ref, scal_ref, X_ref, sqn_ref, G_ref, alpha_ref,
-     L_ref, U_ref, G_out, bmax_out, barg_out, bmin_out) = refs
+    if conj:
+        (xqi_ref, xqj_ref, scal_ref, X_ref, sqn_ref, G_ref, alpha_ref,
+         L_ref, U_ref, dirv_ref, G_out, bmax_out, barg_out, bmin_out,
+         r_out) = refs
+    else:
+        (xqi_ref, xqj_ref, scal_ref, X_ref, sqn_ref, G_ref, alpha_ref,
+         L_ref, U_ref, G_out, bmax_out, barg_out, bmin_out) = refs
+        dirv_ref = r_out = None
     b = pl.program_id(0)
-    # per-lane scalars: [sqq_i, sqq_j, mu, gamma]
+    # per-lane scalars: [sqq_i, sqq_j, mu, gamma] (+ [mu2] when conj)
     sqq_i = scal_ref[:, 0:1]
     sqq_j = scal_ref[:, 1:2]
     mu = scal_ref[:, 2:3]
     gamma = scal_ref[:, 3:4]
+    mu2 = scal_ref[:, 4:5] if conj else None
 
     x = X_ref[...]                      # (BL, d) shared tile
     acc = jnp.promote_types(x.dtype, jnp.float32)
@@ -132,43 +151,64 @@ def _kernel_batched(*refs, block_l: int, base_l: int, masked: bool = False):
     G_new, bmax, barg, bmin = _update_from_rows(
         k_i, k_j, G_ref[...], alpha_ref[...], L_ref[...], U_ref[...], mu,
         b, block_l=block_l, base_l=base_l,
-        act=None if act_ref is None else act_ref[...])
+        act=None if act_ref is None else act_ref[...],
+        dirv=None if dirv_ref is None else dirv_ref[...][None], mu2=mu2)
     G_out[...] = G_new.astype(G_out.dtype)
     bmax_out[...] = bmax
     barg_out[...] = barg
     bmin_out[...] = bmin
+    if conj:
+        r_out[...] = (k_i - k_j).astype(r_out.dtype)
 
 
 def _kernel_batched_rows(*refs, block_l: int, base_l: int,
-                         masked: bool = False):
+                         masked: bool = False, conj: bool = False):
     """Lane-batched pass B (rows source): both base row tiles arrive
-    pre-gathered (Gram-bank mode) — same update algebra, no matmuls."""
+    pre-gathered (Gram-bank mode) — same update algebra, no matmuls.
+    ``conj`` as in :func:`_kernel_batched` (scalars become [mu, mu2])."""
     act_ref, refs = (refs[0], refs[1:]) if masked else (None, refs)
-    (kri_ref, krj_ref, scal_ref, G_ref, alpha_ref, L_ref, U_ref,
-     G_out, bmax_out, barg_out, bmin_out) = refs
+    if conj:
+        (kri_ref, krj_ref, scal_ref, G_ref, alpha_ref, L_ref, U_ref,
+         dirv_ref, G_out, bmax_out, barg_out, bmin_out, r_out) = refs
+    else:
+        (kri_ref, krj_ref, scal_ref, G_ref, alpha_ref, L_ref, U_ref,
+         G_out, bmax_out, barg_out, bmin_out) = refs
+        dirv_ref = r_out = None
     b = pl.program_id(0)
     mu = scal_ref[:, 0:1]
+    mu2 = scal_ref[:, 1:2] if conj else None
+    k_i, k_j = kri_ref[...], krj_ref[...]
     G_new, bmax, barg, bmin = _update_from_rows(
-        kri_ref[...], krj_ref[...], G_ref[...], alpha_ref[...], L_ref[...],
+        k_i, k_j, G_ref[...], alpha_ref[...], L_ref[...],
         U_ref[...], mu, b, block_l=block_l, base_l=base_l,
-        act=None if act_ref is None else act_ref[...])
+        act=None if act_ref is None else act_ref[...],
+        dirv=None if dirv_ref is None else dirv_ref[...][None], mu2=mu2)
     G_out[...] = G_new.astype(G_out.dtype)
     bmax_out[...] = bmax
     barg_out[...] = barg
     bmin_out[...] = bmin
+    if conj:
+        r_out[...] = (k_i - k_j).astype(r_out.dtype)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block_l", "interpret", "base_l"))
 def rbf_update_wss_batched_pallas(X, sqn, G, alpha_new, L, U, XQi, XQj,
-                                  scalars, act=None, *, block_l: int = 1024,
+                                  scalars, act=None, dirv=None, *,
+                                  block_l: int = 1024,
                                   interpret: bool = False, base_l: int = 0):
     """Launch lane-batched pass B.  The state leaves are (H, B, lpad) half
     stacks (H = 2 for the doubled ε-SVR operator); ``XQi``/``XQj`` are the
     (B, d) *base* query rows and ``scalars`` the packed (B, 4) array
     [sqq_i, sqq_j, mu, gamma] per lane.  ``act`` is an optional
     (H, B, lpad) active-set stack (data dtype 1.0/0.0).  Returns
-    (G_new (H, B, lpad), bmax_up (B, nb), barg_up (B, nb), bmin_dn (B, nb))."""
+    (G_new (H, B, lpad), bmax_up (B, nb), barg_up (B, nb), bmin_dn (B, nb)).
+
+    ``dirv`` (Conjugate-SMO) is an optional (B, lpad) *base-width*
+    previous-direction row (the doubled operator's direction is
+    half-symmetric, so one base row serves both halves); with it,
+    ``scalars`` is (B, 5) [..., mu2] and a fifth output ``r`` (B, lpad) —
+    the base row difference k_i - k_j — is returned."""
     H, B, lpad = G.shape
     d = X.shape[1]
     assert lpad % block_l == 0, (lpad, block_l)
@@ -176,47 +216,58 @@ def rbf_update_wss_batched_pallas(X, sqn, G, alpha_new, L, U, XQi, XQj,
     dtype = X.dtype
 
     lane_spec = pl.BlockSpec((H, B, block_l), lambda b: (0, 0, b))
+    row_spec = pl.BlockSpec((B, block_l), lambda b: (0, b))
     blk_spec = pl.BlockSpec((B, 1), lambda b: (0, b))
-    out_shapes = (
+    masked = act is not None
+    conj = dirv is not None
+    n_scal = 5 if conj else 4
+    out_shapes = [
         jax.ShapeDtypeStruct((H, B, lpad), dtype),
         jax.ShapeDtypeStruct((B, nb), dtype),
         jax.ShapeDtypeStruct((B, nb), jnp.int32),
         jax.ShapeDtypeStruct((B, nb), dtype),
-    )
-    masked = act is not None
+    ]
+    out_specs = [lane_spec, blk_spec, blk_spec, blk_spec]
     in_specs = [
         pl.BlockSpec((B, d), lambda b: (0, 0)),          # XQi
         pl.BlockSpec((B, d), lambda b: (0, 0)),          # XQj
-        pl.BlockSpec((B, 4), lambda b: (0, 0)),          # scalars
+        pl.BlockSpec((B, n_scal), lambda b: (0, 0)),     # scalars
         pl.BlockSpec((block_l, d), lambda b: (b, 0)),    # X
         pl.BlockSpec((1, block_l), lambda b: (0, b)),    # sqn
         lane_spec, lane_spec, lane_spec, lane_spec,
     ]
     args = [XQi, XQj, scalars, X, sqn.reshape(1, lpad), G, alpha_new, L, U]
+    if conj:
+        in_specs.append(row_spec)
+        args.append(dirv)
+        out_specs.append(row_spec)
+        out_shapes.append(jax.ShapeDtypeStruct((B, lpad), dtype))
     if masked:
         in_specs.insert(0, lane_spec)
         args.insert(0, act)
-    G_new, bmax, barg, bmin = pl.pallas_call(
+    return pl.pallas_call(
         functools.partial(_kernel_batched, block_l=block_l, base_l=base_l,
-                          masked=masked),
+                          masked=masked, conj=conj),
         grid=(nb,),
         in_specs=in_specs,
-        out_specs=[lane_spec, blk_spec, blk_spec, blk_spec],
-        out_shape=out_shapes,
+        out_specs=out_specs,
+        out_shape=tuple(out_shapes),
         interpret=interpret,
     )(*args)
-    return G_new, bmax, barg, bmin
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block_l", "interpret", "base_l"))
 def update_wss_batched_rows_pallas(KRi, KRj, G, alpha_new, L, U, scalars,
-                                   act=None, *, block_l: int = 1024,
+                                   act=None, dirv=None, *,
+                                   block_l: int = 1024,
                                    interpret: bool = False, base_l: int = 0):
     """Launch lane-batched pass B from pre-gathered base rows ``KRi``/``KRj``
     (B, lpad) — the Gram-bank row source.  ``scalars`` is the packed (B, 1)
     array [mu]; state stack, optional ``act`` stack and ``base_l`` as in
-    :func:`rbf_update_wss_batched_pallas`."""
+    :func:`rbf_update_wss_batched_pallas`.  ``dirv`` (Conjugate-SMO) as
+    there: (B, lpad) base-width direction row, ``scalars`` becomes (B, 2)
+    [mu, mu2] and a fifth output ``r`` (B, lpad) is returned."""
     H, B, lpad = G.shape
     assert lpad % block_l == 0, (lpad, block_l)
     nb = lpad // block_l
@@ -225,33 +276,40 @@ def update_wss_batched_rows_pallas(KRi, KRj, G, alpha_new, L, U, scalars,
     lane_spec = pl.BlockSpec((H, B, block_l), lambda b: (0, 0, b))
     row_spec = pl.BlockSpec((B, block_l), lambda b: (0, b))
     blk_spec = pl.BlockSpec((B, 1), lambda b: (0, b))
-    out_shapes = (
+    masked = act is not None
+    conj = dirv is not None
+    n_scal = 2 if conj else 1
+    out_shapes = [
         jax.ShapeDtypeStruct((H, B, lpad), dtype),
         jax.ShapeDtypeStruct((B, nb), dtype),
         jax.ShapeDtypeStruct((B, nb), jnp.int32),
         jax.ShapeDtypeStruct((B, nb), dtype),
-    )
-    masked = act is not None
+    ]
+    out_specs = [lane_spec, blk_spec, blk_spec, blk_spec]
     in_specs = [
         row_spec,                                        # KRi
         row_spec,                                        # KRj
-        pl.BlockSpec((B, 1), lambda b: (0, 0)),          # scalars
+        pl.BlockSpec((B, n_scal), lambda b: (0, 0)),     # scalars
         lane_spec, lane_spec, lane_spec, lane_spec,
     ]
     args = [KRi, KRj, scalars, G, alpha_new, L, U]
+    if conj:
+        in_specs.append(row_spec)
+        args.append(dirv)
+        out_specs.append(row_spec)
+        out_shapes.append(jax.ShapeDtypeStruct((B, lpad), dtype))
     if masked:
         in_specs.insert(0, lane_spec)
         args.insert(0, act)
-    G_new, bmax, barg, bmin = pl.pallas_call(
+    return pl.pallas_call(
         functools.partial(_kernel_batched_rows, block_l=block_l,
-                          base_l=base_l, masked=masked),
+                          base_l=base_l, masked=masked, conj=conj),
         grid=(nb,),
         in_specs=in_specs,
-        out_specs=[lane_spec, blk_spec, blk_spec, blk_spec],
-        out_shape=out_shapes,
+        out_specs=out_specs,
+        out_shape=tuple(out_shapes),
         interpret=interpret,
     )(*args)
-    return G_new, bmax, barg, bmin
 
 
 @functools.partial(jax.jit, static_argnames=("block_l", "interpret"))

@@ -131,7 +131,8 @@ def rbf_row_wss_batched(X, sqn, G, alpha, L, U, XQ, sqq, a_i, L_i, U_i,
                                   i_idx, use_exact, act=act)
 
 
-def update_wss_batched_from_rows(G, k_i, k_j, mu, alpha_new, L, U, act=None):
+def update_wss_batched_from_rows(G, k_i, k_j, mu, alpha_new, L, U, act=None,
+                                 dirv=None, mu2=None):
     """Pass B update + stopping-scan algebra given both (B, l) rows.
 
     A lane with ``mu == 0`` is a bitwise no-op on G (the in-kernel
@@ -140,8 +141,17 @@ def update_wss_batched_from_rows(G, k_i, k_j, mu, alpha_new, L, U, act=None):
     set; the gradient update itself is NEVER masked (soft shrinking keeps
     G exact on every coordinate, so unshrinking is free).  Returns
     (G_new (B, l), i_next (B,), g_i_next (B,), g_dn (B,)).
+
+    ``dirv``/``mu2`` engage the Conjugate-SMO second direction: ``dirv``
+    is the carried (B, n) previous update direction's Q-product and the
+    gradient update becomes ``G - mu (k_i - k_j) - mu2 dirv`` (a rejected
+    conjugate step has ``mu2 == 0``, keeping the plain trajectory bitwise).
+    The return grows a fifth element ``r = k_i - k_j`` — next iteration's
+    ``dirv`` — ONLY when engaged, so the plain contract is unchanged.
     """
     G_new = G - mu[:, None] * (k_i - k_j)
+    if dirv is not None:
+        G_new = G_new - mu2[:, None] * dirv
     up = alpha_new < U
     dn = alpha_new > L
     if act is not None:
@@ -151,16 +161,21 @@ def update_wss_batched_from_rows(G, k_i, k_j, mu, alpha_new, L, U, act=None):
     i_next = jnp.argmax(vals_up, axis=1).astype(jnp.int32)
     g_i_next = jnp.take_along_axis(vals_up, i_next[:, None], axis=1)[:, 0]
     g_dn = jnp.min(jnp.where(dn, G_new, jnp.inf), axis=1)
+    if dirv is not None:
+        return G_new, i_next, g_i_next, g_dn, k_i - k_j
     return G_new, i_next, g_i_next, g_dn
 
 
 def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
-                           mu, gammas, dup: bool = False, act=None):
+                           mu, gammas, dup: bool = False, act=None,
+                           dirv=None, mu2=None):
     """Batched pass B oracle: k_i/k_j recompute + update + next i + gap ends.
 
     Both rows come from one stacked (2B, d) x (d, l) matmul (against the
     base ``X`` even when ``dup=True`` doubles the lane state to n = 2l).
-    Returns (G_new (B, n), i_next (B,), g_i_next (B,), g_dn (B,)).
+    Returns (G_new (B, n), i_next (B,), g_i_next (B,), g_dn (B,)); with
+    ``dirv``/``mu2`` (Conjugate-SMO, see
+    :func:`update_wss_batched_from_rows`) a fifth ``r = k_i - k_j``.
     """
     B = G.shape[0]
     Kr = rbf_rows_batched(X, sqn,
@@ -168,7 +183,7 @@ def rbf_update_wss_batched(X, sqn, G, alpha_new, L, U, XQi, sqqi, XQj, sqqj,
                           jnp.concatenate([sqqi, sqqj]),
                           jnp.concatenate([gammas, gammas]), dup=dup)
     return update_wss_batched_from_rows(G, Kr[:B], Kr[B:], mu, alpha_new,
-                                        L, U, act=act)
+                                        L, U, act=act, dirv=dirv, mu2=mu2)
 
 
 def gram(X, gamma):

@@ -27,8 +27,8 @@ class SVMEstimatorBase:
 
     def _init_common(self, *, algorithm: str, eps: float, max_iter: int,
                      plan_candidates: int, impl: str, engine: str,
-                     precompute: bool, dtype, mesh=None,
-                     devices=None, diagnostics=None) -> None:
+                     precompute: bool, dtype, step: str = "plain",
+                     mesh=None, devices=None, diagnostics=None) -> None:
         if engine not in ("auto", "fused", "batched", "sharded"):
             raise ValueError(f"engine must be auto|fused|batched|sharded, "
                              f"got {engine!r}")
@@ -38,6 +38,7 @@ class SVMEstimatorBase:
                              f"drop them or use engine='sharded'/'auto', "
                              f"got engine={engine!r}")
         self.algorithm = algorithm
+        self.step = step
         self.eps = eps
         self.max_iter = max_iter
         self.plan_candidates = plan_candidates
@@ -73,8 +74,8 @@ class SVMEstimatorBase:
         return self.diagnostics.scope(name, **meta)
 
     def _config(self) -> SolverConfig:
-        return SolverConfig(algorithm=self.algorithm, eps=self.eps,
-                            max_iter=self.max_iter,
+        return SolverConfig(algorithm=self.algorithm, step=self.step,
+                            eps=self.eps, max_iter=self.max_iter,
                             plan_candidates=self.plan_candidates)
 
     def _resolve_gamma(self, X) -> float:

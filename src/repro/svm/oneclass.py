@@ -41,7 +41,8 @@ class OneClassSVM(SVMEstimatorBase):
     """
 
     def __init__(self, nu: float = 0.5, gamma: Union[float, str] = "scale",
-                 *, algorithm: str = "pasmo", eps: float = 1e-3,
+                 *, algorithm: str = "pasmo", step: str = "plain",
+                 eps: float = 1e-3,
                  max_iter: int = 1_000_000, plan_candidates: int = 1,
                  impl: str = "auto", engine: str = "auto",
                  precompute: bool = True, dtype=None, mesh=None,
@@ -53,7 +54,8 @@ class OneClassSVM(SVMEstimatorBase):
         self._init_common(algorithm=algorithm, eps=eps, max_iter=max_iter,
                           plan_candidates=plan_candidates, impl=impl,
                           engine=engine, precompute=precompute, dtype=dtype,
-                          mesh=mesh, devices=devices, diagnostics=diagnostics)
+                          step=step, mesh=mesh, devices=devices,
+                          diagnostics=diagnostics)
 
     def fit(self, X, y=None) -> "OneClassSVM":
         X = jnp.asarray(X, self.dtype)

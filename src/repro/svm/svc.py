@@ -46,8 +46,11 @@ class SVC(SVMEstimatorBase):
     ``class_weight`` (``None``, ``"balanced"``, or a ``{label: weight}``
     dict — sample ``i`` of class ``c`` gets budget ``C * w_c``, i.e. a
     per-coordinate box of the generalized dual; requires scalar ``C``).
-    Solver knobs (``algorithm``, ``eps``, ``max_iter``, ``plan_candidates``)
-    map onto :class:`repro.core.solver.SolverConfig`; ``impl`` selects the
+    Solver knobs (``algorithm``, ``step``, ``eps``, ``max_iter``,
+    ``plan_candidates``) map onto
+    :class:`repro.core.solver.SolverConfig` — ``step="conjugate"``
+    (requires ``algorithm="smo"``) selects the Conjugate-SMO
+    two-direction step; ``impl`` selects the
     kernel backend (``"auto"`` = Pallas on TPU, jnp elsewhere) for both the
     fused fit engine and the predict Gram work; ``engine`` picks the fit
     engine (``"auto"`` resolves to ``"sharded"`` on a multiclass fit with
@@ -72,7 +75,8 @@ class SVC(SVMEstimatorBase):
     def __init__(self, C: Union[float, np.ndarray] = 1.0,
                  gamma: Union[float, str] = "scale", *,
                  class_weight: Union[dict, str, None] = None,
-                 algorithm: str = "pasmo", eps: float = 1e-3,
+                 algorithm: str = "pasmo", step: str = "plain",
+                 eps: float = 1e-3,
                  max_iter: int = 1_000_000, plan_candidates: int = 1,
                  impl: str = "auto", engine: str = "auto",
                  precompute: bool = True, dtype=None, mesh=None,
@@ -87,7 +91,8 @@ class SVC(SVMEstimatorBase):
         self._init_common(algorithm=algorithm, eps=eps, max_iter=max_iter,
                           plan_candidates=plan_candidates, impl=impl,
                           engine=engine, precompute=precompute, dtype=dtype,
-                          mesh=mesh, devices=devices, diagnostics=diagnostics)
+                          step=step, mesh=mesh, devices=devices,
+                          diagnostics=diagnostics)
 
     # -- fitting ------------------------------------------------------------
 

@@ -41,7 +41,9 @@ class SVR(SVMEstimatorBase):
     ``C`` is the box budget, ``epsilon`` the insensitive-tube half-width,
     ``gamma`` a float or ``"scale"``; ``eps`` is the KKT stopping accuracy
     (solver tolerance, NOT the tube).  ``impl``/``engine``/``precompute``
-    select backends exactly as in :class:`repro.svm.svc.SVC`.  The fit is
+    — and the ``algorithm``/``step`` solver knobs, including
+    ``step="conjugate"`` — select backends exactly as in
+    :class:`repro.svm.svc.SVC`.  The fit is
     a single QP lane, so ``engine="auto"`` never picks ``"sharded"`` here
     — an explicit ``engine="sharded"`` (with optional ``mesh``/``devices``)
     still routes the lane through the sharded engine, mainly so grid code
@@ -52,7 +54,8 @@ class SVR(SVMEstimatorBase):
 
     def __init__(self, C: float = 1.0, epsilon: float = 0.1,
                  gamma: Union[float, str] = "scale", *,
-                 algorithm: str = "pasmo", eps: float = 1e-3,
+                 algorithm: str = "pasmo", step: str = "plain",
+                 eps: float = 1e-3,
                  max_iter: int = 1_000_000, plan_candidates: int = 1,
                  impl: str = "auto", engine: str = "auto",
                  precompute: bool = True, dtype=None, mesh=None,
@@ -63,7 +66,8 @@ class SVR(SVMEstimatorBase):
         self._init_common(algorithm=algorithm, eps=eps, max_iter=max_iter,
                           plan_candidates=plan_candidates, impl=impl,
                           engine=engine, precompute=precompute, dtype=dtype,
-                          mesh=mesh, devices=devices, diagnostics=diagnostics)
+                          step=step, mesh=mesh, devices=devices,
+                          diagnostics=diagnostics)
 
     def fit(self, X, y) -> "SVR":
         X = jnp.asarray(X, self.dtype)

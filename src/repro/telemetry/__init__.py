@@ -116,6 +116,13 @@ class Diagnostics:
                 rec["converged"] = bool(res["converged"][lane])
             if "n_planning" in res:
                 rec["n_planning"] = int(res["n_planning"][lane])
+                if rec.get("iterations"):
+                    # share of iterations whose 2-direction step was
+                    # accepted: the planning rate under algorithm="pasmo",
+                    # the conjugate acceptance rate under step="conjugate"
+                    # (same channel — the modes are mutually exclusive)
+                    rec["accepted_step_share"] = (
+                        rec["n_planning"] / rec["iterations"])
             if "n_unshrink" in res:
                 rec["total_unshrink"] = int(res["n_unshrink"][lane])
             elif ns:

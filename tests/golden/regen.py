@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""Regenerate the fused-engine golden jaxprs in one command:
+
+    PYTHONPATH=src python tests/golden/regen.py
+
+Each golden pins the traced jaxpr of ``solve_fused_batched_qp`` for one
+static configuration.  The first line of every file records the jax
+version that printed it — jaxpr pretty-printing is not stable across jax
+versions, so the byte-identity tests only run on a matching version and
+skip elsewhere.
+
+Captures are HERMETIC: every golden is rendered in its own fresh python
+process (``--print NAME`` prints one golden to stdout; the default
+regen-all mode spawns one ``--print`` subprocess per file).  This
+matters because the jaxpr pretty-printer dedups repeated pjit sub-jaxprs
+by object identity — whether eight traced ``jnp.where`` calls share one
+jaxpr object (printed as a shared ``_where`` table entry) or expand
+inline depends on the in-process tracing-cache state.  A fresh process
+per capture makes the bytes a pure function of (jax version, recipe),
+and the byte-identity tests use the same ``--print`` path, so test and
+regen agree by construction.
+
+Regenerate whenever an INTENTIONAL trace change lands (the pallas
+goldens bake kernel source line numbers, so even pure line-shift edits
+to ``repro/kernels/rbf_update_wss.py`` move them); review the diff to
+confirm the change is the one you meant to make before committing.
+"""
+
+import os
+import subprocess
+import sys
+
+GOLDEN_DIR = os.path.dirname(os.path.abspath(__file__))
+
+# golden file -> (cfg_name, solver kwargs); one entry per byte-identity
+# test.  Configs are named (not constructed at import time) so the
+# registry is importable without touching jax.
+GOLDENS = {
+    "fused_jaxpr_jnp.txt": ("plain", dict(impl="jnp")),
+    "fused_jaxpr_jnp_shrink.txt": ("plain", dict(impl="jnp",
+                                                 shrinking=True)),
+    "fused_jaxpr_interpret.txt": ("plain", dict(impl="interpret",
+                                                block_l=8)),
+    "fused_jaxpr_conjugate_jnp.txt": ("conjugate", dict(impl="jnp")),
+    "fused_jaxpr_conjugate_interpret.txt": (
+        "conjugate", dict(impl="interpret", block_l=8)),
+}
+
+
+def render(name: str) -> str:
+    """Render one golden (header + jaxpr body) IN THIS process.
+
+    Only call this from a fresh interpreter (``--print`` mode) — any
+    prior jax tracing in the process can perturb the pretty-printer's
+    sub-jaxpr sharing and change the bytes.
+    """
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.solver import SolverConfig
+    from repro.core.solver_fused import solve_fused_batched_qp
+
+    cfg_name, kw = GOLDENS[name]
+    cfg = {
+        "plain": lambda: SolverConfig(eps=1e-3, max_iter=500),
+        "conjugate": lambda: SolverConfig(algorithm="smo",
+                                          step="conjugate", eps=1e-3,
+                                          max_iter=500),
+    }[cfg_name]()
+
+    rng = np.random.default_rng(0)
+    l, d, B = 16, 4, 3
+    X = jnp.asarray(rng.normal(size=(l, d)))
+    Y = jnp.asarray(np.sign(rng.normal(size=(B, l))))
+    YC = Y * 2.0
+    L, U = jnp.minimum(0.0, YC), jnp.maximum(0.0, YC)
+    gam = jnp.asarray(rng.uniform(0.3, 1.0, B))
+
+    body = str(jax.make_jaxpr(
+        lambda X, P, L, U, g: solve_fused_batched_qp(
+            X, P, L, U, g, cfg, **kw))(X, Y, L, U, gam)).rstrip("\n")
+    return f"# jax {jax.__version__}\n{body}\n"
+
+
+def render_in_subprocess(name: str) -> str:
+    """Spawn a fresh interpreter and return its ``--print NAME`` output.
+
+    This is the capture entry point the byte-identity tests use.
+    """
+    src = os.path.abspath(os.path.join(GOLDEN_DIR, "..", "..", "src"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(GOLDEN_DIR, "regen.py"),
+         "--print", name],
+        capture_output=True, text=True, env=env, timeout=600)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"regen.py --print {name} failed "
+            f"(rc={proc.returncode}):\n{proc.stderr}")
+    return proc.stdout
+
+
+def main(argv):
+    if len(argv) == 2 and argv[0] == "--print":
+        sys.stdout.write(render(argv[1]))
+        return
+    if argv:
+        sys.exit(f"usage: {sys.argv[0]} [--print GOLDEN_NAME]")
+    for name in GOLDENS:
+        out = render_in_subprocess(name)
+        with open(os.path.join(GOLDEN_DIR, name), "w") as fh:
+            fh.write(out)
+        header, body = out.split("\n", 1)
+        print(f"wrote {name} ({len(body) - 1} bytes, {header[2:]})")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])
