@@ -176,7 +176,82 @@ def gate(fresh_path: str, record_path: str) -> int:
     return 0
 
 
+def check_record(path: str) -> list:
+    """Schema/fingerprint lint of one ``BENCH_*.json`` record.
+
+    No benchmark runs, no jax import — this is the ``--check-only`` mode
+    the CI static-analysis job uses to lint *checked-in* records, so a
+    hand-edited or truncated record fails loudly before it silently
+    un-gates a metric.  Returns a list of problem strings (empty = ok).
+    """
+    problems = []
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"unreadable record: {e}"]
+    configs = rec.get("configs")
+    if not isinstance(configs, list) or not configs:
+        return ["missing/empty 'configs' list"]
+    fp = rec.get("fingerprint")
+    if not isinstance(fp, dict) or not fp:
+        problems.append("missing environment 'fingerprint' (every record "
+                        "stamps provenance; see benchmarks/grid_bench.py)")
+    if rec.get("errors"):
+        problems.append(f"record is PARTIAL ({len(rec['errors'])} bench "
+                        "error(s)) — a partial record must not be "
+                        "checked in")
+    seen = set()
+    for n, entry in enumerate(configs):
+        where = f"configs[{n}]"
+        cfg = entry.get("config")
+        if not isinstance(cfg, dict) \
+                or not {"l", "k", "n_gamma"} <= set(cfg):
+            problems.append(f"{where}: 'config' must carry l/k/n_gamma")
+            continue
+        if "n_qp" not in entry:
+            problems.append(f"{where}: missing 'n_qp'")
+            continue
+        key = _config_key(entry)
+        if key in seen:
+            problems.append(f"{where}: duplicate config key {key} "
+                            "(the gate would silently drop one)")
+        seen.add(key)
+        speedups = entry.get("speedups")
+        if not isinstance(speedups, dict) or not speedups:
+            problems.append(f"{where}: missing/empty 'speedups'")
+            continue
+        for metric, v in speedups.items():
+            if not isinstance(v, (int, float)) or not v > 0:
+                problems.append(f"{where}: speedups[{metric!r}] = {v!r} "
+                                "is not a positive number")
+        for metric, tol in (entry.get("tolerances") or {}).items():
+            if metric not in speedups:
+                problems.append(f"{where}: tolerance for {metric!r} "
+                                "which the entry does not measure")
+            if not isinstance(tol, (int, float)) or not 0 < tol < 1:
+                problems.append(f"{where}: tolerances[{metric!r}] = "
+                                f"{tol!r} outside (0, 1)")
+    return problems
+
+
+def check_only(paths) -> int:
+    status = 0
+    for path in paths:
+        problems = check_record(path)
+        if problems:
+            status = 1
+            print(f"bench_gate: {path}: {len(problems)} problem(s)")
+            for msg in problems:
+                print(f"  {msg}")
+        else:
+            print(f"bench_gate: {path}: schema/fingerprint OK")
+    return status
+
+
 def main() -> None:
+    if len(sys.argv) >= 3 and sys.argv[1] == "--check-only":
+        sys.exit(check_only(sys.argv[2:]))
     if len(sys.argv) != 3:
         sys.exit(__doc__)
     sys.exit(gate(sys.argv[1], sys.argv[2]))

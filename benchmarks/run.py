@@ -11,12 +11,6 @@ import argparse
 import sys
 import time
 
-import jax
-
-jax.config.update("jax_enable_x64", True)  # f64 QP solves (paper setting)
-
-from benchmarks.common import emit  # noqa: E402
-
 REGISTRY = [
     ("table2", "benchmarks.table2_pasmo"),
     ("fig3", "benchmarks.fig3_stepsizes"),
@@ -41,7 +35,27 @@ def main() -> None:
     ap.add_argument("--json-dir", default=".",
                     help="directory for machine-readable BENCH_*.json "
                          "records (currently: BENCH_grid.json)")
+    ap.add_argument("--check-only", action="store_true",
+                    help="validate the schema/fingerprint of every "
+                         "BENCH_*.json under --json-dir and exit — no "
+                         "benchmark runs, no jax import")
     args = ap.parse_args()
+    if args.check_only:
+        import glob
+        import os
+
+        from benchmarks.bench_gate import check_only
+        paths = sorted(glob.glob(os.path.join(args.json_dir,
+                                              "BENCH_*.json")))
+        if not paths:
+            sys.exit(f"run --check-only: no BENCH_*.json under "
+                     f"{args.json_dir}")
+        sys.exit(check_only(paths))
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)  # f64 QP solves (paper)
+    from benchmarks.common import emit
     only = set(args.only.split(",")) if args.only else None
     if only:
         unknown = only - {k for k, _ in REGISTRY}

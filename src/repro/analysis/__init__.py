@@ -1,0 +1,37 @@
+"""Static-analysis subsystem: jaxpr auditor, recompile guard, repo linter.
+
+The stack carries load-bearing invariants that exist only as convention:
+
+* feature-off engine configs (``telemetry=None``, ``step="plain"``,
+  ``act``/``masked`` off) must trace jaxprs structurally identical to the
+  bare engine — the hot path pays nothing for features it does not use;
+* integer indices ride an int32 channel and floats never weak-promote to
+  f64 inside traced device code;
+* per-problem ``(C, gamma)`` stay *traced* while ``SolverConfig`` stays
+  static — a discipline regression shows up as one recompile per grid
+  lane and silently erases the planning-ahead paper's cheap-iteration
+  premium;
+* solver return types (``SolveResult``/``FusedResult``) only widen
+  through the telemetry seam.
+
+``python -m repro.analysis`` checks all of them as three passes:
+
+* :mod:`repro.analysis.jaxpr_audit` — traces the classic/fused/sharded
+  engines across a config matrix and walks the jaxprs programmatically
+  (structural equivalence vs ``tests/golden/structural.json``, dtype
+  audit, host-callback scan, primitive/dtype census artifact);
+* :mod:`repro.analysis.recompile_guard` — a tracing-cache probe that
+  sweeps ``(C, gamma, B, l)`` and asserts the exact expected compile
+  count per jit call site;
+* :mod:`repro.analysis.lint_rules` — AST rules over the repo source
+  (f64 literals in device code, Python ``if`` on traced carry state,
+  widened result signatures, nondeterministic tests).
+
+Every pass returns a list of :class:`Finding`; the CLI exits non-zero
+when any pass finds one.  See ``README.md`` ("Static analysis") for the
+rule table and the CI wiring.
+"""
+
+from repro.analysis.report import Finding
+
+__all__ = ["Finding"]

@@ -1,0 +1,128 @@
+"""CLI for the static-analysis subsystem.
+
+Default run (no flags) executes all three passes and exits non-zero on
+any finding::
+
+    PYTHONPATH=src python -m repro.analysis
+
+Pass selection: ``--audit`` (jaxpr structural + dtype + callback),
+``--recompile`` (tracing-cache probes), ``--lint`` (AST rules; works
+without jax).  ``--census DIR`` writes the per-engine primitive/dtype
+census JSONs (CI uploads them as an artifact).  ``--write-golden``
+refreshes ``tests/golden/structural.json`` after an INTENDED trace
+change.  ``--plant {f64,carry,recompile,lint}`` runs one planted
+violation instead of the real passes — the negative control MUST exit
+non-zero, which is what ``tests/test_analysis.py`` asserts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _enable_x64() -> None:
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+
+def _run_plant(kind: str) -> list:
+    if kind == "lint":
+        from repro.analysis import lint_rules
+
+        return lint_rules.run_fixtures()
+    _enable_x64()
+    if kind == "f64":
+        from repro.analysis import jaxpr_audit
+
+        return jaxpr_audit.plant_f64()
+    if kind == "carry":
+        from repro.analysis import jaxpr_audit
+
+        return jaxpr_audit.plant_widened_carry()
+    from repro.analysis import recompile_guard
+
+    return recompile_guard.plant_excess_recompile()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr auditor, recompile guard and repo linter")
+    ap.add_argument("--audit", action="store_true",
+                    help="jaxpr structural/dtype/callback audit only")
+    ap.add_argument("--recompile", action="store_true",
+                    help="tracing-cache probes only")
+    ap.add_argument("--lint", action="store_true",
+                    help="AST rules only (no jax needed)")
+    ap.add_argument("--census", metavar="DIR",
+                    help="also write per-engine census JSONs to DIR")
+    ap.add_argument("--golden", metavar="PATH",
+                    help="structural golden path (default "
+                         "tests/golden/structural.json)")
+    ap.add_argument("--write-golden", action="store_true",
+                    help="refresh the structural golden and exit")
+    ap.add_argument("--plant", choices=("f64", "carry", "recompile",
+                                        "lint"),
+                    help="run one planted violation (negative control; "
+                         "exits non-zero when detection works)")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.report import print_findings
+
+    if args.plant:
+        findings = _run_plant(args.plant)
+        print_findings(f"plant:{args.plant}", findings)
+        if not findings:
+            print(f"plant:{args.plant}: NOT DETECTED "
+                  "(the planted violation slipped through)",
+                  file=sys.stderr)
+            return 2
+        return 1
+
+    if args.write_golden:
+        _enable_x64()
+        from repro.analysis import jaxpr_audit
+
+        path = args.golden or jaxpr_audit.default_golden_path()
+        jaxpr_audit.emit_golden(path)
+        print(f"wrote {path}")
+        return 0
+
+    run_all = not (args.audit or args.recompile or args.lint)
+    failed = False
+
+    if run_all or args.lint:
+        from repro.analysis import lint_rules
+
+        findings = lint_rules.run_lint()
+        print_findings("lint", findings)
+        failed |= bool(findings)
+
+    if run_all or args.audit:
+        _enable_x64()
+        from repro.analysis import jaxpr_audit
+
+        golden = args.golden or jaxpr_audit.default_golden_path()
+        findings = jaxpr_audit.audit_structure(golden)
+        findings += jaxpr_audit.audit_all_dtypes()
+        print_findings("jaxpr-audit", findings)
+        failed |= bool(findings)
+        if args.census:
+            paths = jaxpr_audit.emit_census(args.census)
+            print(f"census: wrote {len(paths)} file(s) to {args.census}")
+
+    if run_all or args.recompile:
+        _enable_x64()
+        from repro.analysis import recompile_guard
+
+        findings = recompile_guard.run_probes()
+        print_findings("recompile-guard", findings)
+        failed |= bool(findings)
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

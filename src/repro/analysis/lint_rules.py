@@ -1,0 +1,258 @@
+"""Repo-invariant linter: AST rules the generic linters cannot express.
+
+Runs without jax (pure ``ast``), so it works on boxes with no working
+accelerator install.  Rules:
+
+``RA001`` *f64 in device code* — no ``jnp.float64`` in
+    ``src/repro/{core,kernels}`` outside function-signature defaults
+    (caller-facing dtype defaults are API, not traced code), and no
+    ``np.float64`` in ``kernels/`` at all.  In ``core/`` the np form is
+    allowed only in the documented host-side drivers
+    (``reference.py``, ``grid.py``, ``solver_fused.py`` — numpy
+    accumulators never enter a trace).  Suppress a deliberate use with a
+    ``# static-ok: f64`` line comment.
+
+``RA002`` *Python branch on traced carry* — inside a solver-loop
+    ``body``/``cond`` function, a Python ``if``/``while`` whose test
+    reads the carry parameter is a tracer leak (it burns the trace into
+    one branch or crashes under jit).  Data branches belong in
+    ``jnp.where``/``lax.cond``.
+
+``RA003`` *widened result signature* — ``SolveResult`` /
+    ``FusedResult`` field lists are pinned.  New per-iteration outputs
+    route through the telemetry ring seam (PR 8), not through the result
+    structs every caller unpacks.
+
+``RA004`` *nondeterministic tests* — tests draw randomness from seeded
+    ``np.random.default_rng(seed)`` generators only; bare legacy-global
+    draws, unseeded generators, stdlib ``random`` without a seed, and
+    wall-clock reads (``time.time``, ``datetime.now``) are flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List, Optional
+
+from repro.analysis.report import Finding
+
+SUPPRESS_F64 = "static-ok: f64"
+
+DEVICE_PREFIXES = ("src/repro/core/", "src/repro/kernels/")
+HOST_F64_CORE = (
+    "src/repro/core/reference.py",
+    "src/repro/core/grid.py",
+    "src/repro/core/solver_fused.py",
+)
+# The telemetry-seam convention (PR 8): these are the ONLY result fields.
+RESULT_PINS = {
+    "SolveResult": (
+        "alpha", "b", "G", "iterations", "objective", "kkt_gap",
+        "converged", "n_planning", "n_free", "n_clipped", "n_reverted",
+        "n_free_sv", "trace", "n_trace", "steps_i", "steps_j", "steps_mu"),
+    "FusedResult": (
+        "alpha", "b", "G", "iterations", "objective", "kkt_gap",
+        "converged", "n_planning", "n_unshrink"),
+}
+
+WALLCLOCK_CALLS = {("time", "time"), ("datetime", "now"),
+                   ("date", "today")}
+
+
+def repo_root() -> pathlib.Path:
+    p = pathlib.Path(__file__).resolve()
+    for parent in p.parents:
+        if (parent / "pyproject.toml").exists():
+            return parent
+    raise RuntimeError("pyproject.toml not found above " + str(p))
+
+
+def _attr_chain(node: ast.AST) -> Optional[str]:
+    """Dotted name of an attribute chain (``jnp.float64``), else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _signature_default_nodes(tree: ast.AST) -> set:
+    """ids of every node inside a function-signature default expression."""
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defaults = list(node.args.defaults)
+            defaults += [d for d in node.args.kw_defaults if d is not None]
+            for d in defaults:
+                for sub in ast.walk(d):
+                    out.add(id(sub))
+    return out
+
+
+def _suppressed(lines: List[str], lineno: int) -> bool:
+    return (0 < lineno <= len(lines)
+            and SUPPRESS_F64 in lines[lineno - 1])
+
+
+def _rule_f64(tree, rel: str, lines, findings: List[Finding]) -> None:
+    if not rel.startswith(DEVICE_PREFIXES):
+        return
+    in_kernels = rel.startswith("src/repro/kernels/")
+    defaults = _signature_default_nodes(tree)
+    for node in ast.walk(tree):
+        chain = _attr_chain(node)
+        if chain not in ("jnp.float64", "np.float64", "numpy.float64"):
+            continue
+        if _suppressed(lines, node.lineno):
+            continue
+        if chain == "jnp.float64":
+            if id(node) in defaults:
+                continue                     # caller-facing dtype default
+        else:
+            if not in_kernels and rel in HOST_F64_CORE:
+                continue                     # documented host-side driver
+        findings.append(Finding(
+            "RA001", f"{rel}:{node.lineno}",
+            f"{chain} in device code (traced math is f32/f64-agnostic "
+            "via input dtype; host drivers are allowlisted; suppress a "
+            f"deliberate use with '# {SUPPRESS_F64}')"))
+
+
+def _references(node: ast.AST, name: str) -> bool:
+    return any(isinstance(sub, ast.Name) and sub.id == name
+               for sub in ast.walk(node))
+
+
+def _rule_carry_branch(tree, rel: str, findings: List[Finding]) -> None:
+    if not rel.startswith("src/repro/core/"):
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        if node.name not in ("body", "cond"):
+            continue
+        if not node.args.args:
+            continue
+        carry = node.args.args[0].arg
+        for stmt in ast.walk(node):
+            if isinstance(stmt, (ast.If, ast.While)) \
+                    and _references(stmt.test, carry):
+                findings.append(Finding(
+                    "RA002", f"{rel}:{stmt.lineno}",
+                    f"Python branch on traced carry '{carry}' inside "
+                    f"{node.name}() — use jnp.where / lax.cond"))
+
+
+def _rule_result_pin(tree, rel: str, findings: List[Finding]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        pin = RESULT_PINS.get(node.name)
+        if pin is None:
+            continue
+        fields = tuple(t.target.id for t in node.body
+                       if isinstance(t, ast.AnnAssign)
+                       and isinstance(t.target, ast.Name))
+        if fields != pin:
+            extra = sorted(set(fields) - set(pin))
+            missing = sorted(set(pin) - set(fields))
+            findings.append(Finding(
+                "RA003", f"{rel}:{node.lineno}",
+                f"{node.name} fields changed (added {extra or '[]'}, "
+                f"removed {missing or '[]'}): new per-iteration outputs "
+                "route through the telemetry ring seam, not the result "
+                "struct"))
+
+
+def _rule_test_determinism(tree, rel: str, findings: List[Finding]) -> None:
+    if not rel.startswith("tests/") or rel.startswith("tests/fixtures/"):
+        return
+    seeded_stdlib = any(
+        isinstance(n, ast.Call) and _attr_chain(n.func) == "random.seed"
+        for n in ast.walk(tree))
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if chain is None:
+            continue
+        if chain.endswith("np.random.default_rng") and not node.args:
+            findings.append(Finding(
+                "RA004", f"{rel}:{node.lineno}",
+                "unseeded default_rng() in a test"))
+        elif chain.startswith("np.random.") \
+                and chain != "np.random.default_rng":
+            findings.append(Finding(
+                "RA004", f"{rel}:{node.lineno}",
+                f"legacy global RNG draw {chain} (use a seeded "
+                "default_rng)"))
+        elif chain.startswith("random.") and chain != "random.seed" \
+                and not seeded_stdlib:
+            findings.append(Finding(
+                "RA004", f"{rel}:{node.lineno}",
+                f"stdlib {chain} without random.seed in this file"))
+        elif any(chain.endswith(f"{m}.{f}") for m, f in WALLCLOCK_CALLS):
+            findings.append(Finding(
+                "RA004", f"{rel}:{node.lineno}",
+                f"wall-clock read {chain} in a test (nondeterministic)"))
+
+
+RULES = (_rule_f64, _rule_carry_branch, _rule_result_pin,
+         _rule_test_determinism)
+
+
+def lint_source(source: str, rel: str) -> List[Finding]:
+    """Run every rule over one file's text; ``rel`` is the repo-relative
+    posix path that decides which rules apply (fixture tests map planted
+    files onto device-code paths this way)."""
+    findings: List[Finding] = []
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("RA000", f"{rel}:{e.lineno}", "syntax error")]
+    lines = source.splitlines()
+    _rule_f64(tree, rel, lines, findings)
+    _rule_carry_branch(tree, rel, findings)
+    _rule_result_pin(tree, rel, findings)
+    _rule_test_determinism(tree, rel, findings)
+    return findings
+
+
+# Planted-violation fixtures: filename -> the repo-relative path the file
+# is linted AS (rules are path-scoped).  Each must trigger its rule once.
+FIXTURES = {
+    "ra001_f64_device.py": "src/repro/core/__planted__.py",
+    "ra002_carry_branch.py": "src/repro/core/__planted__.py",
+    "ra003_widened_result.py": "src/repro/core/__planted__.py",
+    "ra004_unseeded_test.py": "tests/test___planted__.py",
+}
+
+
+def run_fixtures(fixture_dir: Optional[pathlib.Path] = None
+                 ) -> List[Finding]:
+    """Lint the planted fixtures (negative control: MUST find one
+    violation per fixture)."""
+    d = fixture_dir or repo_root() / "tests" / "fixtures" / "lint"
+    findings: List[Finding] = []
+    for fname, rel in FIXTURES.items():
+        findings.extend(lint_source((d / fname).read_text(), rel))
+    return findings
+
+
+def run_lint(root: Optional[pathlib.Path] = None) -> List[Finding]:
+    root = root or repo_root()
+    findings: List[Finding] = []
+    for sub in ("src/repro", "tests"):
+        base = root / sub
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            if rel.startswith("tests/fixtures/"):
+                continue
+            findings.extend(lint_source(path.read_text(), rel))
+    return findings

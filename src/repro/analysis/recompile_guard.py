@@ -1,0 +1,176 @@
+"""Tracing-cache probes: assert exact compile counts per jit call site.
+
+The grid premium rests on a static/traced split (PR 1): per-problem
+``(C, gamma)`` ride in as *traced* data (C through the box ``L``/``U``,
+gamma as an array) while ``SolverConfig`` and the backend knobs are
+*static*.  A regression — say a Python-float gamma threaded into a
+static argument, or a config field demoted to traced — does not fail any
+numeric test; it shows up as one silent retrace per grid lane and erases
+the cheap-iteration premium the planning-ahead paper is about.
+
+Each probe below clears the global tracing caches, drives a real jit
+call site through a small ``(C, gamma, B, l)`` sweep, and asserts the
+**exact** expected entry count via the jitted function's
+``_cache_size()``.  Counts are exact, not bounds: a probe that expects 2
+and sees 1 is as wrong as one that sees 3 (it means the sweep no longer
+exercises what it claims to).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.report import Finding
+
+PROBE_L, PROBE_D, PROBE_B = 16, 4, 3
+
+
+def _problem(l: int = PROBE_L, B: int = PROBE_B, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(l, PROBE_D)))
+    Y = jnp.asarray(np.sign(rng.normal(size=(B, l))))
+    return X, Y
+
+
+def _fused_args(C: float, gamma: float, l: int = PROBE_L, B: int = PROBE_B):
+    X, Y = _problem(l, B)
+    YC = Y * C
+    L, U = jnp.minimum(0.0, YC), jnp.maximum(0.0, YC)
+    gam = jnp.full((B,), gamma, X.dtype)
+    return X, Y, L, U, gam
+
+
+def _count(probe_name: str, jitted, expected: int,
+           findings: List[Finding]) -> None:
+    got = jitted._cache_size()
+    if got != expected:
+        findings.append(Finding(
+            "recompile-count", probe_name,
+            f"expected exactly {expected} cache entrie(s), got {got} "
+            "(static/traced discipline regression)"))
+
+
+def probe_fused_c_gamma(findings: List[Finding]) -> None:
+    """(C, gamma) sweep over the fused engine: ONE compile for 4 values."""
+    from repro.core.solver_fused import solve_fused_batched_qp
+
+    from repro.core.solver import SolverConfig
+    cfg = SolverConfig(eps=1e-3, max_iter=200)
+    jax.clear_caches()
+    for C in (0.5, 2.0):
+        for gamma in (0.4, 0.9):
+            X, Y, L, U, gam = _fused_args(C, gamma)
+            solve_fused_batched_qp(X, Y, L, U, gam, cfg, impl="jnp")
+    _count("fused:c-gamma-sweep", solve_fused_batched_qp, 1, findings)
+
+
+def probe_fused_shapes(findings: List[Finding]) -> None:
+    """Distinct (B, l) shapes legitimately compile once each."""
+    from repro.core.solver_fused import solve_fused_batched_qp
+
+    from repro.core.solver import SolverConfig
+    cfg = SolverConfig(eps=1e-3, max_iter=200)
+    jax.clear_caches()
+    for B, l in ((2, 16), (3, 16), (3, 32)):
+        X, Y, L, U, gam = _fused_args(1.0, 0.5, l=l, B=B)
+        solve_fused_batched_qp(X, Y, L, U, gam, cfg, impl="jnp")
+    _count("fused:shape-sweep", solve_fused_batched_qp, 3, findings)
+
+
+def probe_fused_static_cfg(findings: List[Finding]) -> None:
+    """Distinct SolverConfigs are distinct compilations (static by design)."""
+    from repro.core.solver_fused import solve_fused_batched_qp
+
+    from repro.core.solver import SolverConfig
+    jax.clear_caches()
+    for eps in (1e-3, 1e-4):
+        X, Y, L, U, gam = _fused_args(1.0, 0.5)
+        solve_fused_batched_qp(X, Y, L, U, gam,
+                               SolverConfig(eps=eps, max_iter=200),
+                               impl="jnp")
+    _count("fused:static-cfg", solve_fused_batched_qp, 2, findings)
+
+
+def probe_classic_c_gamma(findings: List[Finding]) -> None:
+    """(C, gamma) sweep over the classic engine: ONE compile for 4 values.
+
+    C enters through the traced box bounds, gamma through the traced Gram
+    values — same aval, same compilation.
+    """
+    from repro.core import qp as qp_mod
+    from repro.core.solver import SolverConfig, solve_qp
+
+    X, Y = _problem()
+    y = Y[0]
+    cfg = SolverConfig(eps=1e-3, max_iter=200)
+    d2 = jnp.sum((X[:, None, :] - X[None, :, :]) ** 2, axis=-1)
+    jax.clear_caches()
+    for C in (0.5, 2.0):
+        for gamma in (0.4, 0.9):
+            kernel = qp_mod.PrecomputedKernel(jnp.exp(-gamma * d2))
+            solve_qp(kernel, qp_mod.classification_qp(y, C), cfg)
+    _count("classic:c-gamma-sweep", solve_qp, 1, findings)
+
+
+def probe_grid_values(findings: List[Finding]) -> None:
+    """Whole-grid call site: value sweeps share ONE compile, a new grid
+    shape adds exactly one."""
+    from repro.core import grid as grid_mod
+    from repro.core.solver import SolverConfig
+
+    X, Y = _problem()
+    cfg = SolverConfig(eps=1e-3, max_iter=200)
+    jax.clear_caches()
+    for Cs, gammas in (((0.5, 1.0), (0.4, 0.8)), ((0.7, 2.0), (0.3, 0.9))):
+        grid_mod.solve_grid(X, Y, jnp.asarray(Cs), jnp.asarray(gammas),
+                            cfg, impl="jnp")
+    _count("grid:value-sweep", grid_mod._solve_grid_fused, 1, findings)
+    grid_mod.solve_grid(X, Y, jnp.asarray([0.5, 1.0, 2.0]),
+                        jnp.asarray([0.4, 0.8]), cfg, impl="jnp")
+    _count("grid:new-shape", grid_mod._solve_grid_fused, 2, findings)
+
+
+PROBES: tuple = (
+    probe_fused_c_gamma,
+    probe_fused_shapes,
+    probe_fused_static_cfg,
+    probe_classic_c_gamma,
+    probe_grid_values,
+)
+
+
+def run_probes(probes=PROBES) -> List[Finding]:
+    findings: List[Finding] = []
+    for probe in probes:
+        probe(findings)
+    jax.clear_caches()
+    return findings
+
+
+def plant_excess_recompile() -> List[Finding]:
+    """Negative control: a call site that bakes gamma in as a *static*
+    argument retraces per value — the guard must flag it."""
+    from repro.core.solver_fused import solve_fused_batched_qp
+
+    from repro.core.solver import SolverConfig
+    cfg = SolverConfig(eps=1e-3, max_iter=200)
+
+    from functools import partial
+
+    @partial(jax.jit, static_argnames=("gamma",))
+    def leaky(X, P, L, U, *, gamma: float):
+        g = jnp.full((P.shape[0],), gamma, X.dtype)
+        return solve_fused_batched_qp(X, P, L, U, g, cfg, impl="jnp")
+
+    findings: List[Finding] = []
+    jax.clear_caches()
+    for gamma in (0.4, 0.9):
+        X, Y, L, U, _ = _fused_args(1.0, gamma)
+        leaky(X, Y, L, U, gamma=gamma)
+    _count("plant:static-gamma", leaky, 1, findings)
+    jax.clear_caches()
+    return findings

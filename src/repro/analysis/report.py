@@ -1,0 +1,36 @@
+"""Shared finding container + tiny text rendering for the analysis CLI.
+
+Kept free of jax imports on purpose: the linter pass (and the ``--lint``
+CLI path) must run on a box without a working jax install.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violation reported by an analysis pass.
+
+    ``check`` is the stable rule identifier (e.g. ``dtype-int64``,
+    ``struct-carry``, ``recompile-count``, ``RA001``); ``where`` locates
+    it (a matrix entry name, a probe name, or ``file:line``); ``message``
+    is the human sentence.
+    """
+
+    check: str
+    where: str
+    message: str
+
+    def render(self) -> str:
+        return f"[{self.check}] {self.where}: {self.message}"
+
+
+def print_findings(pass_name: str, findings: list[Finding]) -> None:
+    if not findings:
+        print(f"{pass_name}: OK")
+        return
+    print(f"{pass_name}: {len(findings)} finding(s)")
+    for f in findings:
+        print("  " + f.render())

@@ -270,7 +270,10 @@ class PrecomputedKernel:
         return jnp.take(self.K, i, axis=0)
 
     def diag(self) -> jax.Array:
-        return jnp.diagonal(self.K)
+        # strided slice of the flat matrix: jnp.diagonal builds an int64
+        # gather-index vector under x64 (off the int32 index channel)
+        n = self.K.shape[0]
+        return jax.lax.slice(self.K.reshape(-1), (0,), (n * n,), (n + 1,))
 
     def entry(self, i: jax.Array, j: jax.Array) -> jax.Array:
         return self.K[i, j]
@@ -302,7 +305,7 @@ class StackedKernel:
         return self.Ks[self.g, i]
 
     def diag(self) -> jax.Array:
-        idx = jnp.arange(self.n)
+        idx = jnp.arange(self.n, dtype=jnp.int32)
         return self.Ks[self.g, idx, idx]
 
     def entry(self, i: jax.Array, j: jax.Array) -> jax.Array:
@@ -436,5 +439,5 @@ def make_rbf(X: jax.Array, gamma) -> RBFKernel:
 
 def materialize(kernel) -> jax.Array:
     """Dense Gram matrix from any oracle (tests / tiny problems only)."""
-    idx = jnp.arange(kernel.n)
+    idx = jnp.arange(kernel.n, dtype=jnp.int32)
     return jax.vmap(kernel.row)(idx)

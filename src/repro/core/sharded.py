@@ -94,7 +94,7 @@ def solve_sharded(X, y, C, gamma, mesh: Mesh, cfg: SolverConfig,
     def local_solve(Xl, yl):
         me = jax.lax.axis_index(axis)
         offset = me * nloc
-        gidx = offset + jnp.arange(nloc)
+        gidx = offset + jnp.arange(nloc, dtype=jnp.int32)
         sql = jnp.sum(Xl * Xl, axis=-1)
         Ll = jnp.minimum(0.0, yl * C)
         Ul = jnp.maximum(0.0, yl * C)
@@ -122,7 +122,7 @@ def solve_sharded(X, y, C, gamma, mesh: Mesh, cfg: SolverConfig,
         def global_argmax(val_loc, idx_loc):
             vals = jax.lax.all_gather(val_loc, axis)   # (P,)
             idxs = jax.lax.all_gather(idx_loc.astype(jnp.int32), axis)
-            w = jnp.argmax(vals)
+            w = jax.lax.argmax(vals, 0, jnp.int32)
             return jnp.take(idxs, w), jnp.take(vals, w)
 
         class Carry(NamedTuple):
@@ -153,7 +153,7 @@ def solve_sharded(X, y, C, gamma, mesh: Mesh, cfg: SolverConfig,
 
             # ---- i selection (first-order part of WSS2) -------------------
             vi = jnp.where(up, G, -jnp.inf)
-            li = jnp.argmax(vi)
+            li = jax.lax.argmax(vi, 0, jnp.int32)
             i_g, g_i = global_argmax(jnp.take(vi, li), offset + li)
             x_i, a_i, y_i = bcast_point(i_g, alpha)
             L_i = jnp.minimum(0.0, y_i * C)
@@ -172,7 +172,7 @@ def solve_sharded(X, y, C, gamma, mesh: Mesh, cfg: SolverConfig,
             gains = jnp.where(use_exact, g_exact, g_tilde)
             cand = dn & (lvec > 0) & (gidx != i_g)
             vj = jnp.where(cand, gains, -jnp.inf)
-            lj = jnp.argmax(vj)
+            lj = jax.lax.argmax(vj, 0, jnp.int32)
             j_g, best_gain = global_argmax(jnp.take(vj, lj), offset + lj)
 
             # ---- Alg. 3 extra candidate B^(t-2) ----------------------------

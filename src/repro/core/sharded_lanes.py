@@ -110,9 +110,13 @@ def lane_schedule(cost: jax.Array, n_shards: int
     """
     B = cost.shape[0]
     assert B % n_shards == 0, (B, n_shards)
-    srt = jnp.argsort(-cost)                     # descending, stable
+    # lax.sort with an int32 iota payload == stable argsort on the int32
+    # index channel (jnp.argsort would mint int64 indices under x64)
+    iota = jnp.arange(B, dtype=jnp.int32)
+    _, srt = jax.lax.sort((-cost, iota), num_keys=1)   # descending, stable
     order = srt.reshape(B // n_shards, n_shards).T.reshape(-1)
-    return order, jnp.argsort(order)
+    _, inv = jax.lax.sort((order, iota), num_keys=1)
+    return order, inv
 
 
 def pad_lanes(A: jax.Array, pad: int, value=0.0) -> jax.Array:

@@ -337,8 +337,10 @@ def _make_body(kernel, p, bounds: Bounds, diag, cfg: SolverConfig):
         # ------------------------------------------------------------------
         ratio = mu_plan / jnp.where(jnp.abs(mu_star) > 0, mu_star, 1.0)
         ratio_ok = (ratio >= 1.0 - eta) & (ratio <= 1.0 + eta)
-        hist_i = jnp.roll(s.hist_i, 1).at[0].set(i)
-        hist_j = jnp.roll(s.hist_j, 1).at[0].set(j)
+        # slice+concat roll: jnp.roll would mint an int64 gather-index
+        # vector under x64, leaking off the int32 index channel
+        hist_i = jnp.concatenate([i[None], s.hist_i[:-1]])
+        hist_j = jnp.concatenate([j[None], s.hist_j[:-1]])
 
         if cfg.record_trace:
             slot = jnp.minimum(s.n_trace, cfg.trace_cap - 1)
@@ -452,7 +454,7 @@ def _finalize(s: SolverState, p, bounds: Bounds) -> SolveResult:
     # f(a) = p.a - 1/2 a.Q a = 1/2 (p.a + G.a)  since G = p - Q a
     objective = 0.5 * (jnp.dot(p, s.alpha) + jnp.dot(s.G, s.alpha))
     n_free_sv = jnp.sum((s.alpha > bounds.lower)
-                        & (s.alpha < bounds.upper)).astype(jnp.int32)
+                        & (s.alpha < bounds.upper), dtype=jnp.int32)
     return SolveResult(
         alpha=s.alpha, b=b, G=s.G, iterations=s.t, objective=objective,
         kkt_gap=s.gap, converged=s.done,

@@ -229,7 +229,7 @@ def solve_fused(X, y, C, gamma, cfg: SolverConfig = SolverConfig(),
     up0 = alpha0 < U
     dn0 = alpha0 > L
     v_up = jnp.where(up0, G0, -jnp.inf)
-    i0 = jnp.argmax(v_up).astype(jnp.int32)
+    i0 = jax.lax.argmax(v_up, 0, jnp.int32)
     g_i0 = v_up[i0]
     gap0 = qp_mod.finite_gap(g_i0 - jnp.min(jnp.where(dn0, G0, jnp.inf)))
     z = jnp.asarray(0, jnp.int32)
@@ -421,7 +421,7 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
     # pre-conjugate engine.
     conjugate = cfg.step == "conjugate"
     period = cfg.shrink_every if cfg.shrink_every > 0 else DEFAULT_SHRINK_EVERY
-    lanes = jnp.arange(B)
+    lanes = jnp.arange(B, dtype=jnp.int32)
     # Flight recorder (static knob).  ``collect=False`` must leave the
     # traced jaxpr byte-identical to the telemetry-free engine, so every
     # telemetry hook below is a *Python-level* branch: no ring in the
@@ -706,7 +706,7 @@ def solve_fused_batched_qp(X, P, L, U, gamma,
     up0 = alpha0 < U
     dn0 = alpha0 > L
     v_up = jnp.where(up0, G0, -jnp.inf)
-    i0 = jnp.argmax(v_up, axis=1).astype(jnp.int32)
+    i0 = jax.lax.argmax(v_up, 1, jnp.int32)
     g_i0 = _take_lane(v_up, i0)
     gap0 = qp_mod.finite_gap(
         g_i0 - jnp.min(jnp.where(dn0, G0, jnp.inf), axis=1))

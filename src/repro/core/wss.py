@@ -41,7 +41,7 @@ class Selection(NamedTuple):
 
 def _masked_argmax(values: jax.Array, mask: jax.Array):
     v = jnp.where(mask, values, NEG_INF)
-    idx = jnp.argmax(v)
+    idx = jax.lax.argmax(v, 0, jnp.int32)
     return idx, v[idx]
 
 
@@ -69,7 +69,8 @@ def select_wss2(G: jax.Array, K_i: jax.Array, diag: jax.Array,
     l = g_i - G                                  # l_(i,n) for every candidate n
     q = pair_curvature(K_i, jnp.take(diag, i), diag)
     gains = 0.5 * l * l / q
-    cand = down & (l > 0) & (jnp.arange(G.shape[0]) != i)
+    cand = down & (l > 0) & (jnp.arange(G.shape[0],
+                                        dtype=jnp.int32) != i)
     j, gain = _masked_argmax(gains, cand)
     g_dn = jnp.min(jnp.where(down, G, jnp.inf))
     return Selection(i=i.astype(jnp.int32), j=j.astype(jnp.int32),
@@ -88,7 +89,7 @@ def select_wss2_exact(G: jax.Array, K_i: jax.Array, diag: jax.Array,
     """
     if i is None:
         i, g_i = select_i(G, up)
-    n_idx = jnp.arange(G.shape[0])
+    n_idx = jnp.arange(G.shape[0], dtype=jnp.int32)
     l = g_i - G
     q = pair_curvature(K_i, jnp.take(diag, i), diag)
     ai = jnp.take(alpha, i)

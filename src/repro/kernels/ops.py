@@ -98,7 +98,7 @@ def rbf_row_wss(X, sqn, G, alpha, L, U, xq, a_i, L_i, U_i, g_i, i_idx,
         _pad_l(alpha, lpad), _pad_l(L, lpad), _pad_l(U, lpad),
         _pad_d(xq, dpad), scal, _iscal(i_idx, 1),
         block_l=block_l, interpret=(impl == "interpret"))
-    w = jnp.argmax(bmax)
+    w = jax.lax.argmax(bmax, 0, jnp.int32)
     return k[:l], jnp.take(barg, w), jnp.take(bmax, w)
 
 
@@ -119,7 +119,7 @@ def rbf_update_wss(X, sqn, G, k_i, alpha_new, L, U, xq_j, mu, gamma,
         _pad_l(k_i, lpad), _pad_l(alpha_new, lpad), _pad_l(L, lpad),
         _pad_l(U, lpad), _pad_d(xq_j, dpad), scal,
         block_l=block_l, interpret=(impl == "interpret"))
-    w = jnp.argmax(bmax)
+    w = jax.lax.argmax(bmax, 0, jnp.int32)
     return (G_new[:l], jnp.take(barg, w), jnp.take(bmax, w), jnp.min(bmin))
 
 

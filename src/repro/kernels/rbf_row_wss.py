@@ -83,7 +83,7 @@ def _kernel(xq_ref, scal_ref, iscal_ref, X_ref, sqn_ref, G_ref, alpha_ref,
             + jax.lax.broadcasted_iota(jnp.int32, (1, block_l), 1))
     mask = (alpha > L) & (l_vec > 0) & (gidx != i_idx)
     vals = jnp.where(mask, gains, -jnp.inf)
-    arg = jnp.argmax(vals[0]).astype(jnp.int32)
+    arg = jax.lax.argmax(vals[0], 0, jnp.int32)
     bmax_out[0, 0] = vals[0, arg]
     barg_out[0, 0] = b * block_l + arg
 
@@ -126,7 +126,7 @@ def _select_from_k(k, G, alpha, L, U, scal, i_idx, b, *, block_l: int,
         if act is not None:
             mask = mask & (act[h] > 0.5)
         vals = jnp.where(mask, gains, -jnp.inf)
-        arg = jnp.argmax(vals, axis=1).astype(jnp.int32)
+        arg = jax.lax.argmax(vals, 1, jnp.int32)
         m = jnp.max(vals, axis=1)
         g_arg = h * base_l + b * block_l + arg
         if best is None:

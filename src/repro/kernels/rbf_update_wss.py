@@ -54,7 +54,7 @@ def _kernel(xq_ref, scal_ref, X_ref, sqn_ref, G_ref, ki_ref, alpha_ref,
     up = alpha < U_ref[...]
     dn = alpha > L_ref[...]
     vals_up = jnp.where(up, G_new, -jnp.inf)
-    arg = jnp.argmax(vals_up[0]).astype(jnp.int32)
+    arg = jax.lax.argmax(vals_up[0], 0, jnp.int32)
     bmax_out[0, 0] = vals_up[0, arg]
     barg_out[0, 0] = b * block_l + arg
     bmin_out[0, 0] = jnp.min(jnp.where(dn, G_new, jnp.inf))
@@ -90,7 +90,7 @@ def _update_from_rows(k_i, k_j, G, alpha, L, U, mu, b, *, block_l: int,
             up = up & (act[h] > 0.5)
             dn = dn & (act[h] > 0.5)
         vals_up = jnp.where(up, G_new[h], -jnp.inf)
-        arg = jnp.argmax(vals_up, axis=1).astype(jnp.int32)
+        arg = jax.lax.argmax(vals_up, 1, jnp.int32)
         m = jnp.max(vals_up, axis=1)
         g_arg = h * base_l + b * block_l + arg
         mn = jnp.min(jnp.where(dn, G_new[h], jnp.inf), axis=1)

@@ -8,6 +8,17 @@ import jax.numpy as jnp
 TAU = 1e-12
 
 
+def _act_bool(act):
+    """Boolean view of an active-set mask.
+
+    The jnp path hands the mask through as bool; the Pallas path pads it
+    as 0/1 floats.  Comparing a bool mask against the Python float 0.5
+    weak-promotes it to f64 under x64, so only the float form gets the
+    threshold compare.
+    """
+    return act if act.dtype == jnp.bool_ else act > 0.5
+
+
 def rbf_row(X, sqn, xq, gamma):
     """k(x_q, X) for one query row."""
     d2 = jnp.dot(xq, xq) + sqn - 2.0 * (X @ xq)
@@ -32,7 +43,7 @@ def rbf_row_wss(X, sqn, G, alpha, L, U, xq, a_i, L_i, U_i, g_i, i_idx,
     idx = jnp.arange(X.shape[0], dtype=jnp.int32)
     mask = (alpha > L) & (l > 0) & (idx != i_idx)
     vals = jnp.where(mask, gains, -jnp.inf)
-    j = jnp.argmax(vals).astype(jnp.int32)
+    j = jax.lax.argmax(vals, 0, jnp.int32)
     return k, j, vals[j]
 
 
@@ -46,7 +57,7 @@ def rbf_update_wss(X, sqn, G, k_i, xq_j, mu, alpha_new, L, U, gamma):
     up = alpha_new < U
     dn = alpha_new > L
     vals_up = jnp.where(up, G_new, -jnp.inf)
-    i_next = jnp.argmax(vals_up).astype(jnp.int32)
+    i_next = jax.lax.argmax(vals_up, 0, jnp.int32)
     g_dn = jnp.min(jnp.where(dn, G_new, jnp.inf))
     return G_new, i_next, vals_up[i_next], g_dn
 
@@ -109,9 +120,9 @@ def row_wss_batched_from_k(k, G, alpha, L, U, a_i, L_i, U_i, g_i, i_idx,
     idx = jnp.arange(G.shape[1], dtype=jnp.int32)
     mask = (alpha > L) & (lv > 0) & (idx[None, :] != i_idx[:, None])
     if act is not None:
-        mask = mask & (act > 0.5)
+        mask = mask & _act_bool(act)
     vals = jnp.where(mask, gains, -jnp.inf)
-    j = jnp.argmax(vals, axis=1).astype(jnp.int32)
+    j = jax.lax.argmax(vals, 1, jnp.int32)
     return j, jnp.take_along_axis(vals, j[:, None], axis=1)[:, 0]
 
 
@@ -155,10 +166,10 @@ def update_wss_batched_from_rows(G, k_i, k_j, mu, alpha_new, L, U, act=None,
     up = alpha_new < U
     dn = alpha_new > L
     if act is not None:
-        up = up & (act > 0.5)
-        dn = dn & (act > 0.5)
+        up = up & _act_bool(act)
+        dn = dn & _act_bool(act)
     vals_up = jnp.where(up, G_new, -jnp.inf)
-    i_next = jnp.argmax(vals_up, axis=1).astype(jnp.int32)
+    i_next = jax.lax.argmax(vals_up, 1, jnp.int32)
     g_i_next = jnp.take_along_axis(vals_up, i_next[:, None], axis=1)[:, 0]
     g_dn = jnp.min(jnp.where(dn, G_new, jnp.inf), axis=1)
     if dirv is not None:

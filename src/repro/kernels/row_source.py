@@ -117,7 +117,8 @@ class RowSource:
             v = v[:, :l] + v[:, l:]
         if self.is_bank:
             mv = jnp.einsum("sij,bj->sbi", self.gram, v)
-            out = mv[self.gram_idx, jnp.arange(v.shape[0])]
+            out = mv[self.gram_idx,
+                     jnp.arange(v.shape[0], dtype=jnp.int32)]
         else:
             X, sqn = self.X, self.sqn
             d = X.shape[1]

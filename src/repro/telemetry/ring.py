@@ -95,7 +95,7 @@ def ring_update(ring: TelemetryRing, cfg: RingConfig, *, t, active,
     point is always captured), ``plan_event`` accepted planning steps.
     """
     B = ring.n_samples.shape[0]
-    lanes = jnp.arange(B)
+    lanes = jnp.arange(B, dtype=jnp.int32)
     ti = jnp.asarray(t, jnp.int32)
 
     write = active & (((ti % cfg.sample_every) == 0) | newly_done)

@@ -1,0 +1,10 @@
+"""Lint fixture: RA001 — f64 literal in device code (planted violation).
+
+Linted as if it lived at ``src/repro/core/__planted__.py``; never
+imported by the test suite.
+"""
+import jax.numpy as jnp
+
+
+def widen(x):
+    return x.astype(jnp.float64)

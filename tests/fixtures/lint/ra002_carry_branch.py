@@ -1,0 +1,11 @@
+"""Lint fixture: RA002 — Python branch on a traced carry (planted).
+
+Linted as if it lived at ``src/repro/core/__planted__.py``; never
+imported by the test suite.
+"""
+
+
+def body(s):
+    if s.done:
+        return s
+    return s

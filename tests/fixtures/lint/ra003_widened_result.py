@@ -1,0 +1,19 @@
+"""Lint fixture: RA003 — widened result signature (planted).
+
+A ``FusedResult`` that grew a field outside the telemetry seam.  Linted
+as if it lived at ``src/repro/core/__planted__.py``; never imported.
+"""
+from typing import NamedTuple
+
+
+class FusedResult(NamedTuple):
+    alpha: object
+    b: object
+    G: object
+    iterations: object
+    objective: object
+    kkt_gap: object
+    converged: object
+    n_planning: object
+    n_unshrink: object
+    shiny_new_counter: object

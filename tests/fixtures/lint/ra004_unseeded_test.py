@@ -1,0 +1,11 @@
+"""Lint fixture: RA004 — unseeded RNG in a test (planted).
+
+Linted as if it lived at ``tests/test___planted__.py``; never collected
+(``tests/fixtures/`` is excluded from real lint runs and pytest
+collection).
+"""
+import numpy as np
+
+
+def test_planted():
+    assert np.random.default_rng().random() >= 0.0

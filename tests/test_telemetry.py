@@ -21,7 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import FUSED_KW, golden_fresh_capture, run_multidevice
+from conftest import FUSED_KW, run_multidevice
+from repro.analysis import jaxpr_audit
 from repro.core import grid as grid_mod
 from repro.core.solver import SolverConfig, solve
 from repro.core.solver_fused import solve_fused_batched, solve_fused_batched_qp
@@ -31,7 +32,6 @@ from repro.telemetry import (Diagnostics, JsonlSink, RingConfig,
                              env_fingerprint, fingerprint_diff, phase_scope,
                              read_jsonl, ring_init, ring_update)
 
-GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
 
 
 def _rbf_problem(B=3, l=16, d=4, seed=0):
@@ -62,28 +62,19 @@ def _capture_jaxpr(**kw) -> str:
 # telemetry=None is structurally free
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("golden", [
-    "fused_jaxpr_jnp.txt",
-    "fused_jaxpr_jnp_shrink.txt",
-    "fused_jaxpr_interpret.txt",
+@pytest.mark.parametrize("entry", [
+    "plain_jnp",
+    "plain_shrink_jnp",
+    "plain_interpret",
 ])
-def test_jaxpr_byte_identity_vs_pretelemetry_golden(golden):
-    with open(os.path.join(GOLDEN_DIR, golden)) as fh:
-        header, body = fh.read().split("\n", 1)
-    recorded_version = header.removeprefix("# jax ").strip()
-    if jax.__version__ != recorded_version:
-        # pretty-printing differs across jax versions; fall back to the
-        # structural property (jaxpr unchanged by telemetry machinery
-        # having been traced in-process)
-        pytest.skip(f"golden printed by jax {recorded_version}, "
-                    f"running {jax.__version__}")
-    # hermetic capture: the regen script's --print path in a fresh
-    # process (pretty-printer sub-jaxpr sharing is state-dependent, so
-    # an in-suite make_jaxpr can legally print different bytes)
-    fresh_version, fresh = golden_fresh_capture(golden)
-    assert fresh_version == jax.__version__
-    assert fresh.rstrip("\n") == body.rstrip("\n"), \
-        f"telemetry=None jaxpr deviates from the pre-telemetry {golden}"
+def test_jaxpr_structure_matches_pretelemetry_golden(entry):
+    # structural audit (eqn-primitive multiset + while-carry pytree)
+    # against tests/golden/structural.json — replaces the retired byte
+    # diff of fused_jaxpr_*.txt, which broke on every pretty-printer
+    # change; the carry check runs on EVERY jax version, the primitive
+    # multiset only on the pinned one (same scope the byte test had).
+    # The .txt goldens remain as regen fixtures (tests/golden/regen.py).
+    jaxpr_audit.assert_structural(entry)
 
 
 def test_jaxpr_off_is_invariant_to_telemetry_use():
